@@ -1,0 +1,29 @@
+"""Shared benchmark utilities. Scales: default 'ci' is container-sized;
+--full approaches paper scale (hours)."""
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class Scale:
+    name: str
+    data_scale: float
+    epochs: int
+    hidden_scale: float = 1.0
+
+
+SCALES = {
+    "ci": Scale("ci", data_scale=0.02, epochs=5, hidden_scale=0.08),
+    "small": Scale("small", data_scale=0.1, epochs=30, hidden_scale=0.25),
+    "full": Scale("full", data_scale=1.0, epochs=500, hidden_scale=1.0),
+}
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def row(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,105 @@
+"""§Roofline: derive the three roofline terms per (arch × shape) from the
+dry-run artifacts in experiments/dryrun/.
+
+    compute_s    = HLO_FLOPs / peak_FLOPs          (per chip, corrected)
+    memory_s     = HLO_bytes / HBM_bw              (per chip, corrected)
+    collective_s = collective_bytes / link_bw      (per chip)
+
+HLO_FLOPs/bytes come from launch/hlo_analysis.py (while-body trip counts
+multiplied back in — XLA's cost_analysis counts scan bodies once; both the
+raw and the corrected numbers are recorded). MODEL_FLOPS is the analytic
+6·N·D / 6·N_active·D term (launch/analytic.py); its ratio against HLO_FLOPs
+measures how much compiled compute is useful.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def load_records(mesh: str = "16x16", tag: str = ""):
+    recs = []
+    for f in sorted(ART_DIR.glob(f"*__{mesh.replace('x', '_')}{tag}.json")):
+        r = json.loads(f.read_text())
+        if "skipped" not in r:
+            recs.append(r)
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = CHIPS.get(rec.get("mesh", "16x16"), 256)
+    hc = rec.get("hlo_corrected", {}) or {}
+    flops = hc.get("flops") or rec.get("flops", 0.0)
+    hbm = hc.get("hbm_bytes") or rec.get("bytes_accessed", 0.0)
+    coll = hc.get("collective_bytes") or rec.get("collectives", {}).get(
+        "per_chip_bytes", 0.0
+    )
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / LINK_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    model_flops = rec.get("analytic", {}).get("model_flops", 0.0)
+    model_per_chip = model_flops / chips
+    useful_ratio = model_per_chip / flops if flops else 0.0
+    step_s = max(compute_s, memory_s, collective_s)
+    ideal_s = model_per_chip / PEAK_FLOPS
+    roofline_frac = ideal_s / step_s if step_s else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec.get("mesh"),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_per_chip": flops,
+        "useful_ratio": useful_ratio,
+        "roofline_frac": roofline_frac,
+        "temp_gib": rec.get("temp_size_in_bytes", 0) / 2**30,
+        "args_gib": rec.get("argument_size_in_bytes", 0) / 2**30,
+        "microbatches": rec.get("microbatches"),
+    }
+
+
+def markdown_table(rows) -> str:
+    hdr = (
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPS | useful | roofline | temp GiB |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['model_flops']:.2e} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['temp_gib']:.1f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def run(mesh: str = "16x16"):
+    rows = [roofline_row(r) for r in load_records(mesh)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in rows:
+        print(
+            f"roofline/{r['arch']}/{r['shape']},{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.1f},"
+            f"dom={r['dominant']};frac={r['roofline_frac']:.3f};"
+            f"useful={r['useful_ratio']:.2f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(run()))

@@ -1,0 +1,56 @@
+"""Benchmark driver — one section per paper table (+ roofline + kernels).
+Prints ``name,us_per_call,derived`` CSV rows. Default scale 'ci' fits this
+container; pass --scale small|full to approach paper scale."""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="ci", choices=("ci", "small", "full"))
+    ap.add_argument(
+        "--only", default="",
+        help="comma list: table2,table3,table4,table5,table6,gradient_flow,kernels,roofline",
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (
+        gradient_flow,
+        kernels_micro,
+        roofline,
+        table2_sequential,
+        table3_parallel,
+        table4_extreme,
+        table5_alpha_sweep,
+        table6_post_pruning,
+    )
+
+    sections = [
+        ("table2", lambda: table2_sequential.run(args.scale)),
+        ("table3", lambda: table3_parallel.run(args.scale)),
+        ("table4", lambda: table4_extreme.run()),
+        ("table5", lambda: table5_alpha_sweep.run(args.scale)),
+        ("table6", lambda: table6_post_pruning.run(args.scale)),
+        ("gradient_flow", lambda: gradient_flow.run(args.scale)),
+        ("kernels", lambda: kernels_micro.run()),
+        ("roofline", lambda: roofline.run()),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

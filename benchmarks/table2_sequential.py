@@ -1,0 +1,58 @@
+"""Paper Table 2: sequential SET-MLP — All-ReLU vs ReLU, +/- Importance
+Pruning, vs dense — accuracy / params / train-time per dataset."""
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALES, row
+from repro.core.importance import PruningSchedule
+from repro.data import datasets
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.train.trainer import SequentialTrainer, TrainerConfig
+
+
+def scaled_dims(name, scale):
+    feats, _, _, classes, _ = datasets.PAPER_DATASETS[name]
+    hidden = [max(16, int(h * scale.hidden_scale)) for h in datasets.PAPER_ARCHS[name]]
+    return (feats, *hidden, classes)
+
+
+def run(scale_name="ci", names=("madelon", "fashionmnist"), seed=0):
+    scale = SCALES[scale_name]
+    results = []
+    for name in names:
+        data = datasets.load(name, scale=scale.data_scale, seed=seed)
+        hp = datasets.PAPER_HPARAMS[name]
+        dims = scaled_dims(name, scale)
+        for act, prune in (
+            ("relu", False), ("relu", True),
+            ("all_relu", False), ("all_relu", True),
+        ):
+            cfg = SparseMLPConfig(
+                layer_dims=dims, epsilon=hp["epsilon"], activation=act,
+                alpha=hp["alpha"], dropout=0.1, init=hp["init"], impl="element",
+            )
+            model = SparseMLP(cfg, seed=seed)
+            start_p = model.n_params
+            tc = TrainerConfig(
+                epochs=scale.epochs, batch_size=min(hp["batch"], 64),
+                lr=hp["lr"], zeta=0.3, seed=seed,
+                pruning=PruningSchedule(
+                    tau=max(1, scale.epochs // 2), period=1, percentile=10.0
+                ) if prune else None,
+            )
+            t0 = time.perf_counter()
+            hist = SequentialTrainer(model, data, tc).run()
+            dt = time.perf_counter() - t0
+            acc = hist["test_acc"][-1]
+            results.append((name, act, prune, acc, start_p, model.n_params, dt))
+            row(
+                f"table2/{name}/{act}/{'prune' if prune else 'noprune'}",
+                dt * 1e6 / max(1, scale.epochs),
+                f"acc={acc:.4f};start_w={start_p};end_w={model.n_params}",
+            )
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Table 3: WASAP-SGD vs WASSP-SGD vs sequential — accuracy + time."""
+import time
+
+from benchmarks.common import SCALES, row
+from repro.core.wasap import WASAPConfig, WASAPTrainer
+from repro.data import datasets
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.train.trainer import SequentialTrainer, TrainerConfig
+
+
+def run(scale_name="ci", name="fashionmnist", workers=3, seed=0):
+    scale = SCALES[scale_name]
+    data = datasets.load(name, scale=scale.data_scale, seed=seed)
+    hp = datasets.PAPER_HPARAMS[name]
+    dims = (data.n_features, 64, 64, 64, data.n_classes)
+    out = []
+
+    def mk():
+        return SparseMLP(
+            SparseMLPConfig(
+                layer_dims=dims, epsilon=hp["epsilon"], activation="all_relu",
+                alpha=hp["alpha"], dropout=0.1, init=hp["init"], impl="element",
+            ),
+            seed=seed,
+        )
+
+    # sequential baseline
+    t0 = time.perf_counter()
+    hist = SequentialTrainer(
+        mk(), data,
+        TrainerConfig(epochs=scale.epochs, batch_size=32, lr=hp["lr"], zeta=0.3, seed=seed),
+    ).run()
+    dt = time.perf_counter() - t0
+    out.append(("sequential", hist["test_acc"][-1], dt))
+    row(f"table3/{name}/sequential", dt * 1e6, f"acc={hist['test_acc'][-1]:.4f}")
+
+    for mode in ("wassp", "wasap"):
+        t0 = time.perf_counter()
+        wt = WASAPTrainer(
+            mk(), data,
+            WASAPConfig(
+                n_workers=workers, phase1_epochs=max(1, scale.epochs - 2),
+                phase2_epochs=2, sync_every=4, lr=hp["lr"], zeta=0.3,
+                mode=mode, seed=seed, batch_size=32,
+            ),
+        )
+        hist = wt.run()
+        dt = time.perf_counter() - t0
+        out.append((mode, hist["test_acc"][-1], dt))
+        row(f"table3/{name}/{mode}", dt * 1e6, f"acc={hist['test_acc'][-1]:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper Table 4: extreme-scale sparse MLPs — per-phase timing
+(weight init / train epoch / inference / evolution) vs neuron count.
+Container-scaled: neuron counts shrunk ~1000x, same epsilon regimes."""
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.topology import evolve_element
+from repro.data.datasets import make_extreme_dataset
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.train.trainer import SequentialTrainer, TrainerConfig, evaluate
+
+
+# (hidden, layers, epsilon) — scaled versions of the paper's
+# 65536-0.5Mx2, 65536-2.5Mx2, 65536-5Mx2, 65536-5Mx4, 65536-5Mx10 rows
+ROWS = [
+    (512, 2, 10), (2560, 2, 5), (5120, 2, 5), (5120, 4, 1), (5120, 10, 1),
+]
+
+
+def run(n_features=4096, n_samples=512, seed=0):
+    data = make_extreme_dataset(n_samples, n_features, seed=seed)
+    out = []
+    for hidden, layers, eps in ROWS:
+        dims = (n_features, *([hidden] * layers), 2)
+        t0 = time.perf_counter()
+        model = SparseMLP(
+            SparseMLPConfig(layer_dims=dims, epsilon=eps, activation="all_relu",
+                            alpha=0.5, dropout=0.0, impl="element"),
+            seed=seed,
+        )
+        t_init = time.perf_counter() - t0
+        tc = TrainerConfig(epochs=1, batch_size=128, lr=0.01, zeta=0.3, seed=seed,
+                           evolve=False, eval_every=100)
+        t0 = time.perf_counter()
+        SequentialTrainer(model, data, tc).run()
+        t_train = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        evaluate(model, data.x_test, data.y_test)
+        t_test = time.perf_counter() - t0
+        rng = np.random.default_rng(seed)
+        t0 = time.perf_counter()
+        for l in range(len(model.topos)):
+            res = evolve_element(model.topos[l], np.asarray(model.values[l]), 0.3, rng)
+        t_evo = time.perf_counter() - t0
+        n_neurons = sum(dims[1:-1])
+        n_params = model.n_params
+        out.append((dims, n_params, t_init, t_train, t_test, t_evo))
+        row(
+            f"table4/h{hidden}x{layers}_eps{eps}",
+            t_train * 1e6,
+            f"neurons={n_neurons};params={n_params};init_s={t_init:.2f};"
+            f"test_s={t_test:.2f};evolve_s={t_evo:.2f}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

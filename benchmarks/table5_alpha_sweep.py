@@ -1,0 +1,28 @@
+"""Paper Table 5 / Fig 19: All-ReLU slope alpha grid search on FashionMNIST."""
+from benchmarks.common import SCALES, row
+from repro.data import datasets
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.train.trainer import SequentialTrainer, TrainerConfig
+
+
+def run(scale_name="ci", alphas=(0.0, 0.25, 0.6, 0.9), seed=0):
+    scale = SCALES[scale_name]
+    data = datasets.load("fashionmnist", scale=scale.data_scale, seed=seed)
+    out = []
+    for a in alphas:
+        cfg = SparseMLPConfig(
+            layer_dims=(data.n_features, 80, 80, 80, data.n_classes),
+            epsilon=20, activation="all_relu" if a > 0 else "relu",
+            alpha=a, dropout=0.1, init="he_uniform", impl="element",
+        )
+        tc = TrainerConfig(epochs=scale.epochs, batch_size=64, lr=0.01,
+                           zeta=0.3, seed=seed)
+        hist = SequentialTrainer(SparseMLP(cfg, seed=seed), data, tc).run()
+        best = max(x for x in hist["test_acc"] if x == x)
+        out.append((a, best))
+        row(f"table5/alpha_{a}", 0.0, f"best_acc={best:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,112 @@
+"""End-to-end LM training driver: train a transformer with the paper's
+SET sparse FFN (All-ReLU inside the blocks, topology evolution at epoch
+boundaries) for a few hundred steps on synthetic data.
+
+Default is a ~5M-param config that trains in minutes on this CPU container;
+--preset 100m selects a ~100M-param model (the assignment's end-to-end
+driver; expect hours on 1 CPU core, minutes on a real accelerator).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.topology import evolve_block
+from repro.models.transformer import ModelConfig, PatternLM, chunked_softmax_xent
+from repro.optim.sgd import MomentumSGD
+
+PRESETS = {
+    "tiny": dict(vocab=2048, d_model=128, n_layers=4, n_heads=4, n_kv=2,
+                 head_dim=32, d_ff=512),
+    "100m": dict(vocab=32768, d_model=640, n_layers=12, n_heads=10, n_kv=5,
+                 head_dim=64, d_ff=2560),
+}
+
+
+def synthetic_stream(rng, vocab, batch, seq):
+    """Zipf-ish token stream with local repetition structure (learnable)."""
+    while True:
+        base = rng.zipf(1.5, size=(batch, seq)).clip(1, vocab - 1)
+        rep = rng.random((batch, seq)) < 0.3
+        base[:, 1:] = np.where(rep[:, 1:], base[:, :-1], base[:, 1:])
+        yield jnp.asarray(base, jnp.int32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--sparse-density", type=float, default=0.25)
+    ap.add_argument("--evolve-every", type=int, default=50)
+    ap.add_argument("--zeta", type=float, default=0.3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name=f"sparse-lm-{args.preset}", **PRESETS[args.preset],
+        ffn="sparse", sparse_density=args.sparse_density, sparse_block=32,
+        sparse_alpha=0.6, dtype="float32", kv_chunk=64,
+    )
+    model = PatternLM(cfg, seed=0)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(model.params))
+    print(f"preset={args.preset} params={n_params/1e6:.1f}M "
+          f"(sparse FFN density={args.sparse_density})")
+
+    opt = MomentumSGD(momentum=0.9, weight_decay=1e-4)
+    opt_state = opt.init(model.params)
+    params = model.params
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)
+
+    @jax.jit
+    def step(params, opt_state, topo, tokens):
+        def loss_fn(p):
+            h, _, aux = model.forward(p, tokens[:, :-1], topo=topo,
+                                      return_hidden=True)
+            return chunked_softmax_xent(model, p, h, tokens[:, 1:], chunk=64) + aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt_state2 = opt.update(grads, opt_state, params, args.lr)
+        return params2, opt_state2, loss
+
+    stream = synthetic_stream(np.random.default_rng(0), cfg.vocab,
+                              args.batch, args.seq + 1)
+    rng = np.random.default_rng(7)
+    topo = model.topo_arrays()
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        tokens = next(stream)
+        params, opt_state, loss = step(params, opt_state, topo, tokens)
+        if (i + 1) % args.evolve_every == 0:
+            # SET evolution on every sparse FFN (host-side, Algorithm 2)
+            for slot, topos in model.topologies.items():
+                vals_in = np.asarray(params["stack"][slot]["ffn"]["win"])
+                vals_out = np.asarray(params["stack"][slot]["ffn"]["wout"])
+                new_in, new_out = [], []
+                for r, (t_in, t_out) in enumerate(topos):
+                    res_i = evolve_block(t_in, vals_in[r], args.zeta, rng)
+                    res_o = evolve_block(t_out, vals_out[r], args.zeta, rng)
+                    model.topologies[slot][r] = (res_i.topology, res_o.topology)
+                    new_in.append(res_i.values)
+                    new_out.append(res_o.values)
+                params["stack"][slot]["ffn"]["win"] = jnp.asarray(np.stack(new_in))
+                params["stack"][slot]["ffn"]["wout"] = jnp.asarray(np.stack(new_out))
+            topo = model.topo_arrays()
+            print(f"  [evolve] step {i+1}: SET prune/regrow done")
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(loss):.4f} "
+                  f"({time.perf_counter()-t0:.1f}s)")
+    ckpt.save(args.steps, params, meta={"preset": args.preset})
+    ckpt.wait()
+    print(f"checkpoint saved to {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""All-ReLU (Alternated Left ReLU), paper Eq. (3), plus baselines.
+
+For hidden layer l (1-indexed over hidden layers; input/output layers are
+excluded per the paper):
+
+    f_l(x) = -alpha * x   if x <= 0 and l % 2 == 0
+           = +alpha * x   if x <= 0 and l % 2 == 1
+           =  x           if x >  0
+
+The sign alternation breaks the symmetry of the mean activation without any
+trainable parameters (cf. SReLU's 4 learned params per neuron).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["all_relu", "srelu", "activation_fn"]
+
+
+def all_relu(x: jax.Array, alpha: float, layer_index) -> jax.Array:
+    """layer_index follows the paper's 1-based hidden-layer numbering.
+    Accepts Python ints or traced scalars (usable inside lax.scan bodies)."""
+    if isinstance(layer_index, int):
+        slope = -alpha if layer_index % 2 == 0 else alpha
+        return jnp.where(x > 0, x, slope * x)
+    slope = jnp.where(layer_index % 2 == 0, -alpha, alpha).astype(x.dtype)
+    return jnp.where(x > 0, x, slope * x)
+
+
+def srelu(x: jax.Array, t_r, a_r, t_l, a_l) -> jax.Array:
+    """SReLU (Jin et al., 2016) baseline with per-neuron learned params."""
+    above = x >= t_r
+    below = x <= t_l
+    mid = jnp.logical_and(~above, ~below)
+    return (
+        above * (t_r + a_r * (x - t_r))
+        + mid * x
+        + below * (t_l + a_l * (x - t_l))
+    )
+
+
+def activation_fn(name: str, *, alpha: float = 0.6):
+    """Activation factory; the returned fn takes (x, layer_index)."""
+    name = name.lower()
+    if name == "all_relu":
+        return lambda x, layer_index: all_relu(x, alpha, layer_index)
+    if name == "relu":
+        return lambda x, layer_index: jax.nn.relu(x)
+    if name == "leaky_relu":
+        return lambda x, layer_index: jax.nn.leaky_relu(x, negative_slope=alpha)
+    if name == "silu":
+        return lambda x, layer_index: jax.nn.silu(x)
+    if name == "gelu":
+        return lambda x, layer_index: jax.nn.gelu(x)
+    if name == "gelu_tanh":
+        return lambda x, layer_index: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name!r}")

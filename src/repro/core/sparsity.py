@@ -1,0 +1,352 @@
+"""Truly sparse weight representations.
+
+Two granularities, both storing ONLY the live parameters (no dense mask):
+
+* ``ElementSparse`` — COO element-level sparsity. This is the paper-faithful
+  representation (SciPy-CSR equivalent) used for the SET-MLP experiments.
+  Compute is a gather/scatter-add SpMM whose FLOP count is O(B * nnz).
+
+* ``BlockSparse`` — MXU-aligned block sparsity (TPU adaptation, see DESIGN.md
+  §2). Active (block_m, block_n) tiles are stored as a compact
+  ``(n_blocks, bm, bn)`` array plus int32 block coordinates. Compute goes
+  through either a Pallas kernel (``repro.kernels``) or an XLA-native
+  gather/segment-sum einsum whose FLOPs also scale with the live block count.
+
+Topology (coordinates) is intentionally kept in host numpy and treated as
+non-trainable data: SET evolution / Importance Pruning happen *between* jitted
+train segments (the paper evolves once per epoch on the master), so the jitted
+step functions only ever see fixed-capacity arrays and never recompile when
+connections move.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BlockMeta",
+    "BlockTopoArrays",
+    "BlockTopology",
+    "ElementTopology",
+    "density_from_epsilon",
+    "erdos_renyi_nnz",
+]
+
+
+def density_from_epsilon(epsilon: float, n_in: int, n_out: int) -> float:
+    """SET's Erdős–Rényi density: p = eps * (n_in + n_out) / (n_in * n_out)."""
+    return min(1.0, float(epsilon) * (n_in + n_out) / (n_in * n_out))
+
+
+def erdos_renyi_nnz(epsilon: float, n_in: int, n_out: int) -> int:
+    return max(1, int(round(density_from_epsilon(epsilon, n_in, n_out) * n_in * n_out)))
+
+
+# ---------------------------------------------------------------------------
+# Block sparsity
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMeta:
+    """Static metadata of a block-sparse matrix (hashable; safe for jit)."""
+
+    in_dim: int
+    out_dim: int
+    block_m: int = 128
+    block_n: int = 128
+
+    @property
+    def grid_m(self) -> int:
+        return -(-self.in_dim // self.block_m)
+
+    @property
+    def grid_n(self) -> int:
+        return -(-self.out_dim // self.block_n)
+
+    @property
+    def padded_in(self) -> int:
+        return self.grid_m * self.block_m
+
+    @property
+    def padded_out(self) -> int:
+        return self.grid_n * self.block_n
+
+    @property
+    def total_blocks(self) -> int:
+        return self.grid_m * self.grid_n
+
+
+class BlockTopoArrays(NamedTuple):
+    """Device-side topology for the kernels. All int32, shape (n_blocks,).
+
+    Canonical order is sorted by (col, row) — required by the forward kernel's
+    output-revisit accumulation. ``*_r`` fields are the same topology sorted by
+    (row, col) for the dX kernel; ``perm_r[i]`` maps row-ordered slot i back to
+    the canonical slot owning its values.
+    """
+
+    rows: jax.Array
+    cols: jax.Array
+    first_col: jax.Array  # 1 where cols[i] != cols[i-1]
+    rows_r: jax.Array
+    cols_r: jax.Array
+    first_row: jax.Array  # 1 where rows_r[i] != rows_r[i-1]
+    perm_r: jax.Array
+
+
+def _first_flags(keys: np.ndarray) -> np.ndarray:
+    first = np.ones_like(keys, dtype=np.int32)
+    if keys.size > 1:
+        first[1:] = (keys[1:] != keys[:-1]).astype(np.int32)
+    return first
+
+
+class BlockTopology:
+    """Host-side (numpy) block topology with SET bookkeeping.
+
+    Invariants:
+      * slots sorted by (col, row); positions unique
+      * every block-column in [0, grid_n) is covered by >= 1 slot
+        ("no output neuron without incoming connections"); coverage slots may
+        be zero-valued but keep the Pallas output-tile zeroing correct.
+    """
+
+    def __init__(self, meta: BlockMeta, rows: np.ndarray, cols: np.ndarray):
+        self.meta = meta
+        order = np.lexsort((rows, cols))
+        self.rows = np.asarray(rows, np.int32)[order]
+        self.cols = np.asarray(cols, np.int32)[order]
+        self._check()
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def erdos_renyi(
+        cls,
+        meta: BlockMeta,
+        density: float,
+        rng: np.random.Generator,
+    ) -> "BlockTopology":
+        """Sample an ER block topology with ~density fraction of live blocks."""
+        total = meta.total_blocks
+        n_blocks = int(np.clip(round(density * total), meta.grid_n, total))
+        flat = rng.choice(total, size=n_blocks, replace=False).astype(np.int64)
+        rows = (flat // meta.grid_n).astype(np.int32)
+        cols = (flat % meta.grid_n).astype(np.int32)
+        rows, cols = _ensure_coverage(meta, rows, cols, rng)
+        return cls(meta, rows, cols)
+
+    @classmethod
+    def from_epsilon(
+        cls, meta: BlockMeta, epsilon: float, rng: np.random.Generator
+    ) -> "BlockTopology":
+        return cls.erdos_renyi(
+            meta, density_from_epsilon(epsilon, meta.in_dim, meta.out_dim), rng
+        )
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def density(self) -> float:
+        return self.n_blocks / self.meta.total_blocks
+
+    @property
+    def n_params(self) -> int:
+        return self.n_blocks * self.meta.block_m * self.meta.block_n
+
+    def _check(self) -> None:
+        m = self.meta
+        assert self.rows.shape == self.cols.shape
+        assert (0 <= self.rows).all() and (self.rows < m.grid_m).all()
+        assert (0 <= self.cols).all() and (self.cols < m.grid_n).all()
+        flat = self.rows.astype(np.int64) * m.grid_n + self.cols
+        assert np.unique(flat).size == flat.size, "duplicate block positions"
+        assert np.unique(self.cols).size == m.grid_n, (
+            "coverage invariant violated: some output block-column has no slot"
+        )
+
+    # -- device views ---------------------------------------------------------
+
+    def device_arrays(self) -> BlockTopoArrays:
+        rows, cols = self.rows, self.cols
+        perm_r = np.lexsort((cols, rows)).astype(np.int32)
+        rows_r = rows[perm_r]
+        cols_r = cols[perm_r]
+        return BlockTopoArrays(
+            rows=jnp.asarray(rows),
+            cols=jnp.asarray(cols),
+            first_col=jnp.asarray(_first_flags(cols)),
+            rows_r=jnp.asarray(rows_r),
+            cols_r=jnp.asarray(cols_r),
+            first_row=jnp.asarray(_first_flags(rows_r)),
+            perm_r=jnp.asarray(perm_r),
+        )
+
+    # -- values -----------------------------------------------------------
+
+    def init_values(
+        self,
+        rng: np.random.Generator,
+        dtype=jnp.float32,
+        scheme: str = "he_uniform",
+    ) -> jax.Array:
+        m = self.meta
+        shape = (self.n_blocks, m.block_m, m.block_n)
+        vals = _init_numpy(rng, shape, fan_in_dense=m.in_dim, scheme=scheme)
+        # connections that fall into the zero-padding region of a padded grid
+        # must stay zero so padded inputs contribute nothing.
+        return jnp.asarray(vals, dtype=dtype)
+
+    def to_dense(self, values: jax.Array) -> jax.Array:
+        """Scatter block values into the dense (in_dim, out_dim) matrix."""
+        m = self.meta
+        dense = jnp.zeros((m.grid_m, m.block_m, m.grid_n, m.block_n), values.dtype)
+        dense = dense.at[self.rows, :, self.cols, :].set(values)
+        dense = dense.reshape(m.padded_in, m.padded_out)
+        return dense[: m.in_dim, : m.out_dim]
+
+
+def _ensure_coverage(
+    meta: BlockMeta, rows: np.ndarray, cols: np.ndarray, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Swap surplus slots into uncovered block-columns (keeps slot count)."""
+    covered = np.zeros(meta.grid_n, bool)
+    covered[cols] = True
+    missing = np.flatnonzero(~covered)
+    if missing.size == 0:
+        return rows, cols
+    # donate slots from columns having > 1 block
+    order = np.argsort(cols, kind="stable")
+    counts = np.bincount(cols, minlength=meta.grid_n)
+    donors = [i for i in order if counts[cols[i]] > 1]
+    if len(donors) < missing.size:
+        raise ValueError(
+            f"cannot cover {missing.size} empty block-columns with "
+            f"{len(donors)} donor slots; raise density"
+        )
+    taken = set()
+    di = 0
+    rows = rows.copy()
+    cols = cols.copy()
+    for c in missing:
+        while True:
+            slot = donors[di]
+            di += 1
+            if counts[cols[slot]] > 1:
+                counts[cols[slot]] -= 1
+                break
+        cols[slot] = c
+        rows[slot] = rng.integers(meta.grid_m)
+        taken.add(slot)
+    # dedupe (rare): if the random row collides within the column, nudge
+    flat = rows.astype(np.int64) * meta.grid_n + cols
+    while np.unique(flat).size != flat.size:
+        _, idx, cnt = np.unique(flat, return_index=True, return_counts=True)
+        for f, i0, c0 in zip(_, idx, cnt):
+            if c0 > 1:
+                dup = np.flatnonzero(flat == f)[1:]
+                for d in dup:
+                    rows[d] = rng.integers(meta.grid_m)
+        flat = rows.astype(np.int64) * meta.grid_n + cols
+    return rows, cols
+
+
+# ---------------------------------------------------------------------------
+# Element sparsity (paper-faithful COO)
+# ---------------------------------------------------------------------------
+
+
+class ElemTopoArrays(NamedTuple):
+    rows: jax.Array
+    cols: jax.Array
+
+
+class ElementTopology:
+    """Host-side COO topology for the paper's SET-MLP path.
+
+    rows/cols are int32 (nnz,) with unique positions, sorted by (col, row).
+    """
+
+    def __init__(self, in_dim: int, out_dim: int, rows: np.ndarray, cols: np.ndarray):
+        self.in_dim = int(in_dim)
+        self.out_dim = int(out_dim)
+        order = np.lexsort((rows, cols))
+        self.rows = np.asarray(rows, np.int32)[order]
+        self.cols = np.asarray(cols, np.int32)[order]
+        flat = self.rows.astype(np.int64) * out_dim + self.cols
+        assert np.unique(flat).size == flat.size, "duplicate connections"
+
+    @classmethod
+    def erdos_renyi(
+        cls, in_dim: int, out_dim: int, epsilon: float, rng: np.random.Generator
+    ) -> "ElementTopology":
+        nnz = erdos_renyi_nnz(epsilon, in_dim, out_dim)
+        nnz = min(nnz, in_dim * out_dim)
+        flat = rng.choice(in_dim * out_dim, size=nnz, replace=False).astype(np.int64)
+        return cls(in_dim, out_dim, (flat // out_dim), (flat % out_dim))
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def density(self) -> float:
+        return self.nnz / (self.in_dim * self.out_dim)
+
+    def device_arrays(self) -> "ElemTopoArrays":
+        return ElemTopoArrays(jnp.asarray(self.rows), jnp.asarray(self.cols))
+
+    def init_values(
+        self, rng: np.random.Generator, dtype=jnp.float32, scheme: str = "he_uniform"
+    ) -> jax.Array:
+        vals = _init_numpy(rng, (self.nnz,), fan_in_dense=self.in_dim, scheme=scheme)
+        return jnp.asarray(vals, dtype=dtype)
+
+    def to_dense(self, values: jax.Array) -> jax.Array:
+        dense = jnp.zeros((self.in_dim, self.out_dim), values.dtype)
+        return dense.at[self.rows, self.cols].set(values)
+
+
+def element_spmm(
+    x: jax.Array, values: jax.Array, rows: jax.Array, cols: jax.Array, out_dim: int
+) -> jax.Array:
+    """Truly sparse y = x @ W for COO W. FLOPs = 2 * B * nnz.
+
+    Differentiable through the gather/scatter (XLA generates the transposed
+    scatter/gather pair for the VJP, also O(B * nnz)).
+    """
+    contrib = x[..., rows] * values  # (..., nnz)
+    out_shape = x.shape[:-1] + (out_dim,)
+    y = jnp.zeros(out_shape, contrib.dtype)
+    return y.at[..., cols].add(contrib)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _init_numpy(
+    rng: np.random.Generator, shape, *, fan_in_dense: int, scheme: str
+) -> np.ndarray:
+    """Weight init. fan_in follows the paper (dense fan-in based scaling)."""
+    if scheme == "normal":
+        return rng.standard_normal(shape).astype(np.float32) * 0.05
+    if scheme == "he_uniform":
+        limit = np.sqrt(6.0 / max(1, fan_in_dense))
+        return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+    if scheme == "xavier":
+        limit = np.sqrt(3.0 / max(1, fan_in_dense))
+        return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+    if scheme == "zeros":
+        return np.zeros(shape, np.float32)
+    raise ValueError(f"unknown init scheme {scheme!r}")

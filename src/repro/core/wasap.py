@@ -1,0 +1,373 @@
+"""WASAP-SGD (paper Algorithm 1) — SPMD/TPU adaptation.
+
+Phase 1 (paper: async parameter server) → **local SGD with periodic sparse
+model averaging**: K workers take H local momentum-SGD steps on their data
+shards, then weights (and momentum) are averaged. H>1 reproduces asynchrony's
+communication-avoidance and staleness; H=1 with the Goyal warmup/linear-
+scaling schedule is exactly the paper's synchronous control, WASSP-SGD.
+The master's periodic topology evolution runs at epoch boundaries on the
+averaged model, and every worker update is implicitly `RetainValidUpdates`-
+filtered because values are re-aligned to the evolved topology before workers
+resume (DESIGN.md §2 maps this to the paper's line 14).
+
+Phase 2: workers train **locally** and evolve their own topologies
+independently (per-worker PRNG streams); at the end the K sparse models are
+averaged over the union of their topologies and re-sparsified to the target
+connection count by the paper's sign-aware magnitude rule (Algorithm 1,
+line 37).
+
+Everything device-side is expressed as a vmap over the worker axis, which is
+exactly the per-`data`-mesh-axis program shard_map would run on a pod — the
+same functions drive both the CPU tests and the pod launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsity import ElementTopology, element_spmm
+from repro.core.topology import evolve_element, prune_indices_by_magnitude
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import Dataset
+from repro.models.mlp import SparseMLP, SparseMLPConfig, cross_entropy_loss, mlp_forward
+from repro.optim.sgd import MomentumSGD, SGDState
+from repro.train.trainer import evaluate
+
+__all__ = ["WASAPConfig", "WASAPTrainer", "sparse_average_and_resparsify"]
+
+
+@dataclasses.dataclass
+class WASAPConfig:
+    n_workers: int = 4
+    phase1_epochs: int = 6
+    phase2_epochs: int = 2
+    sync_every: int = 4          # H — local steps between averages (1 => WASSP)
+    lr: float = 0.01
+    lr_boost: float = 2.0        # paper §2.3: larger LR early in async phase
+    lr_boost_epochs: int = 2
+    warmup_steps: int = 50       # WASSP: Goyal et al. gradual warmup
+    momentum: float = 0.9
+    weight_decay: float = 2e-4
+    zeta: float = 0.3
+    mode: str = "wasap"          # wasap | wassp
+    seed: int = 0
+    batch_size: int = 32
+    average_momentum: bool = True
+
+
+# ---------------------------------------------------------------------------
+# device-side worker programs
+# ---------------------------------------------------------------------------
+
+
+def _make_worker_round(config: SparseMLPConfig, opt: MomentumSGD):
+    """One sync round: each worker runs H local steps over its own batches.
+
+    Stacked worker axis (K, ...) — on a pod this axis is the `data` mesh axis
+    and vmap becomes shard_map; semantics identical.
+    """
+
+    @jax.jit
+    def worker_round(stacked_params, stacked_opt, topo, xs, ys, lrs, rngs):
+        # xs: (K, H, B, F); ys: (K, H, B); lrs: (H,)
+        def per_worker(params, opt_state, x_h, y_h, rng):
+            def step(carry, hb):
+                params, opt_state, rng = carry
+                x, y, lr = hb
+
+                def loss_fn(p):
+                    logits = mlp_forward(
+                        p, topo, x, config, train=True, rng=rng
+                    )
+                    return cross_entropy_loss(logits, y)
+
+                rng, sub = jax.random.split(rng)
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                params, opt_state = opt.update(grads, opt_state, params, lr)
+                return (params, opt_state, rng), loss
+
+            (params, opt_state, _), losses = jax.lax.scan(
+                step, (params, opt_state, rng), (x_h, y_h, lrs)
+            )
+            return params, opt_state, losses.mean()
+
+        return jax.vmap(per_worker)(stacked_params, stacked_opt, xs, ys, rngs)
+
+    return worker_round
+
+
+def _average_pytree(stacked, weights=None):
+    if weights is None:
+        return jax.tree.map(lambda a: a.mean(axis=0), stacked)
+    w = weights / weights.sum()
+
+    def wavg(a):
+        wb = w.reshape((-1,) + (1,) * (a.ndim - 1))
+        return (a * wb).sum(axis=0)
+
+    return jax.tree.map(wavg, stacked)
+
+
+_average_workers = jax.jit(_average_pytree)
+
+
+def _replicate(tree, k: int):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (k,) + a.shape), tree)
+
+
+# ---------------------------------------------------------------------------
+# final merge (Algorithm 1, line 37)
+# ---------------------------------------------------------------------------
+
+
+def sparse_average_and_resparsify(
+    topos: List[ElementTopology],
+    values: List[np.ndarray],
+    target_nnz_per_layer: List[int],
+) -> Tuple[List[ElementTopology], List[np.ndarray]]:
+    """Average K sparse models over the union of their topologies, then keep
+    the target number of connections by the paper's sign-aware magnitude rule
+    (drop smallest-positive / largest-negative surplus)."""
+    k = len(topos)
+    assert k >= 1
+    out_t, out_v = [], []
+    in_dim, out_dim = topos[0].in_dim, topos[0].out_dim
+    flat_all = np.concatenate(
+        [t.rows.astype(np.int64) * out_dim + t.cols for t in topos]
+    )
+    val_all = np.concatenate([np.asarray(v, np.float64) for v in values])
+    uniq, inv = np.unique(flat_all, return_inverse=True)
+    summed = np.zeros(uniq.size, np.float64)
+    np.add.at(summed, inv, val_all)
+    avg = (summed / k).astype(np.float32)  # absent connections count as zero
+
+    target = target_nnz_per_layer
+    if uniq.size > target:
+        # surplus = S' - S unimportant connections pruned by magnitude
+        surplus = uniq.size - target
+        drop = prune_indices_by_magnitude(avg, zeta=1.0)  # ranked tails
+        # prune_indices_by_magnitude(.,1.0) returns all sorted tail candidates;
+        # take the `surplus` weakest: interleave pos/neg by |value|
+        order = np.argsort(np.abs(avg))
+        drop = order[:surplus]
+        keep = np.setdiff1d(np.arange(uniq.size), drop)
+    else:
+        keep = np.arange(uniq.size)
+    rows = (uniq[keep] // out_dim).astype(np.int32)
+    cols = (uniq[keep] % out_dim).astype(np.int32)
+    topo = ElementTopology(in_dim, out_dim, rows, cols)
+    order = np.lexsort((rows, cols))
+    return topo, avg[keep][order]
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+
+class WASAPTrainer:
+    """Two-phase WASAP/WASSP-SGD for SET-MLPs (element sparsity)."""
+
+    def __init__(self, model: SparseMLP, data: Dataset, wc: WASAPConfig):
+        assert model.config.impl == "element", "WASAP path uses element sparsity"
+        self.model = model
+        self.data = data
+        self.wc = wc
+        self.opt = MomentumSGD(momentum=wc.momentum, weight_decay=wc.weight_decay)
+        self.rng = np.random.default_rng(wc.seed)
+        self.key = jax.random.PRNGKey(wc.seed)
+        self._round = _make_worker_round(model.config, self.opt)
+        self.loaders = [
+            ShardedLoader(
+                data.x_train, data.y_train, wc.batch_size,
+                seed=wc.seed, shard_id=k, num_shards=wc.n_workers,
+            )
+            for k in range(wc.n_workers)
+        ]
+        self.history: Dict[str, list] = {
+            "epoch": [], "phase": [], "test_acc": [], "train_loss": [],
+            "n_params": [], "epoch_seconds": [],
+        }
+
+    # -- lr schedules --------------------------------------------------------
+
+    def _lr(self, gstep: int, epoch: int) -> float:
+        wc = self.wc
+        if wc.mode == "wassp":
+            # gradual warmup + linear scaling rule (Goyal et al. 2017)
+            target = wc.lr * wc.n_workers
+            frac = min(1.0, (gstep + 1) / max(1, wc.warmup_steps))
+            return wc.lr + frac * (target - wc.lr)
+        # wasap: larger LR for the first few epochs, then fixed (paper §2.3)
+        return wc.lr * wc.lr_boost if epoch < wc.lr_boost_epochs else wc.lr
+
+    # -- phases ----------------------------------------------------------------
+
+    def run(self) -> Dict[str, list]:
+        wc, model = self.wc, self.model
+        cfg = model.config
+        k = wc.n_workers
+        h = 1 if wc.mode == "wassp" else wc.sync_every
+        gstep = 0
+
+        # ---------------- phase 1: local SGD + periodic averaging ----------
+        params = model.params()
+        opt_state = self.opt.init(params)
+        for epoch in range(wc.phase1_epochs):
+            t0 = time.perf_counter()
+            topo = model.topo_arrays()
+            batches = [list(ld.epoch(epoch)) for ld in self.loaders]
+            steps = min(len(b) for b in batches)
+            losses = []
+            s = 0
+            while s < steps:
+                hh = min(h, steps - s)
+                xs = jnp.asarray(
+                    np.stack([np.stack([b[s + i][0] for i in range(hh)]) for b in batches])
+                )
+                ys = jnp.asarray(
+                    np.stack([np.stack([b[s + i][1] for i in range(hh)]) for b in batches])
+                )
+                lrs = jnp.asarray(
+                    [self._lr(gstep + i, epoch) for i in range(hh)], jnp.float32
+                )
+                self.key, *subs = jax.random.split(self.key, k + 1)
+                sp = _replicate(params, k)
+                so = _replicate(opt_state, k)
+                sp, so, loss = self._round(
+                    sp, so, topo, xs, ys, lrs, jnp.stack(subs)
+                )
+                params = _average_workers(sp)
+                if wc.average_momentum:
+                    opt_state = _average_workers(so)
+                else:
+                    opt_state = jax.tree.map(lambda a: a[0], so)
+                losses.append(float(loss.mean()))
+                s += hh
+                gstep += hh
+            model.set_params(params)
+            # master topology evolution on the averaged model; momentum is
+            # re-aligned (RetainValidUpdates semantics for the velocity)
+            self._evolve_master(opt_state)
+            params = model.params()
+            opt_state = self._realigned_opt_state
+            self._log(epoch, 1, losses, time.perf_counter() - t0)
+
+        # ---------------- phase 2: independent local training --------------
+        # each worker owns a replica + its own topology evolution
+        worker_models = []
+        for wk in range(k):
+            m = SparseMLP(cfg, seed=wc.seed)  # structure placeholder
+            m.topos = [t for t in self.model.topos]
+            m.values = [v for v in self.model.values]
+            m.biases = [b for b in self.model.biases]
+            worker_models.append(m)
+        worker_opt = [self.opt.init(m.params()) for m in worker_models]
+        worker_rngs = [np.random.default_rng(wc.seed * 97 + 13 * wk) for wk in range(k)]
+
+        from repro.train.trainer import make_step_fn
+
+        step_fn = make_step_fn(cfg, self.opt)
+        for epoch in range(wc.phase1_epochs, wc.phase1_epochs + wc.phase2_epochs):
+            t0 = time.perf_counter()
+            losses = []
+            for wk in range(k):
+                m = worker_models[wk]
+                params = m.params()
+                topo = m.topo_arrays()
+                ostate = worker_opt[wk]
+                for xb, yb in self.loaders[wk].epoch(epoch):
+                    self.key, sub = jax.random.split(self.key)
+                    params, ostate, loss = step_fn(
+                        params, ostate, topo,
+                        jnp.asarray(xb), jnp.asarray(yb),
+                        jnp.asarray(self.wc.lr, jnp.float32), sub,
+                    )
+                    losses.append(float(loss))
+                m.set_params(params)
+                # per-worker evolution (divergent topologies)
+                vel = list(ostate.velocity["values"])
+                for l in range(cfg.n_layers):
+                    res = evolve_element(
+                        m.topos[l],
+                        np.asarray(m.values[l], np.float32),
+                        wc.zeta,
+                        worker_rngs[wk],
+                        momentum=np.asarray(vel[l], np.float32),
+                        init_scheme=cfg.init,
+                    )
+                    m.topos[l] = res.topology
+                    m.values[l] = jnp.asarray(res.values)
+                    vel[l] = jnp.asarray(res.momentum)
+                worker_opt[wk] = SGDState(
+                    velocity={
+                        "values": tuple(vel),
+                        "biases": ostate.velocity["biases"],
+                    },
+                    step=ostate.step,
+                )
+            self._log(epoch, 2, losses, time.perf_counter() - t0, eval_model=None)
+
+        # ---------------- final: SWA + re-sparsify -------------------------
+        target_nnz = [t.nnz for t in self.model.topos]
+        for l in range(cfg.n_layers):
+            topo, vals = sparse_average_and_resparsify(
+                [m.topos[l] for m in worker_models],
+                [np.asarray(m.values[l], np.float32) for m in worker_models],
+                target_nnz[l],
+            )
+            self.model.topos[l] = topo
+            self.model.values[l] = jnp.asarray(vals)
+            self.model.biases[l] = jnp.mean(
+                jnp.stack([m.biases[l] for m in worker_models]), axis=0
+            )
+        acc = evaluate(self.model, self.data.x_test, self.data.y_test)
+        self.history["epoch"].append(wc.phase1_epochs + wc.phase2_epochs)
+        self.history["phase"].append("final")
+        self.history["train_loss"].append(float("nan"))
+        self.history["test_acc"].append(acc)
+        self.history["n_params"].append(self.model.n_params)
+        self.history["epoch_seconds"].append(0.0)
+        return self.history
+
+    # -- helpers ----------------------------------------------------------------
+
+    def _evolve_master(self, opt_state: SGDState) -> None:
+        model, wc = self.model, self.wc
+        cfg = model.config
+        vel = list(opt_state.velocity["values"])
+        for l in range(cfg.n_layers):
+            res = evolve_element(
+                model.topos[l],
+                np.asarray(model.values[l], np.float32),
+                wc.zeta,
+                self.rng,
+                momentum=np.asarray(vel[l], np.float32),
+                init_scheme=cfg.init,
+            )
+            model.topos[l] = res.topology
+            model.values[l] = jnp.asarray(res.values)
+            vel[l] = jnp.asarray(res.momentum)
+        self._realigned_opt_state = SGDState(
+            velocity={"values": tuple(vel), "biases": opt_state.velocity["biases"]},
+            step=opt_state.step,
+        )
+
+    def _log(self, epoch, phase, losses, dt, eval_model="self") -> None:
+        acc = (
+            evaluate(self.model, self.data.x_test, self.data.y_test)
+            if eval_model == "self"
+            else float("nan")
+        )
+        self.history["epoch"].append(epoch)
+        self.history["phase"].append(phase)
+        self.history["train_loss"].append(float(np.mean(losses)) if losses else float("nan"))
+        self.history["test_acc"].append(acc)
+        self.history["n_params"].append(self.model.n_params)
+        self.history["epoch_seconds"].append(dt)

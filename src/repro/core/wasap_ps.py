@@ -1,0 +1,252 @@
+"""Paper-faithful WASAP-SGD phase 1: asynchronous parameter server.
+
+This is the literal Algorithm 1 protocol (Dean-style PS over shared memory),
+kept for the CPU MLP experiments and as the reference semantics for the SPMD
+adaptation in wasap.py:
+
+  * K worker threads repeatedly: fetch (model, t'), compute a gradient on
+    their own mini-batch, push (grad, t) — no barrier between workers.
+  * The PS thread applies each incoming gradient with momentum SGD, after
+    `RetainValidUpdates` filters entries whose connections no longer exist
+    (the topology may have evolved since the worker fetched).
+  * Every n/B applied updates (one "epoch"), the PS pauses to run the SET
+    topology-evolution step; the worker may thus be arbitrarily stale.
+
+Straggler mitigation is inherent: a slow worker delays only itself — its
+update is still merged when it arrives (optionally down-weighted by
+staleness). `straggler_delay` injects synthetic stragglers for tests.
+
+jit-compiled gradient computation releases the GIL so threads overlap
+meaningfully even on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsity import ElementTopology
+from repro.core.topology import evolve_element, retain_valid_updates_element
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import Dataset
+from repro.models.mlp import SparseMLP, cross_entropy_loss, mlp_forward
+
+__all__ = ["AsyncPSConfig", "AsyncParameterServer"]
+
+
+@dataclasses.dataclass
+class AsyncPSConfig:
+    n_workers: int = 4
+    epochs: int = 4                # tau_1
+    lr: float = 0.01
+    momentum: float = 0.9
+    weight_decay: float = 2e-4
+    zeta: float = 0.3
+    batch_size: int = 32
+    seed: int = 0
+    # Staleness-adaptive LR (MindTheStep-style): scales each update by
+    # 1/(1 + discount * staleness). Asynchrony adds *implicit* momentum
+    # (Mitliagkas et al. 2016, cited by the paper) on top of the explicit
+    # mu=0.9; at this emulation's tiny-step scale that diverges without a
+    # discount, so a mild default is on. Set 0.0 for the paper's plain async.
+    staleness_discount: float = 0.25
+    straggler_delay: float = 0.0      # seconds injected into worker 0 (tests)
+    evolve: bool = True
+
+
+class AsyncParameterServer:
+    """Shared-state PS with atomic (locked) fetch/push, per Figure 2."""
+
+    def __init__(self, model: SparseMLP, data: Dataset, cfg: AsyncPSConfig):
+        assert model.config.impl == "element"
+        self.model = model
+        self.data = data
+        self.cfg = cfg
+        self.lock = threading.Lock()
+        self.grad_queue: "queue.Queue" = queue.Queue(maxsize=cfg.n_workers * 2)
+        self.t_global = 0          # PS update counter  (t' in Algorithm 1)
+        self.topo_version = 0
+        self.stop_flag = threading.Event()
+        self.rng = np.random.default_rng(cfg.seed)
+        mcfg = model.config
+        # velocity per layer (element values) + biases
+        self.vel_values = [np.zeros(t.nnz, np.float32) for t in model.topos]
+        self.vel_biases = [np.zeros(int(b.size), np.float32) for b in model.biases]
+        self.applied_updates = 0
+        self.stats = {"stale_entries_dropped": 0, "updates": 0, "evolutions": 0}
+
+        self._grad_fn = self._make_grad_fn()
+        self.steps_per_epoch = (
+            data.x_train.shape[0] // cfg.batch_size
+        )
+
+    def _make_grad_fn(self):
+        config = self.model.config
+
+        @jax.jit
+        def grad_fn(params, topo, x, y, rng):
+            def loss_fn(p):
+                logits = mlp_forward(p, topo, x, config, train=True, rng=rng)
+                return cross_entropy_loss(logits, y)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            return loss, grads
+
+        return grad_fn
+
+    # -- atomic PS ops (Figure 2: atomic read / write) ----------------------
+
+    def fetch(self):
+        with self.lock:
+            snapshot = (
+                [t for t in self.model.topos],        # immutable objects
+                [np.asarray(v) for v in self.model.values],
+                [np.asarray(b) for b in self.model.biases],
+                self.topo_version,
+                self.t_global,
+            )
+        return snapshot
+
+    def push(self, grads_values, grads_biases, topo_version, t_worker):
+        self.grad_queue.put((grads_values, grads_biases, topo_version, t_worker))
+
+    # -- server loop ---------------------------------------------------------
+
+    def _apply(self, gv: List[np.ndarray], gb, worker_topos, staleness: int):
+        cfg = self.cfg
+        scale = 1.0 / (1.0 + cfg.staleness_discount * staleness)
+        with self.lock:
+            for l in range(len(self.model.values)):
+                g = gv[l]
+                if worker_topos is not None:
+                    # Algorithm 1 line 14: retain only valid updates
+                    before = np.count_nonzero(g)
+                    g = retain_valid_updates_element(
+                        g, worker_topos[l], self.model.topos[l]
+                    )
+                    self.stats["stale_entries_dropped"] += int(
+                        before - np.count_nonzero(g)
+                    )
+                v = np.asarray(self.model.values[l], np.float32)
+                g = g + cfg.weight_decay * v
+                self.vel_values[l] = (
+                    cfg.momentum * self.vel_values[l] - cfg.lr * scale * g
+                )
+                self.model.values[l] = jnp.asarray(v + self.vel_values[l])
+                b = np.asarray(self.model.biases[l], np.float32)
+                gbl = gb[l] + cfg.weight_decay * b
+                self.vel_biases[l] = (
+                    cfg.momentum * self.vel_biases[l] - cfg.lr * scale * gbl
+                )
+                self.model.biases[l] = jnp.asarray(b + self.vel_biases[l])
+            self.t_global += 1
+            self.stats["updates"] += 1
+
+    def _evolve(self):
+        cfg = self.cfg
+        with self.lock:  # master pauses async updates (Algorithm 1 line 16-18)
+            for l in range(len(self.model.topos)):
+                res = evolve_element(
+                    self.model.topos[l],
+                    np.asarray(self.model.values[l], np.float32),
+                    cfg.zeta,
+                    self.rng,
+                    momentum=self.vel_values[l],
+                    init_scheme=self.model.config.init,
+                )
+                self.model.topos[l] = res.topology
+                self.model.values[l] = jnp.asarray(res.values)
+                self.vel_values[l] = res.momentum
+            self.topo_version += 1
+            self.stats["evolutions"] += 1
+
+    def _server_loop(self):
+        cfg = self.cfg
+        total_updates = cfg.epochs * self.steps_per_epoch
+        while self.applied_updates < total_updates:
+            try:
+                gv, gb, tv, tw = self.grad_queue.get(timeout=5.0)
+            except queue.Empty:
+                if self.stop_flag.is_set():
+                    return
+                continue
+            worker_topos = gv.pop("topos")
+            staleness = self.t_global - tw
+            self._apply(
+                gv["values"], gb,
+                worker_topos if tv != self.topo_version else None,
+                staleness,
+            )
+            self.applied_updates += 1
+            if (
+                cfg.evolve
+                and self.applied_updates % self.steps_per_epoch == 0
+                and self.applied_updates < total_updates
+            ):
+                self._evolve()
+        self.stop_flag.set()
+
+    # -- worker loop -----------------------------------------------------------
+
+    def _worker_loop(self, wid: int):
+        cfg = self.cfg
+        loader = ShardedLoader(
+            self.data.x_train, self.data.y_train, cfg.batch_size,
+            seed=cfg.seed, shard_id=wid, num_shards=cfg.n_workers,
+        )
+        key = jax.random.PRNGKey(cfg.seed * 131 + wid)
+        epoch = 0
+        while not self.stop_flag.is_set():
+            for xb, yb in loader.epoch(epoch):
+                if self.stop_flag.is_set():
+                    return
+                topos, values, biases, tv, tw = self.fetch()
+                topo_arrays = tuple(t.device_arrays() for t in topos)
+                params = {
+                    "values": tuple(jnp.asarray(v) for v in values),
+                    "biases": tuple(jnp.asarray(b) for b in biases),
+                }
+                key, sub = jax.random.split(key)
+                _, grads = self._grad_fn(
+                    params, topo_arrays, jnp.asarray(xb), jnp.asarray(yb), sub
+                )
+                if cfg.straggler_delay and wid == 0:
+                    time.sleep(cfg.straggler_delay)
+                gv = {
+                    "values": [np.asarray(g, np.float32) for g in grads["values"]],
+                    "topos": topos,
+                }
+                gb = [np.asarray(g, np.float32) for g in grads["biases"]]
+                try:
+                    self.grad_queue.put((gv, gb, tv, tw), timeout=1.0)
+                except queue.Full:
+                    continue
+            epoch += 1
+
+    # -- entry -----------------------------------------------------------------
+
+    def run(self) -> Dict[str, object]:
+        server = threading.Thread(target=self._server_loop, daemon=True)
+        workers = [
+            threading.Thread(target=self._worker_loop, args=(w,), daemon=True)
+            for w in range(self.cfg.n_workers)
+        ]
+        t0 = time.perf_counter()
+        server.start()
+        for w in workers:
+            w.start()
+        server.join()
+        self.stop_flag.set()
+        for w in workers:
+            w.join(timeout=10.0)
+        return {
+            "seconds": time.perf_counter() - t0,
+            **self.stats,
+            "topo_version": self.topo_version,
+        }

@@ -1,0 +1,50 @@
+"""Sharded, deterministic host data loader.
+
+Production posture: each data-parallel group reads only its shard
+(``shard_id``/``num_shards``), epochs reshuffle with a per-epoch PRNG derived
+from (seed, epoch) so restart-from-checkpoint reproduces the exact stream
+(fault tolerance requires replayable data order). Batches are yielded as
+numpy; device placement happens in the train step (donated buffers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+__all__ = ["ShardedLoader"]
+
+
+@dataclasses.dataclass
+class ShardedLoader:
+    x: np.ndarray
+    y: np.ndarray
+    batch_size: int
+    seed: int = 0
+    shard_id: int = 0
+    num_shards: int = 1
+    drop_remainder: bool = True
+
+    def __post_init__(self):
+        assert 0 <= self.shard_id < self.num_shards
+        n = self.x.shape[0]
+        idx = np.arange(n)
+        self._shard_idx = idx[self.shard_id :: self.num_shards]
+
+    @property
+    def steps_per_epoch(self) -> int:
+        n = self._shard_idx.size
+        return n // self.batch_size if self.drop_remainder else -(-n // self.batch_size)
+
+    def epoch(self, epoch: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        rng = np.random.default_rng((self.seed * 1_000_003 + epoch) & 0x7FFFFFFF)
+        order = rng.permutation(self._shard_idx)
+        n_full = (
+            order.size // self.batch_size * self.batch_size
+            if self.drop_remainder
+            else order.size
+        )
+        for s in range(0, n_full, self.batch_size):
+            sel = order[s : s + self.batch_size]
+            yield self.x[sel], self.y[sel]

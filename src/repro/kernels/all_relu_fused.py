@@ -1,0 +1,53 @@
+"""Fused bias + All-ReLU Pallas kernel (elementwise epilogue).
+
+Used as the epilogue of the sparse FFN: y = all_relu(x + b, alpha, parity).
+A single VMEM pass instead of two HBM round-trips when XLA fails to fuse
+across the custom-call boundary of the block-sparse matmul kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, o_ref, *, alpha: float, parity: int):
+    x = x_ref[...] + b_ref[...]
+    slope = -alpha if parity == 0 else alpha
+    o_ref[...] = jnp.where(x > 0, x, slope * x)
+
+
+def bias_all_relu(
+    x: jax.Array,
+    bias: jax.Array,
+    *,
+    alpha: float,
+    layer_index: int,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (..., N), bias: (N,)."""
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    x2 = x.reshape(-1, n)
+    rows = x2.shape[0]
+    br = min(block_rows, rows)
+    pad = -rows % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // br,)
+    y = pl.pallas_call(
+        functools.partial(_kernel, alpha=alpha, parity=layer_index % 2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, bias)
+    return y[:rows].reshape(*lead, n)

@@ -1,0 +1,221 @@
+"""Pallas TPU kernels for truly block-sparse linear layers.
+
+Design (DESIGN.md §2): the sparse weight is a compact stack of MXU-aligned
+tiles ``values: (nb, bm, bn)`` with block coordinates streamed in through
+scalar prefetch (SMEM), so the grid/BlockSpecs never depend on the topology
+values — moving connections (SET evolution) never recompiles.
+
+Forward   y[b, cols[i]] += x[b, rows[i]] @ values[i]      grid (B/bb, nb)
+dX        dx[b, rows[i]] += dy[b, cols[i]] @ values[i]^T  grid (B/bb, nb) (row-sorted)
+dW        dw[i]          = sum_b x[b, rows[i]]^T @ dy[b, cols[i]]  grid (nb, B/bb)
+
+TPU grids execute sequentially, so revisiting the same output tile on
+consecutive steps accumulates in VMEM; ``first_*`` flags (computed host-side
+from the sorted coordinate arrays) zero each output tile on first visit.
+The topology layer guarantees every output block-column is covered so no
+output tile is left unvisited (coverage invariant, sparsity.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compiler_params(dimension_semantics):
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:
+        return None
+    try:
+        return cls(dimension_semantics=dimension_semantics)
+    except TypeError:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(rows_ref, cols_ref, first_ref, x_ref, w_ref, o_ref, acc_ref):
+    i = pl.program_id(1)
+
+    @pl.when(first_ref[i] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    nb = pl.num_programs(1)
+    is_last = jnp.logical_or(i == nb - 1, first_ref[i + 1] == 1)
+
+    @pl.when(is_last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bsmm_fwd(
+    x: jax.Array,
+    values: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    first_col: jax.Array,
+    *,
+    grid_n: int,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (B, grid_m*bm) @ block-sparse W -> (B, grid_n*bn). B % block_b == 0."""
+    B, _ = x.shape
+    nb, bm, bn = values.shape
+    # first_col is padded by one trailing 1 so first_ref[i+1] is always valid.
+    first_ext = jnp.concatenate([first_col, jnp.ones((1,), first_col.dtype)])
+    grid = (B // block_b, nb)
+    kwargs = {}
+    cp = _compiler_params(("parallel", "arbitrary"))
+    if cp is not None:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, bm), lambda b, i, r, c, f: (b, r[i])),
+                pl.BlockSpec((1, bm, bn), lambda b, i, r, c, f: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, bn), lambda b, i, r, c, f: (b, c[i])),
+            scratch_shapes=[pltpu.VMEM((block_b, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, grid_n * bn), x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(rows, cols, first_ext, x, values)
+
+
+# ---------------------------------------------------------------------------
+# dX  (same structure, blocks visited in row-sorted order, W^T per block)
+# ---------------------------------------------------------------------------
+
+
+def _dx_kernel(rows_ref, cols_ref, first_ref, perm_ref, dy_ref, w_ref, o_ref, acc_ref):
+    i = pl.program_id(1)
+
+    @pl.when(first_ref[i] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        dy_ref[...], w_ref[0].T, preferred_element_type=jnp.float32
+    )
+
+    nb = pl.num_programs(1)
+    is_last = jnp.logical_or(i == nb - 1, first_ref[i + 1] == 1)
+
+    @pl.when(is_last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bsmm_dx(
+    dy: jax.Array,
+    values: jax.Array,
+    rows_r: jax.Array,
+    cols_r: jax.Array,
+    first_row: jax.Array,
+    perm_r: jax.Array,
+    *,
+    grid_m: int,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, _ = dy.shape
+    nb, bm, bn = values.shape
+    first_ext = jnp.concatenate([first_row, jnp.ones((1,), first_row.dtype)])
+    grid = (B // block_b, nb)
+    kwargs = {}
+    cp = _compiler_params(("parallel", "arbitrary"))
+    if cp is not None:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        _dx_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, bn), lambda b, i, r, c, f, p: (b, c[i])),
+                pl.BlockSpec((1, bm, bn), lambda b, i, r, c, f, p: (p[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, bm), lambda b, i, r, c, f, p: (b, r[i])),
+            scratch_shapes=[pltpu.VMEM((block_b, bm), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, grid_m * bm), dy.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(rows_r, cols_r, first_ext, perm_r, dy, values)
+
+
+# ---------------------------------------------------------------------------
+# dW  (one output block per topology slot, accumulate over batch tiles)
+# ---------------------------------------------------------------------------
+
+
+def _dw_kernel(rows_ref, cols_ref, x_ref, dy_ref, o_ref, acc_ref):
+    bt = pl.program_id(1)
+
+    @pl.when(bt == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].T, dy_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(bt == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bsmm_dw(
+    x: jax.Array,
+    dy: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    n_blocks: int,
+    block_m: int,
+    block_n: int,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B = x.shape[0]
+    grid = (n_blocks, B // block_b)
+    kwargs = {}
+    cp = _compiler_params(("parallel", "arbitrary"))
+    if cp is not None:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        _dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block_m), lambda i, bt, r, c: (bt, r[i])),
+                pl.BlockSpec((block_b, block_n), lambda i, bt, r, c: (bt, c[i])),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, block_m, block_n), lambda i, bt, r, c: (i, 0, 0)
+            ),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_m, block_n), x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(rows, cols, x, dy)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (densify-then-matmul)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def blocks_to_dense(values, rows, cols, grid_m, grid_n):
+    """Scatter (nb, bm, bn) blocks into the dense padded matrix."""
+    nb, bm, bn = values.shape
+    dense = jnp.zeros((grid_m, bm, grid_n, bn), values.dtype)
+    dense = dense.at[rows, :, cols, :].set(values)
+    return dense.reshape(grid_m * bm, grid_n * bn)
+
+
+def bsmm_ref(x, values, rows, cols, *, grid_m, grid_n):
+    """y = x @ dense(W).   x: (B, grid_m*bm) -> (B, grid_n*bn)."""
+    w = blocks_to_dense(values, rows, cols, grid_m, grid_n)
+    return jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(
+        x.dtype
+    )
+
+
+def bsmm_dx_ref(dy, values, rows, cols, *, grid_m, grid_n):
+    """dX = dY @ W^T."""
+    w = blocks_to_dense(values, rows, cols, grid_m, grid_n)
+    return jnp.dot(dy, w.T.astype(dy.dtype), preferred_element_type=jnp.float32).astype(
+        dy.dtype
+    )
+
+
+def bsmm_dw_ref(x, dy, rows, cols, *, block_m, block_n):
+    """dW_blocks[i] = x_tile(rows[i])^T @ dy_tile(cols[i])."""
+    B = x.shape[0]
+    xg = x.reshape(B, -1, block_m)[:, rows]      # (B, nb, bm)
+    dyg = dy.reshape(B, -1, block_n)[:, cols]    # (B, nb, bn)
+    return jnp.einsum(
+        "bnm,bno->nmo", xg, dyg, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def all_relu_ref(x, alpha, layer_index):
+    """Eq. (3): negative slope -alpha for even layers, +alpha for odd."""
+    slope = jnp.where(layer_index % 2 == 0, -alpha, alpha)
+    return jnp.where(x > 0, x, slope * x)

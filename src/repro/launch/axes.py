@@ -1,0 +1,65 @@
+"""Ambient logical-axis context for activation sharding hints.
+
+Model code calls ``hint(x, 'batch', None, 'heads_q', None)`` at layout-
+critical points; when a launcher has installed ShardingRules (dry-run, pod
+training), this becomes ``with_sharding_constraint``; otherwise it is a no-op
+so tests and CPU runs are unaffected. This is the standard MaxText-style
+mechanism that keeps GSPMD propagation from giving up inside scan bodies.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def hint(x, *names):
+    rules = current_rules()
+    if rules is None:
+        return x
+    if x.ndim != len(names):
+        return x
+    # shape-aware: drop axis assignments that don't divide the dim — a
+    # constraint like kv_heads=4 on a 16-way axis otherwise forces GSPMD
+    # into "involuntary full rematerialization" reshards (§Perf finding)
+    pspec = rules.pspec(tuple(names))
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+
+    def ax_size(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, str):
+            return sizes[ax]
+        n = 1
+        for a in ax:
+            n *= sizes[a]
+        return n
+
+    entries = tuple(pspec) + (None,) * (x.ndim - len(tuple(pspec)))
+    fixed = tuple(
+        ax if ax is not None and x.shape[i] % ax_size(ax) == 0 else None
+        for i, ax in enumerate(entries)
+    )
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, PartitionSpec(*fixed))
+    )

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). Everything below is ordinary code.
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import specs as specs_mod
+from repro.launch import steps as steps_mod
+from repro.launch import analytic
+from repro.launch.axes import logical_axis_rules
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import V5E, make_production_mesh
+from repro.launch.sharding import default_rules, shape_aware_shardings
+from repro.models.transformer import PatternLM
+from repro.models.whisper import WhisperConfig, WhisperModel
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\])"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-chip ICI traffic estimate from the partitioned HLO module.
+
+    Shapes in the compiled module are per-shard. Ring-model traffic per op:
+    ~max(|in|, |out|) bytes (x2 for all-reduce = reduce-scatter + all-gather).
+    'start' variants counted once ('done' halves skipped).
+    """
+    shapes: dict = {}
+    per_kind: dict = {k: 0 for k in _COLLECTIVES}
+    counts: dict = {k: 0 for k in _COLLECTIVES}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            shapes[m.group("name")] = _shape_bytes(m.group("type"))
+    operand_re = re.compile(r"%([\w.\-]+)")
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        kind = None
+        rest = ln[m.end():]
+        opcode = rest.strip().split("(")[0].strip().split()[-1] if "(" in rest else ""
+        for k in _COLLECTIVES:
+            if opcode.startswith(k):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if opcode.endswith("-done"):
+            continue  # count the -start half only
+        out_b = shapes.get(m.group("name"), 0)
+        in_b = 0
+        args = rest[rest.find("(") + 1 : rest.rfind(")")]
+        for op in operand_re.findall(args):
+            in_b += shapes.get(op, 0)
+        traffic = max(in_b, out_b)
+        if kind == "all-reduce":
+            traffic *= 2
+        per_kind[kind] += traffic
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"per_chip_bytes": total, "by_kind": per_kind, "counts": counts}
+
+
+def build_model(spec, *, abstract=True, overrides=None):
+    cfg = spec.config
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if isinstance(cfg, WhisperConfig):
+        return WhisperModel(cfg, seed=0, abstract=abstract)
+    return PatternLM(cfg, seed=0, abstract=abstract)
+
+
+# per-arch microbatch counts for the train_4k cell (activation-memory fit;
+# gradient accumulation semantics — see EXPERIMENTS.md §Dry-run)
+TRAIN_MICROBATCHES = {
+    "qwen3-moe-30b-a3b": 4,
+    "mixtral-8x22b": 8,
+    "gemma3-27b": 4,
+    "gemma2-2b": 2,
+    "paligemma-3b": 2,
+    "internlm2-1.8b": 2,
+    "recurrentgemma-2b": 2,
+}
+
+
+def lower_cell(
+    arch: str,
+    shape_id: str,
+    *,
+    multi_pod: bool = False,
+    overrides: dict | None = None,
+    fsdp: bool = True,
+    compile_: bool = True,
+    verbose: bool = True,
+    microbatches: int | None = None,
+):
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    spec = configs.get_spec(arch)
+    if spec.shapes.get(shape_id) is not True:
+        return {
+            "arch": arch, "shape": shape_id,
+            "skipped": spec.shapes.get(shape_id, "unknown shape"),
+        }
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if getattr(spec.config, "n_experts", 0):
+        dp = 32 if multi_pod else 16
+        overrides = {"moe_groups": dp, **(overrides or {})}
+    model = build_model(spec, abstract=True, overrides=overrides)
+    cfg = model.cfg
+    kind = configs.SHAPES[shape_id]["kind"]
+    B = configs.SHAPES[shape_id]["global_batch"]
+    rules = default_rules(
+        mesh, n_experts=getattr(cfg, "n_experts", 0), batch_size=B, fsdp=fsdp,
+    )
+
+    inputs, logical = specs_mod.input_specs(spec, shape_id, model)
+    in_sh = shape_aware_shardings(rules, logical, inputs)
+    param_sh = shape_aware_shardings(rules, model.specs, model.params)
+
+    is_whisper = isinstance(cfg, WhisperConfig)
+    topo = None if is_whisper else model.topo_arrays()
+    topo_sh = None
+    if topo is not None:
+        # topology coordinate arrays are tiny int vectors — replicate
+        topo_sh = jax.tree.map(lambda a: rules.sharding(None), topo)
+
+    if kind == "train":
+        from repro.optim.sgd import SGDState
+
+        if microbatches is None:
+            microbatches = TRAIN_MICROBATCHES.get(arch, 1)
+        step_fn, opt = steps_mod.make_train_step(model, microbatches=microbatches)
+        opt_state = jax.eval_shape(opt.init, model.params)
+        # velocity shards exactly like its parameter
+        opt_sh = SGDState(velocity=param_sh, step=rules.sharding(None))
+        args = (model.params, opt_state, inputs) + (() if is_whisper else (topo,))
+        in_shardings = (param_sh, opt_sh, in_sh) + (() if is_whisper else (topo_sh,))
+        out_shardings = (param_sh, opt_sh, None)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=in_shardings,
+            out_shardings=out_shardings,
+            donate_argnums=(0, 1),
+        )
+    elif kind == "prefill":
+        step_fn = steps_mod.make_prefill_step(model)
+        args = (model.params, inputs) + (() if is_whisper else (topo,))
+        in_shardings = (param_sh, in_sh) + (() if is_whisper else (topo_sh,))
+        jitted = jax.jit(step_fn, in_shardings=in_shardings)
+    else:  # decode
+        step_fn = steps_mod.make_decode_step(model)
+        args = (model.params, inputs) + (() if is_whisper else (topo,))
+        in_shardings = (param_sh, in_sh) + (() if is_whisper else (topo_sh,))
+        cache_sh = in_sh["caches"]
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=in_shardings,
+            out_shardings=(None, cache_sh) if not is_whisper else (None, {"self": cache_sh["self"] if isinstance(cache_sh, dict) and "self" in cache_sh else cache_sh}),
+            donate_argnums=(),
+        )
+
+    with mesh, logical_axis_rules(rules):
+        lowered = jitted.lower(*args)
+        record = {
+            "arch": arch,
+            "shape": shape_id,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": kind,
+            "overrides": overrides or {},
+            "microbatches": microbatches if kind == "train" else None,
+            "fsdp": fsdp,
+            "lower_seconds": round(time.time() - t0, 2),
+        }
+        if compile_:
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_seconds"] = round(time.time() - t1, 2)
+            mem = compiled.memory_analysis()
+            if mem is not None:
+                for field in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                    "alias_size_in_bytes",
+                ):
+                    v = getattr(mem, field, None)
+                    if v is not None:
+                        record[field] = int(v)
+                if verbose:
+                    print(f"  memory_analysis: {mem}")
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0] if cost else {}
+            record["flops"] = float(cost.get("flops", 0.0))
+            record["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+            hlo = compiled.as_text()
+            record["collectives"] = collective_bytes_from_hlo(hlo)
+            # trip-count-corrected per-chip flops/bytes (XLA counts while
+            # bodies once; see launch/hlo_analysis.py)
+            try:
+                record["hlo_corrected"] = analyze_hlo(hlo)
+            except Exception as e:  # noqa: BLE001
+                record["hlo_corrected"] = {"error": repr(e)}
+            record["analytic"] = analytic.model_flops(spec, shape_id)
+            if verbose:
+                print(
+                    f"  cost_analysis: flops={record['flops']:.3e} "
+                    f"bytes={record['bytes_accessed']:.3e} "
+                    f"coll={record['collectives']['per_chip_bytes']:.3e}B "
+                    f"{record['collectives']['counts']}"
+                )
+    return record
+
+
+def save_record(record: dict, tag: str = "") -> Path:
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    mesh = record.get("mesh", "na").replace("x", "_")
+    name = f"{record['arch']}__{record['shape']}__{mesh}{tag}.json"
+    path = ART_DIR / name
+    path.write_text(json.dumps(record, indent=2))
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = configs.list_archs() if args.arch == "all" else [args.arch]
+    shape_ids = list(configs.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_id in shape_ids:
+            for mp in meshes:
+                label = f"{arch} x {shape_id} x {'2x16x16' if mp else '16x16'}"
+                print(f"[dryrun] {label}")
+                try:
+                    rec = lower_cell(
+                        arch, shape_id, multi_pod=mp, fsdp=not args.no_fsdp
+                    )
+                    if "skipped" in rec:
+                        print(f"  SKIP: {rec['skipped']}")
+                    save_record(rec, args.tag)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((label, repr(e)))
+                    print(f"  FAIL: {e!r}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for label, err in failures:
+            print(f"  {label}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

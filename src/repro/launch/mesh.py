@@ -1,0 +1,40 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state. Single pod = v5e-256 as (data=16, model=16); multi-pod adds a
+leading 'pod' axis (2 pods = 512 chips). The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "HardwareSpec", "V5E"]
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_bf16_tflops: float      # per chip
+    hbm_gbps: float              # per chip
+    ici_link_gbps: float         # per link
+    hbm_gib: float
+
+
+V5E = HardwareSpec(
+    name="tpu-v5e", peak_bf16_tflops=197.0, hbm_gbps=819.0,
+    ici_link_gbps=50.0, hbm_gib=16.0,
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

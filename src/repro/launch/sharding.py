@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules (MaxText-style) → NamedSharding.
+
+Every parameter/cache/input leaf carries a tuple of logical axis names (see
+models/layers.py docstring). Rules map logical names to mesh axes; GSPMD
+propagates the rest. The same rules file drives single-pod (data, model) and
+multi-pod (pod, data, model) meshes — 'batch' spans ('pod','data') so adding
+pods scales pure data parallelism, while FSDP ('embed'→'data') stays
+intra-pod where ICI is fastest.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+__all__ = ["ShardingRules", "default_rules", "spec_to_pspec", "tree_shardings"]
+
+
+class ShardingRules:
+    def __init__(self, rules: Dict[str, Axis], mesh: Mesh):
+        self.rules = dict(rules)
+        self.mesh = mesh
+
+    def pspec(self, logical: Optional[Sequence[Optional[str]]]) -> P:
+        if logical is None:
+            return P()
+        axes = []
+        used = set()
+        for name in logical:
+            ax = self.rules.get(name) if name is not None else None
+            # never map two tensor dims to the same mesh axis
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else tuple(ax)
+                if any(a in used for a in flat):
+                    ax = None
+                else:
+                    used.update(flat)
+            axes.append(ax)
+        return P(*axes)
+
+    def sharding(self, logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(logical))
+
+
+def default_rules(
+    mesh: Mesh,
+    *,
+    n_experts: int = 0,
+    batch_size: Optional[int] = None,
+    fsdp: bool = True,
+) -> ShardingRules:
+    """The baseline ruleset (EXPERIMENTS.md §Perf iterates on this).
+
+    batch    -> ('pod','data') when present (pure DP across pods)
+    embed    -> 'data' (FSDP / ZeRO-3 parameter sharding) when fsdp
+    heads/kv/mlp/vocab/blocks/inner -> 'model' (TP)
+    experts  -> 'model' when E % |model| == 0 (EP; else TP inside experts)
+    stack    -> None (scan-over-layers axis stays unsharded; FSDP already
+                covers params via 'embed')
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axis_sizes.get("model", 1)
+    data_axes: Axis = (
+        ("pod", "data") if "pod" in axis_sizes else "data"
+    )
+    dp = axis_sizes.get("data", 1) * axis_sizes.get("pod", 1)
+    batch_axis: Axis = data_axes
+    if batch_size is not None and batch_size % dp != 0:
+        # e.g. long_500k's global_batch=1: replicate batch, shard sequence
+        batch_axis = None
+    ep = n_experts > 0 and n_experts % model_n == 0
+    rules: Dict[str, Axis] = {
+        "batch": batch_axis,
+        "seq": None,
+        "stack": None,
+        "embed": "data" if fsdp else None,
+        "heads": "model",
+        "heads_q": "model",
+        "kv": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "blocks": "model",
+        "inner": "model",
+        "inner2": "model",
+        "inner_b": None,
+        "experts": "model" if ep else None,
+        "expert_mlp": None if ep else "model",
+        "cache_seq": data_axes if batch_axis is None else None,
+        # fallback when kv_heads doesn't divide the model axis: shard the
+        # cache sequence dim over 'model' (plus 'data'+'pod' when the batch
+        # is too small to shard) instead of replicating the cache 16x
+        "cache_seq_model": (
+            "model"
+            if batch_axis is not None
+            else (data_axes + ("model",))
+            if isinstance(data_axes, tuple)
+            else (data_axes, "model")
+        ),
+        # residual-stream storage sharding (saved activation stacks)
+        "act": "model",
+        # MoE dispatch groups are aligned with data parallelism
+        "data_groups": data_axes,
+    }
+    return ShardingRules(rules, mesh)
+
+
+def spec_to_pspec(rules: ShardingRules, spec_tree):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda s: rules.pspec(s),
+        spec_tree,
+        is_leaf=lambda x: x is None
+        or (
+            isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x)
+        ),
+    )
+
+
+def tree_shardings(rules: ShardingRules, spec_tree):
+    return jax.tree.map(
+        lambda s: rules.sharding(s),
+        spec_tree,
+        is_leaf=lambda x: x is None
+        or (
+            isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x)
+        ),
+    )
+
+
+def _axis_size(mesh: Mesh, ax: Axis) -> int:
+    if ax is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(ax, str):
+        return sizes[ax]
+    n = 1
+    for a in ax:
+        n *= sizes[a]
+    return n
+
+
+def shape_aware_shardings(rules: ShardingRules, spec_tree, shape_tree):
+    """Like tree_shardings, but drops any axis assignment whose mesh-axis size
+    does not divide the tensor dim (jit in_shardings requires divisibility;
+    e.g. whisper's 51865 vocab or gemma2's 4 KV heads on a 16-way axis)."""
+    is_spec_leaf = lambda x: x is None or (
+        isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+    )
+
+    def one(logical, arr):
+        pspec = rules.pspec(logical)
+        dims = tuple(
+            ax
+            if ax is not None
+            and arr.shape[i] % _axis_size(rules.mesh, ax) == 0
+            else None
+            for i, ax in enumerate(
+                tuple(pspec) + (None,) * (len(arr.shape) - len(tuple(pspec)))
+            )
+        )
+        return NamedSharding(rules.mesh, P(*dims))
+
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=is_spec_leaf)

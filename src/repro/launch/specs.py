@@ -1,0 +1,128 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, zero allocation) + their logical axis specs.
+
+Shape semantics per family (DESIGN.md §Shape-skips):
+  LM        train/prefill: tokens (B, S); decode: one token + KV cache of S.
+  VLM       prefix_tokens patch embeddings (stub SigLIP) + text tokens filling
+            the rest of S.
+  audio     S = encoder frames (stub conv frontend); train/prefill pair the
+            encoder with a 448-token teacher-forced decoder; decode = decoder
+            self-cache of S with cross-attention to a 1500-frame memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ArchSpec
+from repro.models.transformer import PatternLM
+from repro.models.whisper import WhisperConfig, WhisperModel
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(
+    spec: ArchSpec, shape_id: str, model, *, model_axis: int = 16
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (inputs, logical_specs) for the given (arch, shape) cell.
+    model_axis: TP degree — decides the KV-cache sharding fallback."""
+    sh = SHAPES[shape_id]
+    B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    cfg = spec.config
+
+    if isinstance(cfg, WhisperConfig):
+        return _whisper_specs(spec, model, B, S, kind)
+
+    if kind in ("train", "prefill"):
+        if spec.family == "vlm":
+            text = S - spec.prefix_tokens
+            inputs = {
+                "tokens": SDS((B, text), jnp.int32),
+                "patch_embeds": SDS(
+                    (B, spec.prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+                ),
+            }
+            logical = {
+                "tokens": ("batch", "seq"),
+                "patch_embeds": ("batch", "seq", None),
+            }
+        else:
+            inputs = {"tokens": SDS((B, S), jnp.int32)}
+            logical = {"tokens": ("batch", "seq")}
+        if kind == "train":
+            inputs["labels"] = SDS((B, S), jnp.int32)
+            logical["labels"] = ("batch", "seq")
+        return inputs, logical
+
+    # decode: one new token against a cache of length S
+    caches = jax.eval_shape(
+        lambda: model.init_caches(B, S, dtype=jnp.dtype(cfg.dtype))
+    )
+    cache_logical = model.cache_specs()
+    if getattr(cfg, "n_kv", 0) and cfg.n_kv % model_axis != 0:
+        # kv heads don't divide TP: shard cache SEQ over 'model' instead of
+        # replicating the whole cache on every model shard (runnability fix,
+        # EXPERIMENTS.md §Dry-run)
+        def fix(spec_leaf):
+            t = tuple(spec_leaf)
+            if len(t) >= 4 and "kv_heads" in t:
+                t = tuple(
+                    "cache_seq_model" if name == "cache_seq" else
+                    (None if name == "kv_heads" else name)
+                    for name in t
+                )
+            return t
+
+        cache_logical = jax.tree.map(
+            fix, cache_logical,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+    inputs = {
+        "tokens": SDS((B, 1), jnp.int32),
+        "position": SDS((), jnp.int32),
+        "caches": caches,
+    }
+    logical = {
+        "tokens": ("batch", None),
+        "position": None,
+        "caches": cache_logical,
+    }
+    return inputs, logical
+
+
+def _whisper_specs(spec: ArchSpec, model, B, S, kind):
+    cfg: WhisperConfig = spec.config
+    dt = jnp.dtype(cfg.dtype)
+    if kind in ("train", "prefill"):
+        dec_len = min(448, cfg.max_text)
+        inputs = {"frames": SDS((B, S, cfg.d_model), dt)}
+        logical = {"frames": ("batch", "seq", None)}
+        inputs["tokens"] = SDS((B, dec_len), jnp.int32)
+        logical["tokens"] = ("batch", "seq")
+        if kind == "train":
+            inputs["labels"] = SDS((B, dec_len), jnp.int32)
+            logical["labels"] = ("batch", "seq")
+        return inputs, logical
+    # decode: decoder self-cache of length S, cross-attn memory of 1500 frames
+    caches = jax.eval_shape(lambda: model.init_caches(B, S, dtype=dt))
+    inputs = {
+        "tokens": SDS((B, 1), jnp.int32),
+        "position": SDS((), jnp.int32),
+        "caches": caches,
+        "memory": SDS((B, 1500, cfg.d_model), dt),
+    }
+    logical = {
+        "tokens": ("batch", None),
+        "position": None,
+        "caches": {
+            "self": {
+                "k": (None, "batch", "cache_seq", "kv_heads", None),
+                "v": (None, "batch", "cache_seq", "kv_heads", None),
+            }
+        },
+        "memory": ("batch", None, None),
+    }
+    return inputs, logical

@@ -1,0 +1,143 @@
+"""Pure step functions (train / prefill / decode) for every architecture,
+shared by the dry-run, the pod training driver, and the serving driver.
+
+train_step: momentum-SGD (paper Eq. 1) on CE loss (+ MoE aux), gradients
+reduced over the data axes by GSPMD from the in/out shardings. Sparse-FFN
+topology arrays ride along as non-trainable inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import PatternLM, chunked_softmax_xent
+from repro.models.whisper import WhisperModel
+from repro.optim.sgd import MomentumSGD
+
+PyTree = Any
+
+
+def _microbatched_grad(loss_fn, params, batch, microbatches: int):
+    """Gradient accumulation over leading-batch microbatches (lax.scan).
+    Activation memory scales 1/microbatches; grads accumulate in f32."""
+    if microbatches <= 1:
+        (total, loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return total, loss, grads
+    mb = jax.tree.map(
+        lambda a: a.reshape(microbatches, a.shape[0] // microbatches, *a.shape[1:]),
+        batch,
+    )
+
+    def body(carry, one):
+        g_acc, t_acc, l_acc = carry
+        (total, loss), g = jax.value_and_grad(loss_fn, has_aux=True)(params, one)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+        return (g_acc, t_acc + total, l_acc + loss), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (g, total, loss), _ = jax.lax.scan(
+        body, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), mb
+    )
+    inv = 1.0 / microbatches
+    grads = jax.tree.map(lambda a: (a * inv), g)
+    return total * inv, loss * inv, grads
+
+
+def make_train_step(
+    model, *, lr: float = 1e-2, momentum: float = 0.9, microbatches: int = 1
+):
+    opt = MomentumSGD(momentum=momentum, weight_decay=1e-4)
+
+    if isinstance(model, WhisperModel):
+
+        def loss_fn_w(p, batch):
+            mem = model.encode(p, batch["frames"])
+            h = model.decode_train(p, batch["tokens"], mem)
+            logits = model.logits(p, h).astype(jnp.float32)
+            logp = jax.nn.log_softmax(logits)
+            nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+            loss = nll.mean()
+            return loss, loss
+
+        def train_step(params, opt_state, batch):
+            total, loss, grads = _microbatched_grad(
+                loss_fn_w, params, batch, microbatches
+            )
+            params, opt_state = opt.update(grads, opt_state, params, lr)
+            return params, opt_state, {"loss": loss}
+
+        return train_step, opt
+
+    def train_step(params, opt_state, batch, topo):
+        def loss_fn(p, b):
+            h, _, aux = model.forward(
+                p,
+                b["tokens"],
+                topo=topo,
+                prefix_embeds=b.get("patch_embeds"),
+                return_hidden=True,
+            )
+            labels = b["labels"]
+            if "patch_embeds" in b:
+                h = h[:, b["patch_embeds"].shape[1] :]
+                labels = labels[:, : h.shape[1]]
+            loss = chunked_softmax_xent(model, p, h, labels)
+            return loss + aux, loss
+
+        total, loss, grads = _microbatched_grad(loss_fn, params, batch, microbatches)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss, "total": total}
+
+    return train_step, opt
+
+
+def make_prefill_step(model):
+    if isinstance(model, WhisperModel):
+
+        def prefill(params, batch):
+            mem = model.encode(params, batch["frames"])
+            h = model.decode_train(params, batch["tokens"], mem)
+            return model.logits(params, h[:, -1:, :])
+
+        return prefill
+
+    def prefill(params, batch, topo):
+        logits, _, _ = model.forward(
+            params,
+            batch["tokens"],
+            topo=topo,
+            prefix_embeds=batch.get("patch_embeds"),
+        )
+        return logits[:, -1:, :]
+
+    return prefill
+
+
+def make_decode_step(model):
+    if isinstance(model, WhisperModel):
+
+        def decode(params, batch):
+            return model.decode_step(
+                params, batch["tokens"], batch["position"], batch["caches"],
+                batch["memory"],
+            )
+
+        return decode
+
+    def decode(params, batch, topo):
+        logits, new_caches, _ = model.forward(
+            params,
+            batch["tokens"],
+            topo=topo,
+            positions=jnp.reshape(batch["position"], (1,)),
+            mode="decode",
+            caches=batch["caches"],
+        )
+        return logits, new_caches
+
+    return decode

@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> [linear_y (gate branch, GeLU), linear_x -> causal conv1d(4) ->
+RG-LRU] -> elementwise product -> linear_out.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t)            recurrence gate
+    i_t = sigmoid(W_x x_t)            input gate
+    a_t = a^(c * r_t),  a = sigmoid(Lambda),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Linear diagonal recurrence -> same chunked outer-scan / inner-associative-scan
+treatment as the Mamba block; state is just (B, d_rnn) so even the chunk
+intermediate (B, c, d_rnn) is small. d_rnn shards on 'model' (channels are
+independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.axes import hint
+from repro.models.layers import dense_init
+from repro.models.mamba import _causal_conv
+
+__all__ = [
+    "RGLRUConfig",
+    "init_rglru_block",
+    "rglru_fwd",
+    "init_rglru_state",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int              # recurrentgemma-2b: 2560
+    d_conv: int = 4
+    c_exponent: float = 8.0
+    chunk: int = 256
+
+
+def init_rglru_block(key, cfg: RGLRUConfig, dtype):
+    ks = jax.random.split(key, 6)
+    d, dr = cfg.d_model, cfg.d_rnn
+    params = {
+        "linear_x": dense_init(ks[0], (d, dr), d, dtype),
+        "linear_y": dense_init(ks[1], (d, dr), d, dtype),
+        "conv_w": dense_init(ks[2], (cfg.d_conv, dr), cfg.d_conv, dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": dense_init(ks[3], (dr, dr), dr, dtype),
+        "w_x": dense_init(ks[4], (dr, dr), dr, dtype),
+        "lambda_p": jnp.full((dr,), 2.2, jnp.float32),  # sigmoid ~ 0.9
+        "linear_out": dense_init(ks[5], (dr, d), dr, dtype),
+    }
+    specs = {
+        "linear_x": ("embed", "inner"),
+        "linear_y": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "w_a": ("inner", "inner_b"),
+        "w_x": ("inner", "inner_b"),
+        "lambda_p": ("inner",),
+        "linear_out": ("inner", "embed"),
+    }
+    return params, specs
+
+
+def _rglru_scan(gx, a_t, h0, chunk):
+    """h_t = a_t h_{t-1} + gx_t, chunked. gx, a_t: (B,S,dr); h0: (B,dr)."""
+    B, S, dr = gx.shape
+    c = min(chunk, S)
+    n_chunks = -(-S // c)
+    pad = n_chunks * c - S
+    if pad:
+        gx = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+        a_t = jnp.pad(a_t, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    gc = gx.reshape(B, n_chunks, c, dr).transpose(1, 0, 2, 3)
+    ac = a_t.reshape(B, n_chunks, c, dr).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, xs):
+        g, a = xs
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a, g), axis=1)
+        h_all = a_sc * h[:, None] + b_sc
+        return h_all[:, -1], h_all
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    hT, hc = jax.lax.scan(chunk_body, h0, (gc, ac))
+    h_seq = hc.transpose(1, 0, 2, 3).reshape(B, n_chunks * c, dr)[:, :S]
+    return h_seq, hT
+
+
+def rglru_fwd(
+    params,
+    x: jax.Array,
+    cfg: RGLRUConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, _ = x.shape
+    y_gate = jax.nn.gelu(hint(x @ params["linear_y"], "batch", None, "inner"))
+    xr = hint(x @ params["linear_x"], "batch", None, "inner")
+    conv_state = state["conv"] if state else None
+    xr, new_conv = _causal_conv(xr, params["conv_w"], params["conv_b"], conv_state)
+
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32))
+    log_a = cfg.c_exponent * r * jax.nn.log_sigmoid(params["lambda_p"])
+    a_t = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a_t), 1e-12)) * (i * xf)
+    h0 = (
+        state["rnn"].astype(jnp.float32)
+        if state
+        else jnp.zeros((B, cfg.d_rnn), jnp.float32)
+    )
+    h_seq, hT = _rglru_scan(gated, a_t, h0, cfg.chunk)
+    out = (h_seq.astype(x.dtype) * y_gate) @ params["linear_out"]
+    new_state = (
+        {"rnn": hT.astype(jnp.float32), "conv": new_conv}
+        if state is not None
+        else None
+    )
+    return out, new_state
+
+
+def init_rglru_state(cfg: RGLRUConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "rnn": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_rnn), dtype),
+    }

@@ -1,0 +1,436 @@
+"""Shared model layers: norms, RoPE, GQA attention (chunked online-softmax),
+FFN variants (gated / paper-style sparse SET-FFN), embeddings.
+
+All layers are functional: ``init_*`` returns (params, specs) where specs is a
+pytree of logical-axis-name tuples with the same structure as params (used by
+launch/sharding.py to build NamedShardings), and ``*_fwd`` are pure.
+
+Logical axis vocabulary:
+  'embed'    — d_model
+  'heads'    — flattened q heads*head_dim (TP)
+  'kv'       — flattened kv heads*head_dim (TP)
+  'mlp'      — FFN hidden (TP)
+  'vocab'    — vocabulary (TP)
+  'experts'  — MoE expert dim (EP)
+  'stack'    — scan-over-layers stacking dim (FSDP)
+  'blocks'   — block-sparse live-block dim (TP)
+  None       — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.all_relu import activation_fn
+from repro.core.sparsity import BlockMeta, BlockTopology
+from repro.kernels import ops as kops
+from repro.launch.axes import hint
+
+PyTree = Any
+P = Tuple  # logical spec alias
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, *, eps=1e-6, unit_offset=True):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    scale = 1.0 + scale if unit_offset else scale
+    return (y * scale).astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    return (
+        {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def layernorm(params, x, *, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, chunked online softmax)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_model: int
+    qkv_bias: bool = False
+    softcap: Optional[float] = None        # gemma2 logit soft-capping
+    window: Optional[int] = None           # sliding-window size (local/SWA)
+    rope_theta: float = 10000.0
+    query_scale: Optional[float] = None    # default 1/sqrt(head_dim)
+    kv_chunk: int = 1024
+    causal_skip: bool = False              # perf: skip fully-masked kv chunks
+
+
+def init_attention(key, cfg: AttnConfig, dtype):
+    ks = jax.random.split(key, 4)
+    h, kv, d, dm = cfg.n_heads, cfg.n_kv, cfg.head_dim, cfg.d_model
+    params = {
+        "wq": dense_init(ks[0], (dm, h * d), dm, dtype),
+        "wk": dense_init(ks[1], (dm, kv * d), dm, dtype),
+        "wv": dense_init(ks[2], (dm, kv * d), dm, dtype),
+        "wo": dense_init(ks[3], (h * d, dm), h * d, dtype),
+    }
+    specs = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv"),
+        "wv": ("embed", "kv"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        params.update(
+            bq=jnp.zeros((h * d,), dtype),
+            bk=jnp.zeros((kv * d,), dtype),
+            bv=jnp.zeros((kv * d,), dtype),
+        )
+        specs.update(bq=("heads",), bk=("kv",), bv=("kv",))
+    return params, specs
+
+
+def _online_softmax_chunked(q, k, v, mask_fn, cfg: AttnConfig, q_positions):
+    """q: (B,Sq,H,D); k,v: (B,Skv,KV,D). Streams KV chunks with a running
+    (max, denom, accum) triple — peak memory O(Sq * chunk) per head."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    groups = H // k.shape[2]
+    scale = cfg.query_scale or (1.0 / math.sqrt(D))
+    qf = (q * scale).astype(jnp.float32)
+    chunk = min(cfg.kv_chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, k.shape[2], D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, v.shape[2], D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m, den, acc = carry
+        kb, vb, ci = xs  # (B, chunk, KV, D), chunk idx
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        # scores: (B, H, Sq, chunk) via GQA grouping
+        kbh = jnp.repeat(kb, groups, axis=2)  # (B, chunk, H, D)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kbh.astype(jnp.float32))
+        s = hint(s, "batch", "heads_q", None, None)
+        if cfg.softcap:
+            s = jnp.tanh(s / cfg.softcap) * cfg.softcap
+        msk = mask_fn(q_positions, kv_pos)  # (B?, Sq, chunk) or (Sq, chunk)
+        s = jnp.where(msk, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        den_new = den * alpha + p.sum(axis=-1)
+        vbh = jnp.repeat(vb, groups, axis=2).astype(jnp.float32)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vbh)
+        return (m_new, den_new, acc_new), None
+
+    # flash-style backward: recompute scores per chunk instead of saving the
+    # (B,H,Sq,chunk) score/prob tensors across all chunk steps
+    body = jax.checkpoint(body, prevent_cse=False)
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    den0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, den, acc), _ = jax.lax.scan(
+        body, (m0, den0, acc0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, D)
+
+
+def _causal_skip_attention(q, k, v, cfg: AttnConfig, q_positions):
+    """Exact-FLOPs causal attention: python loop over q chunks, each attending
+    only to its static KV prefix (plus window clipping). ~2x fewer attention
+    FLOPs than the masked full sweep (perf lever, EXPERIMENTS.md §Perf)."""
+    B, Sq, H, D = q.shape
+    chunk = min(cfg.kv_chunk, Sq)
+    n_q = -(-Sq // chunk)
+    outs = []
+    for qi in range(n_q):
+        q_lo, q_hi = qi * chunk, min((qi + 1) * chunk, Sq)
+        qb = q[:, q_lo:q_hi]
+        kv_hi = q_hi  # causal: keys up to last query position
+        kv_lo = 0
+        if cfg.window is not None:
+            kv_lo = max(0, q_lo - cfg.window)
+        kb = k[:, kv_lo:kv_hi]
+        vb = v[:, kv_lo:kv_hi]
+        qp = q_positions[q_lo:q_hi]
+
+        def mask_fn(qpos, kpos, _off=kv_lo):
+            kabs = kpos + _off
+            m = qpos[:, None] >= kabs[None, :]
+            if cfg.window is not None:
+                m &= kabs[None, :] > qpos[:, None] - cfg.window
+            return m
+
+        outs.append(
+            _online_softmax_chunked(qb, kb, vb, mask_fn, cfg, qp)
+        )
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_fwd(
+    params,
+    x: jax.Array,
+    cfg: AttnConfig,
+    *,
+    positions: jax.Array,
+    mode: str = "train",           # train | decode
+    cache: Optional[Dict] = None,  # {"k": (B,S,KV,D), "v": ..., "len": scalar}
+    prefix_len: Optional[int] = None,  # PrefixLM: bidirectional prefix
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B = x.shape[0]
+    h, kv, d = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = x @ params["wq"]
+    kx = x @ params["wk"]
+    vx = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, kx, vx = q + params["bq"], kx + params["bk"], vx + params["bv"]
+    q = hint(q.reshape(B, -1, h, d), "batch", None, "heads_q", None)
+    kx = hint(kx.reshape(B, -1, kv, d), "batch", None, "kv_heads", None)
+    vx = hint(vx.reshape(B, -1, kv, d), "batch", None, "kv_heads", None)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    kx = apply_rope(kx, positions, theta=cfg.rope_theta)
+
+    if mode == "decode":
+        assert cache is not None
+        idx = positions[0] if positions.ndim > 1 else positions  # (Sq,)
+        if "pos" in cache:
+            # ring buffer for windowed layers: O(window) memory at any context
+            W = cache["k"].shape[1]
+            slot = idx[0] % W
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kx.astype(cache["k"].dtype), slot, axis=1
+            )
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vx.astype(cache["v"].dtype), slot, axis=1
+            )
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], idx.astype(cache["pos"].dtype), slot, axis=0
+            )
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+            def mask_fn(qpos, kidx):
+                kp = cpos[kidx]  # absolute positions of ring slots
+                m = (qpos[:, None] >= kp[None, :]) & (kp[None, :] >= 0)
+                if cfg.window is not None:
+                    m &= kp[None, :] > qpos[:, None] - cfg.window
+                return m
+
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kx.astype(cache["k"].dtype), idx[0], axis=1
+            )
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vx.astype(cache["v"].dtype), idx[0], axis=1
+            )
+            new_cache = {"k": ck, "v": cv}
+
+            def mask_fn(qpos, kpos):
+                m = qpos[:, None] >= kpos[None, :]
+                if cfg.window is not None:
+                    m &= kpos[None, :] > qpos[:, None] - cfg.window
+                return m
+
+        out = _online_softmax_chunked(q, ck, cv, mask_fn, cfg, idx)
+    else:
+        new_cache = None
+        if cfg.causal_skip and prefix_len is None:
+            out = _causal_skip_attention(q, kx, vx, cfg, positions[0] if positions.ndim > 1 else positions)
+        else:
+            qpos = positions[0] if positions.ndim > 1 else positions
+
+            def mask_fn(qp, kp):
+                m = qp[:, None] >= kp[None, :]
+                if prefix_len is not None:
+                    # PrefixLM: full attention within the prefix
+                    m |= (qp[:, None] < prefix_len) & (kp[None, :] < prefix_len)
+                if cfg.window is not None:
+                    win_ok = kp[None, :] > qp[:, None] - cfg.window
+                    if prefix_len is not None:
+                        win_ok |= (qp[:, None] < prefix_len) & (
+                            kp[None, :] < prefix_len
+                        )
+                    m &= win_ok
+                return m
+
+            out = _online_softmax_chunked(q, kx, vx, mask_fn, cfg, qpos)
+    out = out.reshape(B, -1, h * d)
+    return out @ params["wo"], new_cache
+
+
+def cross_attention_fwd(params, x, memory, cfg: AttnConfig):
+    """Encoder-decoder cross attention (whisper). memory: (B, Sm, d_model)."""
+    B = x.shape[0]
+    h, kv, d = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, -1, h, d)
+    k = (memory @ params["wk"]).reshape(B, -1, kv, d)
+    v = (memory @ params["wv"]).reshape(B, -1, kv, d)
+
+    def mask_fn(qp, kp):
+        return jnp.ones((qp.shape[0], kp.shape[0]), bool)
+
+    qpos = jnp.arange(x.shape[1])
+    out = _online_softmax_chunked(q, k, v, mask_fn, cfg, qpos)
+    return out.reshape(B, -1, h * d) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseFFNConfig:
+    """SET sparse FFN (the paper's technique in the LM zoo, DESIGN.md §3)."""
+
+    epsilon: float = 64.0
+    block_m: int = 128
+    block_n: int = 128
+    activation: str = "all_relu"
+    alpha: float = 0.6
+    density: Optional[float] = None  # overrides epsilon if set
+
+
+def init_gated_ffn(key, d_model, d_ff, dtype, activation="silu"):
+    ks = jax.random.split(key, 3)
+    params = {
+        "wi_gate": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+        "wi_up": dense_init(ks[1], (d_model, d_ff), d_model, dtype),
+        "wo": dense_init(ks[2], (d_ff, d_model), d_ff, dtype),
+    }
+    specs = {
+        "wi_gate": ("embed", "mlp"),
+        "wi_up": ("embed", "mlp"),
+        "wo": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def gated_ffn_fwd(params, x, activation="silu"):
+    act = activation_fn(activation)
+    g = act(hint(x @ params["wi_gate"], "batch", None, "mlp"), 1)
+    u = hint(x @ params["wi_up"], "batch", None, "mlp")
+    return (g * u) @ params["wo"]
+
+
+def init_plain_ffn(key, d_model, d_ff, dtype):
+    """2-layer MLP with biases (whisper-style)."""
+    ks = jax.random.split(key, 2)
+    params = {
+        "fc1": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "fc2": dense_init(ks[1], (d_ff, d_model), d_ff, dtype),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+    specs = {"fc1": ("embed", "mlp"), "b1": ("mlp",), "fc2": ("mlp", "embed"), "b2": ("embed",)}
+    return params, specs
+
+
+def plain_ffn_fwd(params, x, activation="gelu"):
+    act = activation_fn(activation)
+    return act(x @ params["fc1"] + params["b1"], 1) @ params["fc2"] + params["b2"]
+
+
+def init_sparse_ffn(
+    rng: np.random.Generator, d_model, d_ff, sc: SparseFFNConfig, dtype
+):
+    """Block-sparse W_in/W_out with host topologies. Returns
+    (params, specs, topologies, metas)."""
+    meta_in = BlockMeta(d_model, d_ff, sc.block_m, sc.block_n)
+    meta_out = BlockMeta(d_ff, d_model, sc.block_m, sc.block_n)
+    if sc.density is not None:
+        t_in = BlockTopology.erdos_renyi(meta_in, sc.density, rng)
+        t_out = BlockTopology.erdos_renyi(meta_out, sc.density, rng)
+    else:
+        t_in = BlockTopology.from_epsilon(meta_in, sc.epsilon, rng)
+        t_out = BlockTopology.from_epsilon(meta_out, sc.epsilon, rng)
+    params = {
+        "win": t_in.init_values(rng, dtype=dtype),
+        "wout": t_out.init_values(rng, dtype=dtype),
+    }
+    specs = {"win": ("blocks", None, None), "wout": ("blocks", None, None)}
+    return params, specs, (t_in, t_out), (meta_in, meta_out)
+
+
+def sparse_ffn_fwd(params, topo_in, topo_out, metas, x, sc: SparseFFNConfig, layer_index: int):
+    meta_in, meta_out = metas
+    act = activation_fn(sc.activation, alpha=sc.alpha)
+    h = kops.bsmm_xla(x, params["win"], topo_in, meta_in)
+    h = act(h, layer_index)
+    return kops.bsmm_xla(h, params["wout"], topo_out, meta_out)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab, d_model, dtype):
+    p = {"table": dense_init(key, (vocab, d_model), d_model, dtype)}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    return x @ params["table"].T

@@ -1,0 +1,172 @@
+"""Mamba-1 block (falcon-mamba-7b) — TPU-adapted selective SSM.
+
+Adaptation notes (DESIGN.md §2): the CUDA selective-scan kernel fuses the
+recurrence in SRAM; on TPU we (a) shard d_inner on the 'model' axis — SSM
+channels are independent, so the recurrence needs *zero* collectives — and
+(b) run a chunked scan: an outer lax.scan carries the (B, d_inner, d_state)
+state across chunks while an inner associative scan parallelizes within the
+chunk, bounding the materialized (B, c, d_inner, d_state) tensor to one chunk.
+
+FLOPs are dominated by in/out projections, which is where the paper's SET
+block sparsity applies (they are plain linears).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.axes import hint
+from repro.models.layers import dense_init
+
+__all__ = ["MambaConfig", "init_mamba_block", "mamba_fwd", "mamba_decode_step", "init_mamba_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int            # expand * d_model (falcon-mamba: 2 * 4096)
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0        # 0 -> d_model // 16
+    chunk: int = 256
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+
+def init_mamba_block(key, cfg: MambaConfig, dtype):
+    ks = jax.random.split(key, 6)
+    d, di, ds, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.rank
+    params = {
+        "in_proj": dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, di), cfg.d_conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, r + 2 * ds), di, dtype),
+        "dt_proj": dense_init(ks[3], (r, di), r, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(~0.01)
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        ).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), di, dtype),
+    }
+    specs = {
+        "in_proj": ("embed", "inner2"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"),
+        "dt_bias": ("inner",),
+        "a_log": ("inner", None),
+        "d_skip": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+    return params, specs
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv, width K. x: (B,S,di), w: (K,di).
+    init_state: (B, K-1, di) previous inputs for decode continuity."""
+    K = w.shape[0]
+    if init_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return y + b, xp[:, -(K - 1) :]  # new conv state
+
+
+def _ssm_chunked(u, delta, Bc, Cc, A, h0, chunk):
+    """Selective scan.  u,delta: (B,S,di); Bc,Cc: (B,S,ds); A: (di,ds);
+    h0: (B,di,ds). Returns y (B,S,di), hT."""
+    B, S, di = u.shape
+    ds = A.shape[-1]
+    c = min(chunk, S)
+    n_chunks = -(-S // c)
+    pad = n_chunks * c - S
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+
+    uc = u.reshape(B, n_chunks, c, di).transpose(1, 0, 2, 3)
+    dc = delta.reshape(B, n_chunks, c, di).transpose(1, 0, 2, 3)
+    bc = Bc.reshape(B, n_chunks, c, ds).transpose(1, 0, 2, 3)
+    cc = Cc.reshape(B, n_chunks, c, ds).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, xs):
+        ub, db, bb, cb = xs  # (B, c, di) / (B, c, ds)
+        da = hint(jnp.exp(db[..., None] * A), "batch", None, "inner", None)
+        dbu = db[..., None] * bb[:, :, None, :] * ub[..., None]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (da, dbu), axis=1)
+        h_all = a_sc * h[:, None] + b_sc                      # (B,c,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", h_all, cb)
+        return h_all[:, -1], y
+
+    # recompute the chunk recurrence in backward instead of saving the
+    # (B, c, d_inner, d_state) intermediates for every chunk step
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    hT, yc = jax.lax.scan(chunk_body, h0, (uc, dc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3).reshape(B, n_chunks * c, di)[:, :S]
+    return y, hT
+
+
+def mamba_fwd(
+    params,
+    x: jax.Array,
+    cfg: MambaConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence (train/prefill) forward. state carries (ssm, conv)."""
+    B, S, _ = x.shape
+    di, ds, r = cfg.d_inner, cfg.d_state, cfg.rank
+    xz = hint(x @ params["in_proj"], "batch", None, "inner2")
+    xp, z = jnp.split(xz, 2, axis=-1)
+    xp = hint(xp, "batch", None, "inner")
+    z = hint(z, "batch", None, "inner")
+    conv_state = state["conv"] if state else None
+    xp, new_conv = _causal_conv(xp, params["conv_w"], params["conv_b"], conv_state)
+    xp = jax.nn.silu(xp)
+
+    xdb = (xp @ params["x_proj"]).astype(jnp.float32)
+    dt, Bc, Cc = jnp.split(xdb, [r, r + ds], axis=-1)
+    delta = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"])
+    h0 = (
+        state["ssm"].astype(jnp.float32)
+        if state
+        else jnp.zeros((B, di, ds), jnp.float32)
+    )
+    y, hT = _ssm_chunked(
+        xp.astype(jnp.float32), delta, Bc, Cc, A, h0, cfg.chunk
+    )
+    y = y + params["d_skip"] * xp.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_state = (
+        {"ssm": hT.astype(jnp.float32), "conv": new_conv} if state is not None else None
+    )
+    return out, new_state
+
+
+def init_mamba_state(cfg: MambaConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode_step(params, x, cfg: MambaConfig, state: Dict):
+    """x: (B, 1, d). O(1) state update."""
+    return mamba_fwd(params, x, cfg, state=state)

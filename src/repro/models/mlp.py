@@ -1,0 +1,169 @@
+"""The paper's SET-MLP: truly sparse multilayer perceptron.
+
+Layer l computes  h = act_l(h @ W_l + b_l)  where W_l is stored ONLY as its
+live connections (ElementTopology COO — the paper-faithful path) or as live
+MXU blocks (BlockTopology — the TPU path). The activation is All-ReLU with
+the paper's 1-based hidden-layer parity; the output layer is linear.
+
+The forward/step functions are pure (jit-able); all topology mutation happens
+host-side in the trainer between epochs, matching the paper's protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.all_relu import activation_fn
+from repro.core.sparsity import (
+    BlockMeta,
+    BlockTopology,
+    ElementTopology,
+    element_spmm,
+)
+from repro.kernels import ops as kops
+
+__all__ = ["SparseMLPConfig", "SparseMLP", "mlp_forward", "cross_entropy_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseMLPConfig:
+    layer_dims: Tuple[int, ...]  # (in, h1, ..., hk, out)
+    epsilon: float = 20.0
+    activation: str = "all_relu"
+    alpha: float = 0.6
+    dropout: float = 0.3
+    init: str = "he_uniform"
+    impl: str = "element"  # element | block | masked | dense
+    block_m: int = 128
+    block_n: int = 128
+    dtype: str = "float32"
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_dims) - 1
+
+
+class SparseMLP:
+    """Host-side model container: topologies (host) + parameters (device)."""
+
+    def __init__(self, config: SparseMLPConfig, seed: int = 0):
+        self.config = config
+        rng = np.random.default_rng(seed)
+        dtype = jnp.dtype(config.dtype)
+        self.topos: List[object] = []
+        self.values: List[jax.Array] = []
+        self.biases: List[jax.Array] = []
+        for l in range(config.n_layers):
+            n_in, n_out = config.layer_dims[l], config.layer_dims[l + 1]
+            if config.impl == "element":
+                topo = ElementTopology.erdos_renyi(n_in, n_out, config.epsilon, rng)
+                vals = topo.init_values(rng, dtype=dtype, scheme=config.init)
+            elif config.impl == "block":
+                meta = BlockMeta(n_in, n_out, config.block_m, config.block_n)
+                topo = BlockTopology.from_epsilon(meta, config.epsilon, rng)
+                vals = topo.init_values(rng, dtype=dtype, scheme=config.init)
+            elif config.impl in ("masked", "dense"):
+                topo = None
+                if config.impl == "masked":
+                    topo = ElementTopology.erdos_renyi(
+                        n_in, n_out, config.epsilon, rng
+                    )
+                from repro.core.sparsity import _init_numpy
+
+                w = _init_numpy(
+                    rng, (n_in, n_out), fan_in_dense=n_in, scheme=config.init
+                )
+                vals = jnp.asarray(w, dtype)
+            else:
+                raise ValueError(config.impl)
+            self.topos.append(topo)
+            self.values.append(vals)
+            self.biases.append(jnp.zeros((n_out,), dtype))
+
+    # -- views for the pure step functions ---------------------------------
+
+    def params(self):
+        return {"values": tuple(self.values), "biases": tuple(self.biases)}
+
+    def topo_arrays(self):
+        cfg = self.config
+        if cfg.impl == "element":
+            return tuple(t.device_arrays() for t in self.topos)
+        if cfg.impl == "block":
+            return tuple(t.device_arrays() for t in self.topos)
+        if cfg.impl == "masked":
+            return tuple(
+                jnp.asarray(t.to_dense(jnp.ones(t.nnz, jnp.dtype(cfg.dtype))))
+                for t in self.topos
+            )
+        return tuple(None for _ in self.topos)
+
+    def set_params(self, params) -> None:
+        self.values = list(params["values"])
+        self.biases = list(params["biases"])
+
+    @property
+    def n_params(self) -> int:
+        cfg = self.config
+        total = sum(int(b.size) for b in self.biases)
+        if cfg.impl == "element":
+            total += sum(t.nnz for t in self.topos)
+        elif cfg.impl == "block":
+            total += sum(int(np.count_nonzero(np.asarray(v))) for v in self.values)
+        elif cfg.impl == "masked":
+            total += sum(t.nnz for t in self.topos)
+        else:
+            total += sum(int(v.size) for v in self.values)
+        return total
+
+
+def mlp_forward(
+    params,
+    topo_arrays,
+    x: jax.Array,
+    config: SparseMLPConfig,
+    *,
+    train: bool = False,
+    rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Pure forward; returns logits."""
+    act = activation_fn(config.activation, alpha=config.alpha)
+    h = x
+    n_layers = config.n_layers
+    for l in range(n_layers):
+        vals = params["values"][l]
+        bias = params["biases"][l]
+        out_dim = config.layer_dims[l + 1]
+        if config.impl == "element":
+            rows, cols = topo_arrays[l].rows, topo_arrays[l].cols
+            h = element_spmm(h, vals, rows, cols, out_dim) + bias
+        elif config.impl == "block":
+            meta = BlockMeta(
+                config.layer_dims[l], out_dim, config.block_m, config.block_n
+            )
+            h = kops.bsmm_xla(h, vals, topo_arrays[l], meta) + bias
+        elif config.impl == "masked":
+            h = h @ (vals * topo_arrays[l]) + bias
+        else:  # dense
+            h = h @ vals + bias
+        if l < n_layers - 1:  # hidden layers only (paper: exclude output)
+            h = act(h, l + 1)  # paper's 1-based layer parity
+            if train and config.dropout > 0:
+                assert rng is not None
+                rng, sub = jax.random.split(rng)
+                keep = 1.0 - config.dropout
+                mask = jax.random.bernoulli(sub, keep, h.shape)
+                h = jnp.where(mask, h / keep, 0.0)
+    return h
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    return nll.mean()
+

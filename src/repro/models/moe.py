@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN with grouped sort-based dispatch (static shapes).
+
+Dispatch is O(T·k·d) gather/scatter, organized in ``groups`` independent
+token groups aligned with the data-parallel sharding: each group sorts and
+capacity-buckets ONLY its own tokens (no cross-shard sort), producing
+(G, E, C, d) expert buffers sharded G->data, E->experts. GSPMD then lowers
+the group<->expert resharding to the canonical MoE all-to-all. Overflow
+beyond capacity C = ceil(T_g*k*cf/E) is dropped (standard capacity-factor
+semantics; the aux loss pushes the router toward balance).
+
+Sharding: 'experts' -> model axis when E % |model| == 0 (qwen3, EP), else
+expert hidden dim 'expert_mlp' -> model (mixtral, TP-in-expert).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.all_relu import activation_fn
+from repro.launch.axes import hint
+from repro.models.layers import dense_init
+
+__all__ = ["MoEConfig", "init_moe", "moe_fwd"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                      # per-expert hidden
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    router_aux_weight: float = 0.01
+    norm_topk_prob: bool = True    # qwen3 renormalizes top-k gates
+    groups: int = 1                # data-parallel dispatch groups
+
+
+def init_moe(key, cfg: MoEConfig, dtype):
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    params = {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),
+        "wi_gate": dense_init(ks[1], (e, d, f), d, dtype),
+        "wi_up": dense_init(ks[2], (e, d, f), d, dtype),
+        "wo": dense_init(ks[3], (e, f, d), f, dtype),
+    }
+    specs = {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "expert_mlp"),
+        "wi_up": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+    return params, specs
+
+
+def moe_fwd(params, x: jax.Array, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., d). Returns (y, aux_loss)."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    E, K = cfg.n_experts, cfg.top_k
+    G = max(1, math.gcd(cfg.groups, T))
+    Tg = T // G
+    C = max(1, int(math.ceil(Tg * K * cfg.capacity_factor / E)))
+
+    xg = hint(xt.reshape(G, Tg, d), "data_groups", None, None)
+    logits = (xg @ params["router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)        # (G, Tg, E)
+    gate, eidx = jax.lax.top_k(probs, K)           # (G, Tg, K)
+    if cfg.norm_topk_prob:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * mean_e f_e * p_e (global mean)
+    me = probs.mean(axis=(0, 1))
+    fe = jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(fe * me)
+
+    # --- grouped sort-based dispatch (per-group local; no cross-shard sort) --
+    flat_e = eidx.reshape(G, Tg * K)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), K)[None], (G, Tg * K)
+    )
+    flat_g = gate.reshape(G, Tg * K)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    seg_start = jax.vmap(lambda s: jnp.searchsorted(s, jnp.arange(E)))(se)
+    pos_in_e = jnp.arange(Tg * K)[None] - jnp.take_along_axis(seg_start, se, axis=-1)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)   # overflow -> scratch row
+
+    def scatter_group(xt_g, slot_g, st_g, keep_g):
+        buf = jnp.zeros((E * C + 1, d), xt_g.dtype)
+        vals = jnp.where(keep_g[:, None], xt_g[st_g], 0)
+        return buf.at[slot_g].set(vals)[: E * C]
+
+    buf = jax.vmap(scatter_group)(xg, slot, st, keep)   # (G, E*C, d)
+    xe = hint(buf.reshape(G, E, C, d), "data_groups", "experts", None, None)
+
+    act = activation_fn(cfg.activation)
+    g = act(hint(jnp.einsum("gecd,edf->gecf", xe, params["wi_gate"]),
+                 "data_groups", "experts", None, "expert_mlp"), 1)
+    u = hint(jnp.einsum("gecd,edf->gecf", xe, params["wi_up"]),
+             "data_groups", "experts", None, "expert_mlp")
+    ye = hint(jnp.einsum("gecf,efd->gecd", g * u, params["wo"]),
+              "data_groups", "experts", None, None)     # (G, E, C, d)
+
+    # --- combine --------------------------------------------------------------
+    def combine_group(ye_g, slot_g, st_g, keep_g, sg_g):
+        flat_y = ye_g.reshape(E * C, d)
+        contrib = jnp.where(
+            keep_g[:, None], flat_y[jnp.clip(slot_g, 0, E * C - 1)], 0
+        ) * sg_g[:, None].astype(flat_y.dtype)
+        return jnp.zeros((Tg, d), flat_y.dtype).at[st_g].add(contrib)
+
+    y = jax.vmap(combine_group)(ye, slot, st, keep, sg)  # (G, Tg, d)
+    y = hint(y, "data_groups", None, None)
+    return y.reshape(*lead, d), aux

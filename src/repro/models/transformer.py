@@ -1,0 +1,612 @@
+"""PatternLM — unified pattern-scan language model covering the whole zoo.
+
+An architecture is a repeating ``pattern`` of block kinds:
+
+  'global'  full causal GQA attention + FFN     (qwen, internlm, paligemma, ...)
+  'local'   sliding-window GQA attention + FFN  (gemma local layers, mixtral SWA)
+  'mamba'   Mamba-1 SSM block (no FFN)          (falcon-mamba)
+  'rglru'   RG-LRU recurrent block + FFN        (recurrentgemma)
+
+``n_layers = n_rep * len(pattern) + remainder``: the repeated patterns run
+under one ``lax.scan`` over stacked params (HLO size O(pattern), compile time
+independent of depth); remainder layers run unrolled. FFN per block is
+'gated' (dense baseline), 'sparse' (the paper's SET block-sparse FFN +
+All-ReLU), or 'moe'. Decode threads per-slot stacked caches through the same
+scan. Gradient checkpointing wraps the scan body (remat policy configurable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsity import BlockMeta, BlockTopoArrays
+from repro.launch.axes import hint
+from repro.models import layers as L
+from repro.models.griffin import RGLRUConfig, init_rglru_block, init_rglru_state, rglru_fwd
+from repro.models.mamba import (
+    MambaConfig,
+    init_mamba_block,
+    init_mamba_state,
+    mamba_fwd,
+)
+from repro.models.moe import MoEConfig, init_moe, moe_fwd
+
+PyTree = Any
+
+__all__ = ["ModelConfig", "PatternLM", "chunked_softmax_xent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int = 0
+    n_kv: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    pattern: Tuple[str, ...] = ("global",)
+    window: int = 4096
+    softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_theta_local: Optional[float] = None   # gemma3: local layers 10k, global 1M
+    norm: str = "rms"
+    tied_embeddings: bool = True
+    embed_scale: bool = False                  # gemma: x *= sqrt(d_model)
+    post_norms: bool = False                   # gemma2/3 post-attn/ffn norms
+    activation: str = "silu"
+    ffn: str = "gated"                         # gated | sparse | moe | none
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    moe_groups: int = 1   # data-parallel dispatch groups (launcher sets = DP)
+    # ssm / rnn
+    d_inner: int = 0
+    d_state: int = 16
+    d_rnn: int = 0
+    # sparse FFN (the paper's technique)
+    sparse_epsilon: float = 64.0
+    sparse_block: int = 128
+    sparse_alpha: float = 0.6
+    sparse_density: Optional[float] = None
+    # vlm / enc-dec hooks
+    prefix_len: int = 0                        # paligemma image-prefix tokens
+    # runtime
+    dtype: str = "bfloat16"
+    kv_chunk: int = 1024
+    causal_skip: bool = False
+    ssm_chunk: int = 256
+    remat: str = "block"                       # block | none
+    decode_window_cache: bool = True           # ring buffers for local layers
+
+    # -- derived -------------------------------------------------------------
+
+    @property
+    def n_rep(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def remainder(self) -> int:
+        return self.n_layers - self.n_rep * len(self.pattern)
+
+    def attn_cfg(self, kind: str) -> L.AttnConfig:
+        theta = self.rope_theta
+        if kind == "local" and self.rope_theta_local is not None:
+            theta = self.rope_theta_local
+        return L.AttnConfig(
+            n_heads=self.n_heads,
+            n_kv=self.n_kv,
+            head_dim=self.head_dim,
+            d_model=self.d_model,
+            qkv_bias=self.qkv_bias,
+            softcap=self.softcap,
+            window=self.window if kind == "local" else None,
+            rope_theta=theta,
+            kv_chunk=self.kv_chunk,
+            causal_skip=self.causal_skip,
+        )
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(
+            n_experts=self.n_experts,
+            top_k=self.top_k,
+            d_model=self.d_model,
+            d_ff=self.expert_d_ff,
+            activation=self.activation,
+            groups=self.moe_groups,
+        )
+
+    def mamba_cfg(self) -> MambaConfig:
+        return MambaConfig(
+            d_model=self.d_model,
+            d_inner=self.d_inner,
+            d_state=self.d_state,
+            chunk=self.ssm_chunk,
+        )
+
+    def rglru_cfg(self) -> RGLRUConfig:
+        return RGLRUConfig(
+            d_model=self.d_model, d_rnn=self.d_rnn, chunk=self.ssm_chunk
+        )
+
+    def sparse_cfg(self) -> L.SparseFFNConfig:
+        return L.SparseFFNConfig(
+            epsilon=self.sparse_epsilon,
+            block_m=self.sparse_block,
+            block_n=self.sparse_block,
+            activation="all_relu",
+            alpha=self.sparse_alpha,
+            density=self.sparse_density,
+        )
+
+
+# ---------------------------------------------------------------------------
+# block init / fwd
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, np_rng: Optional[np.random.Generator]):
+    """Returns (params, specs, topos|None, metas|None)."""
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    params: Dict[str, PyTree] = {}
+    specs: Dict[str, PyTree] = {}
+    topos = metas = None
+
+    def add_norm(name):
+        p, s = L.init_rmsnorm(cfg.d_model, dtype) if cfg.norm == "rms" else L.init_layernorm(cfg.d_model, dtype)
+        params[name], specs[name] = p, s
+
+    if kind in ("global", "local"):
+        add_norm("ln1")
+        params["attn"], specs["attn"] = L.init_attention(ks[0], cfg.attn_cfg(kind), dtype)
+        if cfg.post_norms:
+            add_norm("post_attn")
+        add_norm("ln2")
+        if cfg.post_norms:
+            add_norm("post_ffn")
+    elif kind == "mamba":
+        add_norm("ln1")
+        params["mamba"], specs["mamba"] = init_mamba_block(ks[1], cfg.mamba_cfg(), dtype)
+        return params, specs, None, None
+    elif kind == "rglru":
+        add_norm("ln1")
+        params["rglru"], specs["rglru"] = init_rglru_block(ks[2], cfg.rglru_cfg(), dtype)
+        add_norm("ln2")
+    else:
+        raise ValueError(kind)
+
+    # FFN
+    if cfg.ffn == "gated":
+        params["ffn"], specs["ffn"] = L.init_gated_ffn(ks[3], cfg.d_model, cfg.d_ff, dtype, cfg.activation)
+    elif cfg.ffn == "moe":
+        params["ffn"], specs["ffn"] = init_moe(ks[4], cfg.moe_cfg(), dtype)
+    elif cfg.ffn == "sparse":
+        p, s, topos, metas = L.init_sparse_ffn(
+            np_rng, cfg.d_model, cfg.d_ff, cfg.sparse_cfg(), dtype
+        )
+        params["ffn"], specs["ffn"] = p, s
+    else:
+        raise ValueError(cfg.ffn)
+    return params, specs, topos, metas
+
+
+def _norm(cfg, p, x):
+    return L.rmsnorm(p, x) if cfg.norm == "rms" else L.layernorm(p, x)
+
+
+def _block_fwd(
+    cfg: ModelConfig,
+    kind: str,
+    params,
+    h,
+    *,
+    positions,
+    layer_index,
+    mode: str,
+    cache,
+    topo: Optional[Tuple[BlockTopoArrays, BlockTopoArrays]],
+    metas,
+    prefix_len,
+):
+    """One residual block. Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("global", "local"):
+        acfg = cfg.attn_cfg(kind)
+        a, new_cache = L.attention_fwd(
+            params["attn"], _norm(cfg, params["ln1"], h), acfg,
+            positions=positions, mode=mode, cache=cache, prefix_len=prefix_len,
+        )
+        if cfg.post_norms:
+            a = _norm(cfg, params["post_attn"], a)
+        h = h + a
+        f_in = _norm(cfg, params["ln2"], h)
+        if cfg.ffn == "gated":
+            f = L.gated_ffn_fwd(params["ffn"], f_in, cfg.activation)
+        elif cfg.ffn == "moe":
+            f, aux = moe_fwd(params["ffn"], f_in, cfg.moe_cfg())
+        else:  # sparse
+            f = L.sparse_ffn_fwd(
+                params["ffn"], topo[0], topo[1], metas, f_in,
+                cfg.sparse_cfg(), layer_index,
+            )
+        if cfg.post_norms:
+            f = _norm(cfg, params["post_ffn"], f)
+        return h + f, new_cache, aux
+    if kind == "mamba":
+        m, new_state = mamba_fwd(
+            params["mamba"], _norm(cfg, params["ln1"], h), cfg.mamba_cfg(),
+            state=cache,
+        )
+        return h + m, new_state, aux
+    if kind == "rglru":
+        r, new_state = rglru_fwd(
+            params["rglru"], _norm(cfg, params["ln1"], h), cfg.rglru_cfg(),
+            state=cache,
+        )
+        h = h + r
+        f_in = _norm(cfg, params["ln2"], h)
+        if cfg.ffn == "sparse":
+            f = L.sparse_ffn_fwd(
+                params["ffn"], topo[0], topo[1], metas, f_in,
+                cfg.sparse_cfg(), layer_index,
+            )
+        elif cfg.ffn == "moe":
+            f, aux = moe_fwd(params["ffn"], f_in, cfg.moe_cfg())
+        else:
+            f = L.gated_ffn_fwd(params["ffn"], f_in, cfg.activation)
+        return h + f, new_state, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class PatternLM:
+    """Builds params/specs/topologies; exposes pure forward fns.
+
+    ``abstract=True`` builds params as ShapeDtypeStructs via jax.eval_shape —
+    the multi-pod dry-run constructs 100B+-param models without allocating a
+    byte. Host-side topology metadata (sparse FFN) is always concrete.
+    """
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0, abstract: bool = False):
+        self.cfg = cfg
+        self._seed = seed
+        self.topologies: Dict[str, List] = {}
+        self.block_metas: Optional[Tuple[BlockMeta, BlockMeta]] = None
+        self.specs: Dict[str, PyTree] = {}
+        if abstract:
+            self.params = jax.eval_shape(self._build)
+        else:
+            self.params = self._build()
+
+    def _build(self) -> Dict[str, PyTree]:
+        cfg = self.cfg
+        seed = self._seed
+        key = jax.random.PRNGKey(seed)
+        np_rng = np.random.default_rng(seed)
+        dtype = jnp.dtype(cfg.dtype)
+        kE, kU, key = jax.random.split(key, 3)[0:3]
+        self.topologies = {}
+        params: Dict[str, PyTree] = {}
+        self.specs = {}
+        p, s = L.init_embedding(kE, cfg.vocab, cfg.d_model, dtype)
+        params["embed"], self.specs["embed"] = p, s
+        p, s = (
+            L.init_rmsnorm(cfg.d_model, dtype)
+            if cfg.norm == "rms"
+            else L.init_layernorm(cfg.d_model, dtype)
+        )
+        params["final_norm"], self.specs["final_norm"] = p, s
+        if not cfg.tied_embeddings:
+            params["unembed"] = L.dense_init(
+                kU, (cfg.d_model, cfg.vocab), cfg.d_model, dtype
+            )
+            self.specs["unembed"] = ("embed", "vocab")
+
+        # stacked pattern params
+        P = len(cfg.pattern)
+        stack_params, stack_specs = {}, {}
+        for s_idx, kind in enumerate(cfg.pattern):
+            slot = f"s{s_idx}_{kind}"
+            per_layer = []
+            slot_topos = []
+            for r in range(cfg.n_rep):
+                key, sub = jax.random.split(key)
+                pr, sp, topos, metas = _init_block(sub, cfg, kind, np_rng)
+                per_layer.append(pr)
+                if topos is not None:
+                    slot_topos.append(topos)
+                    self.block_metas = metas
+            stack_params[slot] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_layer
+            )
+            stack_specs[slot] = jax.tree.map(
+                lambda spec: ("stack",) + tuple(spec),
+                sp,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x
+                ),
+            )
+            if slot_topos:
+                self.topologies[slot] = slot_topos
+        params["stack"] = stack_params
+        self.specs["stack"] = stack_specs
+
+        # remainder blocks (unrolled)
+        rest_params, rest_specs = [], []
+        for i in range(cfg.remainder):
+            kind = cfg.pattern[i % P]
+            key, sub = jax.random.split(key)
+            pr, sp, topos, metas = _init_block(sub, cfg, kind, np_rng)
+            rest_params.append(pr)
+            rest_specs.append(sp)
+            if topos is not None:
+                self.topologies[f"rest{i}"] = [topos]
+                self.block_metas = metas
+        params["rest"] = rest_params
+        self.specs["rest"] = rest_specs
+        return params
+
+    # -- topology device views ---------------------------------------------
+
+    def topo_arrays(self):
+        """Stacked BlockTopoArrays per slot (or None if not sparse)."""
+        if not self.topologies:
+            return None
+        out = {}
+        for slot, topos in self.topologies.items():
+            ins = [t[0].device_arrays() for t in topos]
+            outs = [t[1].device_arrays() for t in topos]
+            out[slot] = (
+                jax.tree.map(lambda *xs: jnp.stack(xs), *ins),
+                jax.tree.map(lambda *xs: jnp.stack(xs), *outs),
+            )
+        return out
+
+    # -- forward -------------------------------------------------------------
+
+    def forward(
+        self,
+        params,
+        tokens: jax.Array,
+        *,
+        topo=None,
+        positions: Optional[jax.Array] = None,
+        mode: str = "train",
+        caches=None,
+        prefix_embeds: Optional[jax.Array] = None,
+        return_hidden: bool = False,
+    ):
+        """tokens: (B, S). prefix_embeds: (B, Sp, d) VLM patch embeddings.
+        Returns (hidden_or_logits, new_caches, aux)."""
+        cfg = self.cfg
+        h = L.embed(params["embed"], tokens)
+        if cfg.embed_scale:
+            h = h * jnp.asarray(
+                np.sqrt(cfg.d_model), h.dtype
+            )
+        prefix_len = None
+        if prefix_embeds is not None:
+            h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+            prefix_len = prefix_embeds.shape[1]
+        elif cfg.prefix_len and mode != "decode":
+            prefix_len = cfg.prefix_len
+        S = h.shape[1]
+        if positions is None:
+            positions = jnp.arange(S)
+
+        P = len(cfg.pattern)
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches: Dict[str, PyTree] = {}
+
+        # --- stacked pattern scan ---
+        def pattern_body(carry, xs):
+            h, aux = carry
+            # 'act' maps to the model axis by default: the (L, B, S, d)
+            # activation stacks the layer scan saves for backward are then
+            # model-sharded (16x smaller per chip) at the cost of one h
+            # all-gather per layer — see EXPERIMENTS.md §Perf.
+            h = hint(h, "batch", None, "act")
+            # (§Perf refuted hypothesis: an extra gather-once hint here made
+            # collective bytes +2% — GSPMD already CSEs the per-consumer
+            # gathers of the act-sharded carry. Reverted.)
+            slot_params, slot_topo, slot_cache, rep_idx = xs
+            new_slot_cache = {}
+            for s_idx, kind in enumerate(cfg.pattern):
+                slot = f"s{s_idx}_{kind}"
+                layer_index = rep_idx * P + s_idx + 1  # 1-based (paper parity)
+                h, nc, aux_b = _block_fwd(
+                    cfg, kind, slot_params[slot], h,
+                    positions=positions, layer_index=layer_index, mode=mode,
+                    cache=None if slot_cache is None else slot_cache[slot],
+                    topo=None if slot_topo is None else slot_topo[slot],
+                    metas=self.block_metas, prefix_len=prefix_len,
+                )
+                if nc is not None:
+                    new_slot_cache[slot] = nc
+                aux = aux + aux_b
+            h, aux = jax.lax.optimization_barrier((h, aux))
+            return (h, aux), new_slot_cache
+
+        body = pattern_body
+        if cfg.remat == "block" and mode == "train":
+            body = jax.checkpoint(pattern_body, prevent_cse=True)
+
+        stack_topo = None
+        if topo is not None:
+            stack_topo = {
+                slot: topo[slot]
+                for slot in params["stack"]
+                if slot in topo
+            } or None
+        stack_cache = None if caches is None else caches.get("stack")
+        xs = (
+            params["stack"],
+            stack_topo,
+            stack_cache,
+            jnp.arange(cfg.n_rep),
+        )
+        if cfg.n_rep > 0:
+            (h, aux_total), scan_caches = jax.lax.scan(
+                body, (h, aux_total), xs
+            )
+            if mode == "decode":
+                new_caches["stack"] = scan_caches
+
+        # --- remainder blocks ---
+        if mode == "decode":
+            new_caches.setdefault("rest", [])
+        for i in range(cfg.remainder):
+            kind = cfg.pattern[i % P]
+            layer_index = cfg.n_rep * P + i + 1
+            rest_topo = None
+            if topo is not None and f"rest{i}" in topo:
+                t = topo[f"rest{i}"]
+                rest_topo = jax.tree.map(lambda a: a[0], t)
+            cache_i = None if caches is None else caches["rest"][i]
+            h, nc, aux_b = _block_fwd(
+                cfg, kind, params["rest"][i], h,
+                positions=positions, layer_index=layer_index, mode=mode,
+                cache=cache_i,
+                topo=rest_topo, metas=self.block_metas, prefix_len=prefix_len,
+            )
+            aux_total = aux_total + aux_b
+            if mode == "decode":
+                new_caches.setdefault("rest", []).append(nc)
+
+        h = _norm(cfg, params["final_norm"], h)
+        if return_hidden:
+            return h, (new_caches or None), aux_total
+        logits = self.logits(params, h)
+        return logits, (new_caches or None), aux_total
+
+    def logits(self, params, h):
+        cfg = self.cfg
+        if cfg.tied_embeddings:
+            out = L.unembed(params["embed"], h)
+        else:
+            out = h @ params["unembed"]
+        if cfg.final_softcap:
+            out = jnp.tanh(out / cfg.final_softcap) * cfg.final_softcap
+        return out
+
+    # -- caches ----------------------------------------------------------------
+
+    def init_caches(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        """Decode caches: full KV for global slots, ring buffers for local,
+        recurrent states for mamba/rglru. Stacked along n_rep per slot."""
+        cfg = self.cfg
+
+        def one(kind):
+            if kind == "global":
+                return {
+                    "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+                    "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+                }
+            if kind == "local":
+                w = min(cfg.window, max_len) if cfg.decode_window_cache else max_len
+                c = {
+                    "k": jnp.zeros((batch, w, cfg.n_kv, cfg.head_dim), dtype),
+                    "v": jnp.zeros((batch, w, cfg.n_kv, cfg.head_dim), dtype),
+                }
+                if cfg.decode_window_cache:
+                    c["pos"] = jnp.full((w,), -1, jnp.int32)
+                return c
+            if kind == "mamba":
+                return init_mamba_state(cfg.mamba_cfg(), batch, dtype)
+            if kind == "rglru":
+                return init_rglru_state(cfg.rglru_cfg(), batch, dtype)
+            raise ValueError(kind)
+
+        stack = {}
+        for s_idx, kind in enumerate(cfg.pattern):
+            slot = f"s{s_idx}_{kind}"
+            c = one(kind)
+            stack[slot] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_rep,) + a.shape), c
+            )
+        rest = [one(cfg.pattern[i % len(cfg.pattern)]) for i in range(cfg.remainder)]
+        return {"stack": stack, "rest": rest}
+
+    def cache_specs(self):
+        """Logical axes for cache arrays (for dry-run shardings)."""
+        cfg = self.cfg
+
+        def one(kind):
+            if kind in ("global", "local"):
+                c = {
+                    "k": ("batch", "cache_seq", "kv_heads", None),
+                    "v": ("batch", "cache_seq", "kv_heads", None),
+                }
+                if kind == "local" and cfg.decode_window_cache:
+                    c["pos"] = (None,)
+                return c
+            if kind == "mamba":
+                return {"ssm": ("batch", "inner", None), "conv": ("batch", None, "inner")}
+            if kind == "rglru":
+                return {"rnn": ("batch", "inner"), "conv": ("batch", None, "inner")}
+            raise ValueError(kind)
+
+        stack = {}
+        for s_idx, kind in enumerate(cfg.pattern):
+            slot = f"s{s_idx}_{kind}"
+            stack[slot] = jax.tree.map(
+                lambda spec: (None,) + tuple(spec),
+                one(kind),
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(e, (str, type(None))) for e in x),
+            )
+        rest = [one(cfg.pattern[i % len(cfg.pattern)]) for i in range(cfg.remainder)]
+        return {"stack": stack, "rest": rest}
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(
+    model: PatternLM, params, h: jax.Array, labels: jax.Array, chunk: int = 512
+) -> jax.Array:
+    """CE over the vocab without materializing (B, S, V) at once: scan over
+    sequence chunks; within a chunk the (B, c, V) logits stay vocab-sharded
+    under GSPMD until the logsumexp reduce."""
+    B, S, _ = h.shape
+    c = min(chunk, S)
+    n_chunks = -(-S // c)
+    pad = n_chunks * c - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(B, n_chunks, c, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, c).transpose(1, 0, 2)
+
+    def body(tot, xs):
+        hx, lx = xs
+        logits = hint(
+            model.logits(params, hx).astype(jnp.float32), "batch", None, "vocab"
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lx >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return tot + nll.sum(), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    n_valid = jnp.maximum((labels >= 0).sum(), 1)
+    return tot / n_valid

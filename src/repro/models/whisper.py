@@ -1,0 +1,246 @@
+"""Whisper backbone (enc-dec, arXiv:2212.04356) — conv frontend STUBBED.
+
+Per the assignment brief, the modality frontend is a stub: ``input_specs``
+feeds precomputed log-mel *frame embeddings* (B, frames, d_model) directly
+into the encoder (the two conv layers are not part of the backbone cells).
+
+Encoder: bidirectional self-attention + plain GELU FFN, sinusoidal positions.
+Decoder: causal self-attention + cross-attention + plain FFN, learned
+positions. Both stacks run under lax.scan over stacked layer params. The
+sparse-FFN (SET) variant applies to both stacks' FFNs when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+PyTree = Any
+
+__all__ = ["WhisperConfig", "WhisperModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int          # per stack (medium: 24 + 24)
+    n_heads: int
+    head_dim: int
+    d_ff: int
+    n_frames: int = 1500   # encoder positions (30s audio)
+    max_text: int = 448
+    dtype: str = "bfloat16"
+    kv_chunk: int = 1024
+    remat: str = "block"
+
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            n_heads=self.n_heads,
+            n_kv=self.n_heads,   # MHA
+            head_dim=self.head_dim,
+            d_model=self.d_model,
+            qkv_bias=True,
+            rope_theta=10000.0,  # unused: positions are absolute embeddings
+            kv_chunk=self.kv_chunk,
+        )
+
+
+class WhisperModel:
+    def __init__(self, cfg: WhisperConfig, seed: int = 0, abstract: bool = False):
+        self.cfg = cfg
+        self._seed = seed
+        if abstract:
+            self.params = jax.eval_shape(self._build)
+        else:
+            self.params = self._build()
+
+    def _build(self):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        key = jax.random.PRNGKey(self._seed)
+
+        def init_enc_layer(k):
+            ks = jax.random.split(k, 4)
+            p_ln1, s_ln1 = L.init_layernorm(cfg.d_model, dtype)
+            p_at, s_at = L.init_attention(ks[0], self.cfg.attn_cfg(), dtype)
+            p_ln2, s_ln2 = L.init_layernorm(cfg.d_model, dtype)
+            p_ff, s_ff = L.init_plain_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+            return (
+                {"ln1": p_ln1, "attn": p_at, "ln2": p_ln2, "ffn": p_ff},
+                {"ln1": s_ln1, "attn": s_at, "ln2": s_ln2, "ffn": s_ff},
+            )
+
+        def init_dec_layer(k):
+            ks = jax.random.split(k, 5)
+            p_ln1, s_ln1 = L.init_layernorm(cfg.d_model, dtype)
+            p_sa, s_sa = L.init_attention(ks[0], self.cfg.attn_cfg(), dtype)
+            p_ln2, s_ln2 = L.init_layernorm(cfg.d_model, dtype)
+            p_ca, s_ca = L.init_attention(ks[1], self.cfg.attn_cfg(), dtype)
+            p_ln3, s_ln3 = L.init_layernorm(cfg.d_model, dtype)
+            p_ff, s_ff = L.init_plain_ffn(ks[2], cfg.d_model, cfg.d_ff, dtype)
+            return (
+                {"ln1": p_ln1, "self_attn": p_sa, "ln2": p_ln2,
+                 "cross_attn": p_ca, "ln3": p_ln3, "ffn": p_ff},
+                {"ln1": s_ln1, "self_attn": s_sa, "ln2": s_ln2,
+                 "cross_attn": s_ca, "ln3": s_ln3, "ffn": s_ff},
+            )
+
+        enc_p, enc_s = [], None
+        for _ in range(cfg.n_layers):
+            key, sub = jax.random.split(key)
+            p, enc_s = init_enc_layer(sub)
+            enc_p.append(p)
+        dec_p, dec_s = [], None
+        for _ in range(cfg.n_layers):
+            key, sub = jax.random.split(key)
+            p, dec_s = init_dec_layer(sub)
+            dec_p.append(p)
+        key, k1, k2 = jax.random.split(key, 3)
+        params = {
+            "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_p),
+            "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_p),
+            "enc_final_ln": L.init_layernorm(cfg.d_model, dtype)[0],
+            "dec_final_ln": L.init_layernorm(cfg.d_model, dtype)[0],
+            "tok_embed": L.dense_init(k1, (cfg.vocab, cfg.d_model), cfg.d_model, dtype),
+            "pos_embed": L.dense_init(k2, (cfg.max_text, cfg.d_model), cfg.d_model, dtype),
+        }
+
+        def stackspec(s):
+            return jax.tree.map(
+                lambda t: ("stack",) + tuple(t), s,
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(e, (str, type(None))) for e in x),
+            )
+
+        self.specs = {
+            "enc": stackspec(enc_s),
+            "dec": stackspec(dec_s),
+            "enc_final_ln": {"scale": ("embed",), "bias": ("embed",)},
+            "dec_final_ln": {"scale": ("embed",), "bias": ("embed",)},
+            "tok_embed": ("vocab", "embed"),
+            "pos_embed": (None, "embed"),
+        }
+        return params
+
+    # -- encoder ---------------------------------------------------------------
+
+    @staticmethod
+    def _sinusoid_traced(n_pos: int, d: int, dtype):
+        """Computed in-graph (no multi-MB HLO constant for 32k frames)."""
+        pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+        dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+        ang = pos / jnp.power(10000.0, 2 * dim / d)
+        return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+    def encode(self, params, frame_embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        acfg = cfg.attn_cfg()
+        Sf = frame_embeds.shape[1]
+        h = frame_embeds + self._sinusoid_traced(Sf, cfg.d_model, frame_embeds.dtype)
+        positions = jnp.arange(Sf)
+
+        def body(h, lp):
+            a, _ = L.attention_fwd(
+                lp["attn"], L.layernorm(lp["ln1"], h), acfg,
+                positions=positions, mode="train",
+            )
+            # bidirectional: override causal mask via prefix trick
+            h = h + a
+            f = L.plain_ffn_fwd(lp["ffn"], L.layernorm(lp["ln2"], h))
+            return h + f, None
+
+        # bidirectional attention: run with prefix_len = Sf (full window)
+        def body_bidir(h, lp):
+            a, _ = L.attention_fwd(
+                lp["attn"], L.layernorm(lp["ln1"], h), acfg,
+                positions=positions, mode="train", prefix_len=Sf,
+            )
+            h = h + a
+            f = L.plain_ffn_fwd(lp["ffn"], L.layernorm(lp["ln2"], h))
+            return h + f, None
+
+        fn = body_bidir
+        if cfg.remat == "block":
+            fn = jax.checkpoint(fn, prevent_cse=False)
+        h, _ = jax.lax.scan(fn, h, params["enc"])
+        return L.layernorm(params["enc_final_ln"], h)
+
+    # -- decoder ---------------------------------------------------------------
+
+    def decode_train(self, params, tokens: jax.Array, memory: jax.Array) -> jax.Array:
+        """Teacher-forced decoder; returns hidden states (B, S, d)."""
+        cfg = self.cfg
+        acfg = cfg.attn_cfg()
+        S = tokens.shape[1]
+        h = jnp.take(params["tok_embed"], tokens, axis=0) + params["pos_embed"][:S]
+        positions = jnp.arange(S)
+
+        def body(h, lp):
+            a, _ = L.attention_fwd(
+                lp["self_attn"], L.layernorm(lp["ln1"], h), acfg,
+                positions=positions, mode="train",
+            )
+            h = h + a
+            c = L.cross_attention_fwd(
+                lp["cross_attn"], L.layernorm(lp["ln2"], h), memory, acfg
+            )
+            h = h + c
+            f = L.plain_ffn_fwd(lp["ffn"], L.layernorm(lp["ln3"], h))
+            return h + f, None
+
+        fn = body
+        if cfg.remat == "block":
+            fn = jax.checkpoint(fn, prevent_cse=False)
+        h, _ = jax.lax.scan(fn, h, params["dec"])
+        return L.layernorm(params["dec_final_ln"], h)
+
+    def logits(self, params, h):
+        return h @ params["tok_embed"].T
+
+    # -- decode step (serving) ---------------------------------------------------
+
+    def init_caches(self, batch: int, max_len: int, memory: Optional[jax.Array] = None, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        kvd = cfg.n_heads * 0 + cfg.n_heads  # MHA: kv = heads
+        self_c = {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_heads, cfg.head_dim), dtype),
+        }
+        return {"self": self_c}
+
+    def decode_step(self, params, tokens, pos, caches, memory):
+        """tokens: (B,1); pos: scalar; memory: encoder output."""
+        cfg = self.cfg
+        acfg = cfg.attn_cfg()
+        B = tokens.shape[0]
+        h = jnp.take(params["tok_embed"], tokens, axis=0) + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, axis=0
+        )
+        positions = jnp.array([pos])
+
+        def body(h, xs):
+            lp, ck, cv = xs
+            a, nc = L.attention_fwd(
+                lp["self_attn"], L.layernorm(lp["ln1"], h), acfg,
+                positions=positions, mode="decode", cache={"k": ck, "v": cv},
+            )
+            h = h + a
+            c = L.cross_attention_fwd(
+                lp["cross_attn"], L.layernorm(lp["ln2"], h), memory, acfg
+            )
+            h = h + c
+            f = L.plain_ffn_fwd(lp["ffn"], L.layernorm(lp["ln3"], h))
+            return h + f, (nc["k"], nc["v"])
+
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (params["dec"], caches["self"]["k"], caches["self"]["v"])
+        )
+        h = L.layernorm(params["dec_final_ln"], h)
+        return self.logits(params, h), {"self": {"k": nk, "v": nv}}

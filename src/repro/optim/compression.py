@@ -1,0 +1,87 @@
+"""Top-k sparse gradient compression with error feedback (Stich et al. 2018).
+
+The paper (§Parallel Training of Sparse Networks) observes that sparse models
+get sparse gradient communication "automatically"; for the *dense* baselines
+and for shrinking WASAP sync payloads further, classic memory-compensated
+top-k sparsification is provided:
+
+    acc    = error_memory + grad
+    sel    = top-k(|acc|)             (k = ceil(rate * n))
+    send   = acc * sel                (values + int32 indices on the wire)
+    error_memory' = acc - send
+
+Payload per tensor = k * (4 + 4) bytes vs n * 4 — at rate=0.01 a 100x
+reduction. ``compress``/``decompress`` are jit-able; the wire format is a
+(values, indices, shape) triple per leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["TopKCompressor", "CompressedLeaf"]
+
+
+class CompressedLeaf(NamedTuple):
+    values: jax.Array    # (k,)
+    indices: jax.Array   # (k,) int32 into the flattened tensor
+    size: int            # original flattened size (static)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    rate: float = 0.01
+    min_k: int = 1
+
+    def init_error(self, grads: PyTree) -> PyTree:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def _k(self, n: int) -> int:
+        return max(self.min_k, int(self.rate * n))
+
+    def compress(
+        self, grads: PyTree, error: PyTree
+    ) -> Tuple[PyTree, PyTree]:
+        """Returns (compressed pytree of CompressedLeaf, new error memory)."""
+
+        def one(g, e):
+            flat = g.reshape(-1).astype(jnp.float32) + e.reshape(-1)
+            k = self._k(flat.size)
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            vals = flat[idx]
+            new_e = flat.at[idx].set(0.0).reshape(g.shape)
+            return CompressedLeaf(vals, idx.astype(jnp.int32), flat.size), new_e
+
+        leaves, treedef = jax.tree.flatten(grads)
+        err_leaves = jax.tree.leaves(error)
+        outs = [one(g, e) for g, e in zip(leaves, err_leaves)]
+        comp = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return comp, new_err
+
+    def decompress(self, comp: PyTree, like: PyTree) -> PyTree:
+        def one(c, g):
+            flat = jnp.zeros((c.size,), jnp.float32).at[c.indices].set(c.values)
+            return flat.reshape(g.shape).astype(g.dtype)
+
+        return jax.tree.map(
+            one, comp, like,
+            is_leaf=lambda x: isinstance(x, CompressedLeaf),
+        )
+
+    @staticmethod
+    def payload_bytes(comp: PyTree) -> int:
+        leaves = [
+            l for l in jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, CompressedLeaf))
+            if isinstance(l, CompressedLeaf)
+        ]
+        return sum(int(l.values.size) * 8 for l in leaves)
+
+    @staticmethod
+    def dense_bytes(grads: PyTree) -> int:
+        return sum(int(g.size) * 4 for g in jax.tree.leaves(grads))

@@ -1,0 +1,163 @@
+"""Optimizers & LR schedules.
+
+Momentum SGD implements paper Eq. (1):
+
+    W_{t+1} = W_t + mu * (W_t - W_{t-1}) - eta * grad_t
+
+in velocity form (v_t = W_t - W_{t-1}):  v <- mu*v - eta*g;  W <- W + v.
+Weight decay is added to the gradient (decoupled=False matches the paper's
+classic formulation). Operates on arbitrary pytrees so the same optimizer
+drives the sparse-MLP values and the LM parameter trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "MomentumSGD",
+    "SGDState",
+    "constant_lr",
+    "warmup_linear_scaled_lr",
+    "step_decay_lr",
+    "adamw",
+    "AdamWState",
+]
+
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    velocity: PyTree
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentumSGD:
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+
+    def init(self, params: PyTree) -> SGDState:
+        vel = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return SGDState(velocity=vel, step=jnp.zeros((), jnp.int32))
+
+    def update(
+        self, grads: PyTree, state: SGDState, params: PyTree, lr
+    ) -> Tuple[PyTree, SGDState]:
+        mu, wd = self.momentum, self.weight_decay
+
+        def upd(v, g, p):
+            g = g.astype(jnp.float32) + wd * p.astype(jnp.float32)
+            return mu * v - lr * g
+
+        vel = jax.tree.map(upd, state.velocity, grads, params)
+        new_params = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) + v).astype(p.dtype), params, vel
+        )
+        return new_params, SGDState(velocity=vel, step=state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (for the LM training driver; not used by the paper's MLP experiments)
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class adamw:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(
+        self, grads: PyTree, state: AdamWState, params: PyTree, lr
+    ) -> Tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, n):
+            u = (m / c1) / (jnp.sqrt(n / c2) + self.eps)
+            return (p.astype(jnp.float32) - lr * (u + self.weight_decay * p)).astype(
+                p.dtype
+            )
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(mu=mu, nu=nu, step=step)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_lr(lr: float) -> Callable[[int], float]:
+    return lambda step: lr
+
+
+def warmup_linear_scaled_lr(
+    base_lr: float, k_workers: int, warmup_steps: int
+) -> Callable[[int], float]:
+    """Goyal et al. (2017): linear scaling rule (lr * K) with gradual warmup.
+    Used by WASSP-SGD (the synchronous variant) per paper §2.3."""
+    target = base_lr * k_workers
+
+    def sched(step):
+        frac = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        return base_lr + frac * (target - base_lr)
+
+    return sched
+
+
+def large_then_fixed_lr(
+    base_lr: float, boost: float, boost_steps: int
+) -> Callable[[int], float]:
+    """WASAP-SGD's observed best recipe (paper §2.3): larger LR for the first
+    few epochs of the async phase, then fixed."""
+
+    def sched(step):
+        return jnp.where(step < boost_steps, base_lr * boost, base_lr)
+
+    return sched
+
+
+def step_decay_lr(base_lr: float, decay: float, every: int) -> Callable[[int], float]:
+    def sched(step):
+        return base_lr * (decay ** (step // every))
+
+    return sched
+
+
+def cosine_lr(base_lr: float, total_steps: int, warmup: int = 0):
+    def sched(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup)) if warmup else 1.0
+        prog = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+        return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+    return sched

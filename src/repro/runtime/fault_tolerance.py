@@ -1,0 +1,146 @@
+"""Fault tolerance & elasticity for multi-pod training (DESIGN.md §5).
+
+Pieces:
+  * HeartbeatMonitor — per-worker liveness with deadlines; classifies nodes
+    as healthy / straggling / dead from heartbeat age (driver-side; in a real
+    deployment heartbeats arrive over the coordination service).
+  * StragglerPolicy — WASAP-inspired mitigation: a straggler's contribution
+    is *stale but valid* (RetainValidUpdates) rather than blocking the sync
+    point; beyond `evict_after` missed beats the worker is evicted and the
+    run goes elastic.
+  * ElasticPlan — recompute the mesh when the healthy-device count changes:
+    keep the model axis fixed (TP degree is a property of the model), shrink
+    the data axis to the largest supported size, and rescale global batch.
+    Restore is checkpoint-based: CheckpointManager manifests carry sharding
+    metadata, so arrays re-shard onto the new mesh on load.
+  * retry_step — transient-failure wrapper (preemption/ICI flap): retries a
+    step function with exponential backoff, reloading from the latest
+    checkpoint on persistent failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "HeartbeatMonitor",
+    "StragglerPolicy",
+    "ElasticPlan",
+    "plan_elastic_mesh",
+    "retry_step",
+]
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    soft_deadline_s: float = 30.0     # beyond this: straggling (don't block)
+    hard_deadline_s: float = 300.0    # beyond this: dead
+    evict_after: int = 3              # consecutive hard misses -> evict
+
+
+class HeartbeatMonitor:
+    def __init__(self, worker_ids: List[str], policy: StragglerPolicy,
+                 clock: Callable[[], float] = time.monotonic):
+        self.policy = policy
+        self.clock = clock
+        now = clock()
+        self.last_beat: Dict[str, float] = {w: now for w in worker_ids}
+        self.misses: Dict[str, int] = {w: 0 for w in worker_ids}
+        self.evicted: set = set()
+
+    def beat(self, worker_id: str) -> None:
+        if worker_id in self.evicted:
+            return
+        self.last_beat[worker_id] = self.clock()
+        self.misses[worker_id] = 0
+
+    def classify(self) -> Dict[str, str]:
+        now = self.clock()
+        out = {}
+        for w, t in self.last_beat.items():
+            if w in self.evicted:
+                out[w] = "evicted"
+                continue
+            age = now - t
+            if age > self.policy.hard_deadline_s:
+                self.misses[w] += 1
+                self.last_beat[w] = now  # restart the window
+                if self.misses[w] >= self.policy.evict_after:
+                    self.evicted.add(w)
+                    out[w] = "evicted"
+                else:
+                    out[w] = "dead"
+            elif age > self.policy.soft_deadline_s:
+                out[w] = "straggling"
+            else:
+                out[w] = "healthy"
+        return out
+
+    @property
+    def healthy_count(self) -> int:
+        return sum(1 for s in self.classify().values() if s in ("healthy", "straggling"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    pods: int
+    global_batch: int
+    note: str
+
+    @property
+    def n_devices(self) -> int:
+        return self.data * self.model * max(1, self.pods)
+
+
+def plan_elastic_mesh(
+    healthy_devices: int,
+    *,
+    model_axis: int = 16,
+    per_replica_batch: int = 16,
+    min_data: int = 1,
+) -> ElasticPlan:
+    """Largest (pods*data) x model mesh that fits the healthy device count.
+    Model axis is preserved (resharding TP state is cheap only along data)."""
+    if healthy_devices < model_axis * min_data:
+        raise RuntimeError(
+            f"only {healthy_devices} healthy devices; need >= {model_axis * min_data}"
+        )
+    data_total = healthy_devices // model_axis
+    # prefer powers of two for collective efficiency
+    d = 1
+    while d * 2 <= data_total:
+        d *= 2
+    pods, data = (d // 16, 16) if d >= 32 else (1, d)
+    return ElasticPlan(
+        data=data,
+        model=model_axis,
+        pods=pods,
+        global_batch=d * per_replica_batch,
+        note=f"elastic: {healthy_devices} healthy -> mesh ({pods}x{data}x{model_axis})",
+    )
+
+
+def retry_step(
+    fn: Callable,
+    *args,
+    retries: int = 3,
+    backoff_s: float = 0.1,
+    on_failure: Optional[Callable[[int, BaseException], None]] = None,
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Run fn with retry/backoff; on_failure(attempt, err) between attempts
+    (e.g. to restore from checkpoint or rebuild the mesh)."""
+    err: Optional[BaseException] = None
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args)
+        except Exception as e:  # noqa: BLE001
+            err = e
+            if on_failure is not None:
+                on_failure(attempt, e)
+            if attempt < retries:
+                sleep(backoff_s * (2 ** attempt))
+    raise err

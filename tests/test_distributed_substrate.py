@@ -1,0 +1,146 @@
+"""Checkpoint manager, fault tolerance, gradient compression behaviour."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim.compression import TopKCompressor
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerPolicy,
+    plan_elastic_mesh,
+    retry_step,
+)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def tree():
+    return {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.bfloat16)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, async_write=False)
+    t = tree()
+    mgr.save(7, t, topologies={"l0": {"rows": np.array([1, 2])}}, meta={"k": 1})
+    params, topos, manifest = mgr.restore(like=t)
+    np.testing.assert_array_equal(np.asarray(params["a"]), np.asarray(t["a"]))
+    assert params["nested"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(topos["l0"]["rows"], [1, 2])
+    assert manifest["step"] == 7 and manifest["meta"]["k"] == 1
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree())
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async_write_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=3, async_write=True)
+    mgr.save(1, tree())
+    mgr.wait()
+    assert mgr.latest_step() == 1
+    # mutation after snapshot must not corrupt the saved copy
+    t = tree()
+    mgr.save(2, t)
+    mgr.wait()
+    params, _, _ = mgr.restore(step=2, like=t)
+    np.testing.assert_array_equal(np.asarray(params["a"]), np.arange(12.0).reshape(3, 4))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_classification_and_eviction():
+    clock = [0.0]
+    pol = StragglerPolicy(soft_deadline_s=10, hard_deadline_s=100, evict_after=2)
+    mon = HeartbeatMonitor(["a", "b"], pol, clock=lambda: clock[0])
+    assert mon.classify() == {"a": "healthy", "b": "healthy"}
+    clock[0] = 50.0
+    mon.beat("a")
+    assert mon.classify() == {"a": "healthy", "b": "straggling"}
+    clock[0] = 200.0   # b misses hard deadline (1st)
+    mon.beat("a")
+    assert mon.classify()["b"] == "dead"
+    clock[0] = 400.0   # 2nd hard miss -> evicted
+    mon.beat("a")
+    assert mon.classify()["b"] == "evicted"
+    assert mon.healthy_count == 1
+
+
+def test_elastic_plan_shrinks_data_axis():
+    p = plan_elastic_mesh(512, model_axis=16, per_replica_batch=16)
+    assert p.n_devices == 512 and p.pods == 2 and p.data == 16
+    p = plan_elastic_mesh(511, model_axis=16, per_replica_batch=16)
+    assert p.n_devices == 256  # largest power-of-two data axis that fits
+    assert p.global_batch == 256
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh(8, model_axis=16)
+
+
+def test_retry_step_recovers_then_raises():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, retries=3, sleep=lambda s: None) == "ok"
+
+    def always_fails():
+        raise RuntimeError("permanent")
+
+    seen = []
+    with pytest.raises(RuntimeError):
+        retry_step(
+            always_fails, retries=2, sleep=lambda s: None,
+            on_failure=lambda a, e: seen.append(a),
+        )
+    assert seen == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_topk_compression_error_feedback_converges():
+    comp = TopKCompressor(rate=0.25)
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)), jnp.float32)}
+    err = comp.init_error(g)
+    total = jax.tree.map(jnp.zeros_like, g)
+    # summed decompressed updates + final error == summed gradients (EF identity)
+    sent = jax.tree.map(jnp.zeros_like, g)
+    for _ in range(5):
+        c, err = comp.compress(g, err)
+        d = comp.decompress(c, g)
+        sent = jax.tree.map(lambda a, b: a + b, sent, d)
+        total = jax.tree.map(lambda a, b: a + b, total, g)
+    recon = jax.tree.map(lambda s, e: s + e, sent, err)
+    np.testing.assert_allclose(
+        np.asarray(recon["w"]), np.asarray(total["w"]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_topk_payload_much_smaller():
+    comp = TopKCompressor(rate=0.01)
+    g = {"w": jnp.zeros((1000, 100))}
+    err = comp.init_error(g)
+    c, _ = comp.compress(g, err)
+    assert comp.payload_bytes(c) < 0.05 * comp.dense_bytes(g)

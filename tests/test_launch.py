@@ -1,0 +1,138 @@
+"""Sharding rules, input specs, HLO analysis, and a tiny-mesh end-to-end
+sharded train step (the launch substrate without the 512-device sweep —
+that runs via ``python -m repro.launch.dryrun``; see experiments/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import specs as specs_mod
+from repro.launch.analytic import model_flops
+from repro.launch.hlo_analysis import HloModule, analyze_hlo
+from repro.launch.sharding import ShardingRules, default_rules, shape_aware_shardings
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    n = jax.device_count()
+    if n < 2:
+        pytest.skip("needs >= 2 host devices (tests run under conftest default)")
+    return jax.make_mesh((2, n // 2), ("data", "model"))
+
+
+def test_rules_no_double_axis(mesh):
+    rules = default_rules(mesh, batch_size=4)
+    # two dims that both want 'model' — second must be dropped
+    spec = rules.pspec(("mlp", "vocab"))
+    axes = [a for a in spec if a is not None]
+    assert len(axes) == len(set(axes))
+
+
+def test_shape_aware_drops_nondivisible(mesh):
+    rules = default_rules(mesh, batch_size=4)
+    sds = {"w": jax.ShapeDtypeStruct((7, 8), jnp.float32)}
+    sh = shape_aware_shardings(rules, {"w": ("vocab", "embed")}, sds)
+    assert sh["w"].spec[0] is None  # 7 not divisible by model axis
+
+
+def test_batch_rule_replicates_tiny_batch(mesh):
+    rules = default_rules(mesh, batch_size=1)  # long_500k style
+    assert rules.pspec(("batch",)) == P(None)
+    rules = default_rules(mesh, batch_size=4)
+    assert rules.pspec(("batch",))[0] == "data"
+
+
+def test_input_specs_cover_all_cells():
+    from repro.launch.dryrun import build_model
+
+    for arch in configs.list_archs():
+        spec = configs.get_spec(arch)
+        model = build_model(spec, abstract=True)
+        for shape_id, ok in spec.shapes.items():
+            if ok is not True:
+                continue
+            inputs, logical = specs_mod.input_specs(spec, shape_id, model)
+            # same tree structure
+            jax.tree.map(
+                lambda a, b: None, inputs, logical,
+                is_leaf=lambda x: isinstance(x, tuple) or x is None
+                or hasattr(x, "shape"),
+            )
+            mf = model_flops(spec, shape_id)
+            assert mf["model_flops"] > 0
+
+
+HLO_SAMPLE = """
+HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %y = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %y)
+}
+
+%cond (pc: (s32[], f32[8,8])) -> pred[] {
+  %pc = (s32[], f32[8,8]) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_analysis_multiplies_while_trip_counts():
+    res = analyze_hlo(HLO_SAMPLE)
+    # one 8x8x8 dot per iteration, 5 iterations
+    assert res["flops"] == pytest.approx(5 * 2 * 8 * 8 * 8)
+
+
+def test_hlo_trip_count_parse():
+    m = HloModule(HLO_SAMPLE)
+    assert m.trip_count("cond") == 5
+    counts = m.execution_counts()
+    assert counts["body"] == 5
+
+
+def test_sharded_train_step_on_host_mesh(mesh):
+    """End-to-end: jit train step with in/out shardings on a 2x(N/2) mesh."""
+    from repro.launch import steps as steps_mod
+    from repro.launch.axes import logical_axis_rules
+    from repro.models.transformer import PatternLM
+    from repro.optim.sgd import SGDState
+
+    spec = configs.get_spec("qwen1.5-0.5b")
+    model = PatternLM(spec.smoke, seed=0)
+    rules = default_rules(mesh, batch_size=4)
+    param_sh = shape_aware_shardings(rules, model.specs, model.params)
+    step_fn, opt = steps_mod.make_train_step(model, lr=0.01)
+    opt_state = opt.init(model.params)
+    opt_sh = SGDState(velocity=param_sh, step=rules.sharding(None))
+    batch = {
+        "tokens": jnp.zeros((4, 16), jnp.int32),
+        "labels": jnp.zeros((4, 16), jnp.int32),
+    }
+    topo = model.topo_arrays()
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(param_sh, opt_sh, None, None),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )
+    with mesh, logical_axis_rules(rules):
+        params = jax.device_put(model.params, param_sh)
+        params, opt_state, metrics = jitted(params, opt_state, batch, topo)
+    assert np.isfinite(float(metrics["loss"]))

@@ -1,0 +1,254 @@
+"""Numerical equivalence tests for the model substrate:
+
+* chunked online-softmax attention == naive masked softmax (causal, window,
+  softcap, GQA, prefix)
+* causal_skip attention == masked full attention
+* chunked Mamba selective scan == sequential per-step recurrence
+* chunked RG-LRU scan == sequential recurrence
+* decode with KV caches == slice of teacher-forced forward
+* MoE dispatch invariants (capacity, gate weighting, aux-loss range)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models.mamba import MambaConfig, _ssm_chunked, init_mamba_state
+from repro.models.griffin import _rglru_scan
+from repro.models.moe import MoEConfig, init_moe, moe_fwd
+from repro.models.transformer import ModelConfig, PatternLM
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    prefix_len=None, scale=None):
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    kh = jnp.repeat(k, groups, axis=2)
+    vh = jnp.repeat(v, groups, axis=2)
+    scale = scale or (1.0 / np.sqrt(D))
+    s = jnp.einsum("bqhd,bkhd->bhqk", (q * scale).astype(jnp.float32),
+                   kh.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    m = qp >= kp if causal else jnp.ones_like(qp >= kp)
+    if prefix_len is not None:
+        m = m | ((qp < prefix_len) & (kp < prefix_len))
+    if window is not None:
+        w_ok = kp > qp - window
+        if prefix_len is not None:
+            w_ok = w_ok | ((qp < prefix_len) & (kp < prefix_len))
+        m = m & w_ok
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32)).astype(q.dtype)
+
+
+def mk_qkv(seed, B=2, S=24, H=4, KV=2, D=8):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window,softcap,prefix", [
+    (None, None, None), (8, None, None), (None, 30.0, None), (None, None, 6),
+    (8, 30.0, None),
+])
+def test_chunked_attention_matches_naive(window, softcap, prefix):
+    q, k, v = mk_qkv(0)
+    cfg = L.AttnConfig(n_heads=4, n_kv=2, head_dim=8, d_model=32,
+                       window=window, softcap=softcap, kv_chunk=7)
+    positions = jnp.arange(q.shape[1])
+
+    def mask_fn(qp, kp):
+        m = qp[:, None] >= kp[None, :]
+        if prefix is not None:
+            m = m | ((qp[:, None] < prefix) & (kp[None, :] < prefix))
+        if window is not None:
+            ok = kp[None, :] > qp[:, None] - window
+            if prefix is not None:
+                ok = ok | ((qp[:, None] < prefix) & (kp[None, :] < prefix))
+            m = m & ok
+        return m
+
+    out = L._online_softmax_chunked(q, k, v, mask_fn, cfg, positions)
+    ref = naive_attention(q, k, v, window=window, softcap=softcap,
+                          prefix_len=prefix)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_causal_skip_matches_masked(window):
+    q, k, v = mk_qkv(1, S=32)
+    cfg = L.AttnConfig(n_heads=4, n_kv=2, head_dim=8, d_model=32,
+                       window=window, kv_chunk=8)
+    out = L._causal_skip_attention(q, k, v, cfg, jnp.arange(32))
+    ref = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSM / RG-LRU scans vs sequential reference
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1000), st.sampled_from([3, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_mamba_chunked_scan_matches_sequential(seed, chunk):
+    rng = np.random.default_rng(seed)
+    B, S, di, ds = 2, 13, 4, 3
+    u = jnp.asarray(rng.standard_normal((B, S, di)), jnp.float32)
+    delta = jnp.asarray(rng.random((B, S, di)) * 0.5, jnp.float32)
+    Bc = jnp.asarray(rng.standard_normal((B, S, ds)), jnp.float32)
+    Cc = jnp.asarray(rng.standard_normal((B, S, ds)), jnp.float32)
+    A = -jnp.asarray(rng.random((di, ds)) + 0.1, jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, di, ds)), jnp.float32)
+
+    y, hT = _ssm_chunked(u, delta, Bc, Cc, A, h0, chunk)
+
+    # sequential reference
+    h = np.asarray(h0)
+    ys = []
+    for t in range(S):
+        da = np.exp(np.asarray(delta)[:, t, :, None] * np.asarray(A))
+        dbu = (np.asarray(delta)[:, t, :, None] * np.asarray(Bc)[:, t, None, :]
+               * np.asarray(u)[:, t, :, None])
+        h = da * h + dbu
+        ys.append(np.einsum("bds,bs->bd", h, np.asarray(Cc)[:, t]))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), h, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 1000), st.sampled_from([2, 5, 16]))
+@settings(max_examples=10, deadline=None)
+def test_rglru_chunked_scan_matches_sequential(seed, chunk):
+    rng = np.random.default_rng(seed)
+    B, S, dr = 2, 11, 5
+    gx = jnp.asarray(rng.standard_normal((B, S, dr)), jnp.float32)
+    a_t = jnp.asarray(rng.random((B, S, dr)) * 0.9, jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, dr)), jnp.float32)
+    h_seq, hT = _rglru_scan(gx, a_t, h0, chunk)
+    h = np.asarray(h0)
+    ref = []
+    for t in range(S):
+        h = np.asarray(a_t)[:, t] * h + np.asarray(gx)[:, t]
+        ref.append(h.copy())
+    np.testing.assert_allclose(np.asarray(h_seq), np.stack(ref, 1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), h, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode == forward slice
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern", [("global",), ("local", "global"), ("mamba",),
+                                     ("rglru", "rglru", "local")])
+def test_decode_matches_teacher_forced_forward(pattern):
+    cfg = ModelConfig(
+        name="t", vocab=64, d_model=32, n_layers=2 * len(pattern),
+        n_heads=4, n_kv=2, head_dim=8, d_ff=48, pattern=pattern, window=8,
+        d_inner=64, d_state=4, d_rnn=32, dtype="float32", kv_chunk=8,
+        ssm_chunk=8, tied_embeddings=True, remat="none",
+        decode_window_cache=False,  # exact parity needs full-window cache
+    )
+    model = PatternLM(cfg, seed=0)
+    S = 12
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 64, (2, S)), jnp.int32)
+    full_logits, _, _ = model.forward(model.params, toks)
+
+    caches = model.init_caches(2, S, dtype=jnp.float32)
+    outs = []
+    for pos in range(S):
+        lg, caches, _ = model.forward(
+            model.params, toks[:, pos:pos + 1], positions=jnp.array([pos]),
+            mode="decode", caches=caches,
+        )
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, 1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_ring_cache_decode_matches_full_cache_within_window():
+    """Windowed ring cache must agree with a full cache once positions
+    beyond the window are masked anyway."""
+    cfg_full = ModelConfig(
+        name="t", vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv=2,
+        head_dim=8, d_ff=48, pattern=("local",), window=6, dtype="float32",
+        kv_chunk=8, remat="none", decode_window_cache=False,
+    )
+    cfg_ring = ModelConfig(
+        name="t", vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv=2,
+        head_dim=8, d_ff=48, pattern=("local",), window=6, dtype="float32",
+        kv_chunk=8, remat="none", decode_window_cache=True,
+    )
+    m_full = PatternLM(cfg_full, seed=0)
+    m_ring = PatternLM(cfg_ring, seed=0)
+    S = 16
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 64, (1, S)), jnp.int32)
+    c_full = m_full.init_caches(1, S, dtype=jnp.float32)
+    c_ring = m_ring.init_caches(1, S, dtype=jnp.float32)
+    for pos in range(S):
+        lf, c_full, _ = m_full.forward(m_full.params, toks[:, pos:pos+1],
+                                       positions=jnp.array([pos]), mode="decode",
+                                       caches=c_full)
+        lr, c_ring, _ = m_ring.forward(m_ring.params, toks[:, pos:pos+1],
+                                       positions=jnp.array([pos]), mode="decode",
+                                       caches=c_ring)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                                   rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4]),
+       st.sampled_from([1, 2]))
+@settings(max_examples=15, deadline=None)
+def test_moe_dispatch_invariants(seed, groups, top_k):
+    rng = np.random.default_rng(seed)
+    E, d, f, T = 4, 8, 16, 12
+    cfg = MoEConfig(n_experts=E, top_k=top_k, d_model=d, d_ff=f,
+                    capacity_factor=8.0, groups=groups)  # capacity ample
+    params, _ = init_moe(jax.random.PRNGKey(seed % 97), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    y, aux = moe_fwd(params, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert 0.0 <= float(aux) < 1.0
+    # with ample capacity, grouping must not change the result
+    cfg1 = MoEConfig(n_experts=E, top_k=top_k, d_model=d, d_ff=f,
+                     capacity_factor=8.0, groups=1)
+    y1, _ = moe_fwd(params, x, cfg1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y1), rtol=1e-4, atol=1e-5)
+
+
+def test_moe_capacity_drops_overflow():
+    E, d, f, T = 2, 4, 8, 16
+    cfg = MoEConfig(n_experts=E, top_k=1, d_model=d, d_ff=f,
+                    capacity_factor=0.25)
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((T, d)), jnp.float32)
+    y, _ = moe_fwd(params, x, cfg)
+    # capacity = ceil(16*1*0.25/2) = 2 slots/expert -> at most 4 tokens served
+    served = (np.abs(np.asarray(y)).sum(-1) > 1e-9).sum()
+    assert served <= 2 * E

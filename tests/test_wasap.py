@@ -1,0 +1,132 @@
+"""WASAP-SGD: SPMD adaptation + faithful async-PS emulation behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.core.sparsity import ElementTopology
+from repro.core.wasap import (
+    WASAPConfig,
+    WASAPTrainer,
+    sparse_average_and_resparsify,
+)
+from repro.core.wasap_ps import AsyncPSConfig, AsyncParameterServer
+from repro.data import datasets
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.train.trainer import evaluate
+
+
+def make_model_and_data(seed=0):
+    data = datasets.load("fashionmnist", scale=0.02, seed=seed)
+    cfg = SparseMLPConfig(
+        layer_dims=(data.n_features, 64, 32, data.n_classes),
+        epsilon=16, activation="all_relu", alpha=0.6, dropout=0.1, impl="element",
+    )
+    return SparseMLP(cfg, seed=seed), data
+
+
+# ---------------------------------------------------------------------------
+# final merge (Algorithm 1 line 37)
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_average_and_resparsify_union_then_prune():
+    # canonical (col,row) order: t1 slots = (0,0),(1,1),(2,2); t2 = (0,0),(2,2),(3,3)
+    t1 = ElementTopology(4, 4, np.array([0, 1, 2]), np.array([0, 1, 2]))
+    t2 = ElementTopology(4, 4, np.array([0, 3, 2]), np.array([0, 3, 2]))
+    v1 = np.array([2.0, 0.5, -1.0], np.float32)   # (0,0)=2.0 (1,1)=0.5 (2,2)=-1.0
+    v2 = np.array([4.0, -1.0, 0.2], np.float32)   # (0,0)=4.0 (2,2)=-1.0 (3,3)=0.2
+    topo, vals = sparse_average_and_resparsify([t1, t2], [v1, v2], 3)
+    assert topo.nnz == 3
+    # union has 4 slots; averages: (0,0)=3.0 (1,1)=0.25 (2,2)=-1.0 (3,3)=0.1
+    # keep 3 largest |avg| -> (0,0), (2,2), (1,1)
+    dense = np.zeros((4, 4), np.float32)
+    dense[topo.rows, topo.cols] = vals
+    assert dense[0, 0] == pytest.approx(3.0)
+    assert dense[2, 2] == pytest.approx(-1.0)
+    assert dense[1, 1] == pytest.approx(0.25)
+    assert dense[3, 3] == 0.0
+
+
+def test_sparsity_level_restored_after_averaging():
+    rng = np.random.default_rng(0)
+    topos, values = [], []
+    for k in range(4):
+        t = ElementTopology.erdos_renyi(40, 30, epsilon=8, rng=rng)
+        topos.append(t)
+        values.append(np.asarray(t.init_values(rng)))
+    target = topos[0].nnz
+    merged, vals = sparse_average_and_resparsify(topos, values, target)
+    assert merged.nnz == target  # S' >= S collapsed back to S
+    assert vals.shape == (target,)
+
+
+# ---------------------------------------------------------------------------
+# SPMD two-phase trainer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["wasap", "wassp"])
+def test_wasap_two_phase_learns(mode):
+    model, data = make_model_and_data()
+    wc = WASAPConfig(
+        n_workers=3, phase1_epochs=4, phase2_epochs=2, sync_every=3,
+        lr=0.01, zeta=0.2, mode=mode, seed=0, batch_size=16,
+    )
+    trainer = WASAPTrainer(model, data, wc)
+    hist = trainer.run()
+    assert hist["phase"][-1] == "final"
+    final_acc = hist["test_acc"][-1]
+    assert final_acc > 0.5, (mode, final_acc)  # chance = 0.1
+    # sparsity restored to the target level after SWA merge
+    assert hist["n_params"][-1] == hist["n_params"][0]
+
+
+def test_wasap_phase2_topologies_diverge_then_merge():
+    model, data = make_model_and_data(seed=1)
+    start_nnz = [t.nnz for t in model.topos]
+    wc = WASAPConfig(
+        n_workers=2, phase1_epochs=1, phase2_epochs=2, sync_every=2,
+        lr=0.03, zeta=0.3, seed=1, batch_size=16,
+    )
+    trainer = WASAPTrainer(model, data, wc)
+    trainer.run()
+    assert [t.nnz for t in model.topos] == start_nnz
+
+
+# ---------------------------------------------------------------------------
+# faithful async PS
+# ---------------------------------------------------------------------------
+
+
+def test_async_ps_trains_and_filters_stale_updates():
+    # 10-class image clone: chance accuracy = 0.1, so learning is unambiguous
+    data = datasets.load("fashionmnist", scale=0.02, seed=2)
+    cfg_m = SparseMLPConfig(
+        layer_dims=(data.n_features, 64, 32, data.n_classes),
+        epsilon=16, activation="all_relu", alpha=0.6, dropout=0.0, impl="element",
+    )
+    model = SparseMLP(cfg_m, seed=2)
+    cfg = AsyncPSConfig(
+        n_workers=3, epochs=5, lr=0.01, zeta=0.3, batch_size=16, seed=2,
+        staleness_discount=0.5,
+    )
+    ps = AsyncParameterServer(model, data, cfg)
+    stats = ps.run()
+    assert stats["updates"] == cfg.epochs * ps.steps_per_epoch
+    assert stats["evolutions"] == cfg.epochs - 1
+    acc1 = evaluate(model, data.x_test, data.y_test)
+    assert np.isfinite(acc1)
+    assert acc1 > 0.5  # far above 10-class chance despite async staleness
+    # stale gradients against evolved topologies were filtered (Alg.1 l.14)
+    assert stats["stale_entries_dropped"] > 0
+
+
+def test_async_ps_straggler_does_not_block_progress():
+    model, data = make_model_and_data(seed=3)
+    cfg = AsyncPSConfig(
+        n_workers=3, epochs=2, lr=0.03, zeta=0.3, batch_size=16, seed=3,
+        straggler_delay=0.05, staleness_discount=0.5,
+    )
+    ps = AsyncParameterServer(model, data, cfg)
+    stats = ps.run()
+    # all scheduled updates applied even with a deliberately slow worker
+    assert stats["updates"] == cfg.epochs * ps.steps_per_epoch
