@@ -25,5 +25,20 @@ def timed(fn, *args, **kw):
     return out, time.perf_counter() - t0
 
 
+# every row() call is mirrored here so the driver can emit machine-readable
+# BENCH_<section>.json alongside the CSV (perf trajectory across PRs)
+_ROWS = []
+
+
 def row(name, us_per_call, derived=""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append(
+        {"name": name, "us_per_call": float(us_per_call), "derived": derived}
+    )
+
+
+def drain_rows():
+    """Rows recorded since the last drain (driver calls this per section)."""
+    out = list(_ROWS)
+    _ROWS.clear()
+    return out

@@ -1,9 +1,15 @@
-"""Micro-benchmark: block-sparse matmul implementations vs dense.
+"""Micro-benchmark: sparse matmul implementations vs dense.
 
-On CPU this measures the XLA-native gather/einsum path and the dense matmul
-at equal *live-parameter* count; the Pallas path is validated in interpret
-mode (not timed — interpret mode is a correctness harness, not a perf one).
-Derived column reports achieved GFLOP/s and the sparse/dense ratio.
+Block granularity: on CPU this measures the XLA-native gather/einsum path and
+the dense matmul at equal *live-parameter* count; the Pallas path is validated
+in interpret mode (not timed — interpret mode is a correctness harness, not a
+perf one). Derived column reports achieved GFLOP/s and the sparse/dense ratio.
+
+Element granularity: the chunked segment-sum SpMM vs the legacy scatter-add
+formulation. Besides wall time, records each compiled executable's temp
+buffer footprint (``memory_analysis``) at two nnz sizes — the scatter path's
+peak intermediate is O(batch * nnz) while the segment path's stays
+O(batch * chunk), flat in nnz.
 """
 import time
 
@@ -12,7 +18,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
-from repro.core.sparsity import BlockMeta, BlockTopology
+from repro.core.sparsity import (
+    SPMM_CHUNK,
+    BlockMeta,
+    BlockTopology,
+    ElementTopology,
+)
 from repro.kernels import ops
 
 
@@ -25,7 +36,20 @@ def bench(fn, *args, iters=10):
     return (time.perf_counter() - t0) / iters
 
 
-def run(B=256, dim=1024, density=0.25, bm=64, seed=0):
+def _compile_with_temp_bytes(jitted, *args):
+    """AOT-compile once; returns (callable, temp-buffer footprint or None).
+    Timing the compiled callable reuses this executable instead of paying a
+    second trace through the jit cache."""
+    try:
+        compiled = jitted.lower(*args).compile()
+        stats = compiled.memory_analysis()
+        temp = None if stats is None else int(stats.temp_size_in_bytes)
+        return compiled, temp
+    except Exception:  # noqa: BLE001
+        return jitted, None
+
+
+def run_block(B=256, dim=1024, density=0.25, bm=64, seed=0):
     rng = np.random.default_rng(seed)
     meta = BlockMeta(dim, dim, bm, bm)
     topo = BlockTopology.erdos_renyi(meta, density, rng)
@@ -53,7 +77,74 @@ def run(B=256, dim=1024, density=0.25, bm=64, seed=0):
         dt_dense * 1e6,
         f"gflops={dense_flops / dt_dense / 1e9:.1f}",
     )
-    return {"sparse_s": dt_sparse, "dense_s": dt_dense}
+    return {
+        "sparse_s": dt_sparse,
+        "dense_s": dt_dense,
+        "sparse_vs_dense": dt_sparse / dt_dense,
+    }
+
+
+def run_element(B=256, dim=2048, epsilon=64, seed=0):
+    """segment-sum vs scatter element SpMM: wall time + temp-memory scaling.
+
+    Times both impls at nnz0, then re-measures compiled temp bytes at 4*nnz0:
+    the scatter temp grows ~4x (it materializes (B, nnz)) while the segment
+    temp stays flat at its (B, chunk) ceiling.
+    """
+    rng = np.random.default_rng(seed)
+    summary = {}
+    topos = {
+        "nnz0": ElementTopology.erdos_renyi(dim, dim, epsilon, rng),
+        "nnz4x": ElementTopology.erdos_renyi(dim, dim, 4 * epsilon, rng),
+    }
+    x = jnp.asarray(rng.standard_normal((B, dim)), jnp.float32)
+    for label, topo in topos.items():
+        t = topo.device_arrays()
+        vals = topo.init_values(rng)
+        fns = {
+            "segment": jax.jit(
+                lambda x, v, t=t: ops.espmm(x, v, t, dim, impl="segment")
+            ),
+            "scatter": jax.jit(
+                lambda x, v, t=t: ops.espmm(x, v, t, dim, impl="scatter")
+            ),
+        }
+        flops = 2 * B * topo.nnz
+        for impl, fn in fns.items():
+            compiled, temp = _compile_with_temp_bytes(fn, x, vals)
+            dt = bench(compiled, x, vals)
+            summary[f"{impl}_{label}_s"] = dt
+            summary[f"{impl}_{label}_temp_bytes"] = temp
+            row(
+                f"kernels/espmm_{impl}_{label}",
+                dt * 1e6,
+                f"gflops={flops / dt / 1e9:.1f};nnz={topo.nnz};"
+                f"temp_bytes={temp};batch_x_nnz={B * topo.nnz}",
+            )
+    seg0, seg4 = summary["segment_nnz0_temp_bytes"], summary["segment_nnz4x_temp_bytes"]
+    sc0, sc4 = summary["scatter_nnz0_temp_bytes"], summary["scatter_nnz4x_temp_bytes"]
+    if None not in (seg0, seg4, sc0, sc4):
+        summary["segment_temp_growth_4x_nnz"] = seg4 / max(1, seg0)
+        summary["scatter_temp_growth_4x_nnz"] = sc4 / max(1, sc0)
+        # the acceptance check: segment peak memory must not track batch*nnz
+        summary["segment_temp_flat_in_nnz"] = seg4 < 2 * seg0
+        row(
+            "kernels/espmm_temp_scaling",
+            0.0,
+            f"segment_growth={summary['segment_temp_growth_4x_nnz']:.2f};"
+            f"scatter_growth={summary['scatter_temp_growth_4x_nnz']:.2f};"
+            f"chunk={SPMM_CHUNK};segment_flat_in_nnz={summary['segment_temp_flat_in_nnz']}",
+        )
+    summary["segment_vs_scatter_time"] = (
+        summary["segment_nnz4x_s"] / summary["scatter_nnz4x_s"]
+    )
+    return summary
+
+
+def run(B=256, dim=1024, density=0.25, bm=64, seed=0):
+    out = {"block": run_block(B=B, dim=dim, density=density, bm=bm, seed=seed)}
+    out["element"] = run_element(seed=seed)
+    return out
 
 
 if __name__ == "__main__":

@@ -1,8 +1,12 @@
 """Benchmark driver — one section per paper table (+ roofline + kernels).
-Prints ``name,us_per_call,derived`` CSV rows. Default scale 'ci' fits this
-container; pass --scale small|full to approach paper scale."""
+Prints ``name,us_per_call,derived`` CSV rows and, per executed section,
+writes machine-readable ``BENCH_<section>.json`` (rows + the section's
+summary dict) so the perf trajectory is tracked across PRs."""
 import argparse
+import json
+import pathlib
 import sys
+import time
 import traceback
 
 
@@ -13,10 +17,15 @@ def main() -> None:
         "--only", default="",
         help="comma list: table2,table3,table4,table5,table6,gradient_flow,kernels,roofline",
     )
+    ap.add_argument(
+        "--json-dir", default=".",
+        help="directory for the BENCH_<section>.json files",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
+        common,
         gradient_flow,
         kernels_micro,
         roofline,
@@ -37,17 +46,38 @@ def main() -> None:
         ("kernels", lambda: kernels_micro.run()),
         ("roofline", lambda: roofline.run()),
     ]
+    json_dir = pathlib.Path(args.json_dir)
+    json_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in sections:
         if only and name not in only:
             continue
+        common.drain_rows()  # isolate this section's rows
+        # generated_unix makes stale files (e.g. sections skipped by a later
+        # --only run) distinguishable from this run's output
+        stamp = {"section": name, "scale": args.scale,
+                 "generated_unix": int(time.time())}
         try:
-            fn()
+            result = fn()
+            payload = {
+                **stamp,
+                "rows": common.drain_rows(),
+                "summary": result if isinstance(result, dict) else None,
+            }
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},0.0,ERROR", file=sys.stderr)
             traceback.print_exc()
+            # overwrite rather than leave a stale file from a previous run
+            # posing as this commit's numbers
+            payload = {
+                **stamp,
+                "error": traceback.format_exc(),
+                "rows": common.drain_rows(),
+            }
+        out = json_dir / f"BENCH_{name}.json"
+        out.write_text(json.dumps(payload, indent=2, default=str) + "\n")
     if failures:
         raise SystemExit(1)
 

@@ -33,6 +33,8 @@ __all__ = [
     "BlockTopology",
     "ElementTopology",
     "density_from_epsilon",
+    "element_spmm",
+    "element_spmm_segment",
     "erdos_renyi_nnz",
 ]
 
@@ -322,12 +324,86 @@ def element_spmm(
     """Truly sparse y = x @ W for COO W. FLOPs = 2 * B * nnz.
 
     Differentiable through the gather/scatter (XLA generates the transposed
-    scatter/gather pair for the VJP, also O(B * nnz)).
+    scatter/gather pair for the VJP, also O(B * nnz)). Materializes the full
+    (batch, nnz) contribution array — kept as the simple reference; the
+    memory-bounded default is ``element_spmm_segment`` (DESIGN.md §1).
     """
     contrib = x[..., rows] * values  # (..., nnz)
     out_shape = x.shape[:-1] + (out_dim,)
     y = jnp.zeros(out_shape, contrib.dtype)
     return y.at[..., cols].add(contrib)
+
+
+# Largest per-chunk contribution width: peak intermediate of the segment-sum
+# SpMM is (batch, SPMM_CHUNK) regardless of nnz.
+SPMM_CHUNK = 8192
+
+# "auto" impl policy: below this nnz the scatter-add formulation is faster on
+# XLA:CPU (the chunked segment reduction pays scan + transpose overhead that
+# only amortizes at scale), and its (batch, nnz) intermediate is still small;
+# above it XLA's scatter falls off a cliff (measured ~14x slower by nnz=131k)
+# and its intermediate grows unboundedly, so the segment path takes over.
+SPMM_AUTO_NNZ = 65536
+# ...and independently of nnz, switch to the memory-bounded segment path once
+# the (batch, nnz) scatter intermediate would exceed this many elements.
+SPMM_AUTO_ELEMS = 16 * 1024 * 1024
+
+
+def element_spmm_segment(
+    x: jax.Array,
+    values: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    out_dim: int,
+    *,
+    chunk: Optional[int] = None,
+) -> jax.Array:
+    """Col-sorted segment-sum SpMM (DESIGN.md §1). Same math as
+    ``element_spmm`` but the (batch, nnz) contribution array is never
+    materialized at once: nnz is processed in chunks of at most ``chunk``
+    columns via ``jax.ops.segment_sum`` under a ``lax.scan``, so peak
+    intermediate memory is O(batch * chunk) instead of O(batch * nnz).
+
+    Requires the canonical topology ordering (sorted by (col, row) —
+    ``ElementTopology`` guarantees it), which makes every chunk's segment ids
+    sorted and the segment reduction a single linear pass.
+    """
+    nnz = int(values.shape[0])
+    if chunk is None:
+        chunk = SPMM_CHUNK
+    chunk = max(1, min(int(chunk), nnz))
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    dtype = jnp.result_type(x2.dtype, values.dtype)
+
+    def one_chunk(r, c, v):
+        contrib = x2[:, r] * v  # (B, chunk)
+        return jax.ops.segment_sum(
+            contrib.T.astype(dtype), c, num_segments=out_dim,
+            indices_are_sorted=True,
+        ).T  # (B, out_dim)
+
+    n_chunks = -(-nnz // chunk)
+    if n_chunks == 1:
+        y = one_chunk(rows, cols, values)
+    else:
+        pad = n_chunks * chunk - nnz
+        # padded slots: col == out_dim (dropped by segment_sum) and value 0
+        rows_p = jnp.concatenate([rows, jnp.zeros((pad,), rows.dtype)])
+        cols_p = jnp.concatenate([cols, jnp.full((pad,), out_dim, cols.dtype)])
+        vals_p = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+        slices = (
+            rows_p.reshape(n_chunks, chunk),
+            cols_p.reshape(n_chunks, chunk),
+            vals_p.reshape(n_chunks, chunk),
+        )
+
+        def body(y, sl):
+            return y + one_chunk(*sl), None
+
+        y0 = jnp.zeros((x2.shape[0], out_dim), dtype)
+        y, _ = jax.lax.scan(body, y0, slices)
+    return y.reshape(*lead, out_dim)
 
 
 # ---------------------------------------------------------------------------

@@ -6,10 +6,19 @@ Paper Algorithm 2, weight pruning-regrowing cycle:
     (both are the weights closest to zero — the low-magnitude tail per sign)
   * add randomly new weights in the same amount
 
-Evolution runs on the host (numpy) between jitted train segments — exactly the
-paper's master-pauses-to-evolve protocol — so the jitted step never sees
-dynamic shapes. ``RetainValidUpdates`` (Algorithm 1, line 14) filters updates
-computed against a stale topology down to the entries that still exist.
+Two execution substrates implement the same cycle:
+
+* **Host (numpy)** — the original master-pauses-to-evolve protocol and the
+  oracle for tests. Arrays round-trip through the host every epoch.
+* **Device (jit)** — ``evolve_element_device`` / ``evolve_block_device``
+  (DESIGN.md §3): fixed-capacity topology arrays (nnz / n_blocks never
+  change under SET), per-sign zeta-tail pruning via stable rank computation,
+  and random regrowth by candidate vacancy sampling with ``jax.random`` —
+  all shapes static, so evolution steps never recompile and the entire
+  epoch (train segment + evolution) stays device-resident.
+
+``RetainValidUpdates`` (Algorithm 1, line 14) filters updates computed
+against a stale topology down to the entries that still exist.
 
 Block granularity (TPU adaptation, DESIGN.md §2): the prune criterion is the
 block's mean |w| (the L1 analogue of element magnitude at tile granularity);
@@ -20,16 +29,28 @@ small-weight regrowth).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparsity import BlockMeta, BlockTopology, ElementTopology
+from repro.core.sparsity import (
+    BlockMeta,
+    BlockTopoArrays,
+    BlockTopology,
+    ElementTopology,
+)
 
 __all__ = [
     "EvolutionResult",
     "evolve_element",
     "evolve_block",
+    "evolve_element_device",
+    "evolve_element_device_reference",
+    "evolve_block_device",
+    "block_device_arrays",
     "retain_valid_updates_element",
     "retain_valid_updates_block",
     "prune_indices_by_magnitude",
@@ -218,6 +239,287 @@ def retain_valid_updates_block(
     hit = sorted_new[pos] == old_flat
     out[order_new[pos[hit]]] = update_blocks[hit]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Device-resident evolution (DESIGN.md §3)
+#
+# Fixed-capacity formulation: SET keeps nnz (or n_blocks) constant, so the
+# whole prune/regrow cycle can run jitted on arrays of static shape. Dropped
+# slots are overwritten in place (fresh position + fresh init, momentum 0)
+# and the result is re-sorted to the canonical (col, row) order. Only the
+# *number* of drops is data-dependent, and it lives in flag/rank arithmetic,
+# never in a shape.
+# ---------------------------------------------------------------------------
+
+
+def _ranks_ascending(keys: jax.Array) -> jax.Array:
+    """rank[i] = position of element i in the stable ascending sort of keys."""
+    n = keys.shape[0]
+    order = jnp.argsort(keys)  # stable
+    return jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+
+
+def _element_drop_flags(v: jax.Array, zeta: float) -> jax.Array:
+    """Paper-exact criterion as boolean flags: the zeta-tail of smallest
+    positive and of largest negative weights, plus exact zeros."""
+    pos = v > 0
+    neg = v < 0
+    # k = floor(zeta * n) computed in f32 — may differ from the host path's
+    # float64 int(zeta*n) by one connection at exact representation
+    # boundaries; immaterial to training, and the numpy reference mirrors it.
+    k_pos = jnp.floor(zeta * pos.sum()).astype(jnp.int32)
+    k_neg = jnp.floor(zeta * neg.sum()).astype(jnp.int32)
+    inf = jnp.asarray(jnp.inf, v.dtype)
+    rank_pos = _ranks_ascending(jnp.where(pos, v, inf))
+    rank_neg = _ranks_ascending(jnp.where(neg, -v, inf))
+    return (v == 0) | (pos & (rank_pos < k_pos)) | (neg & (rank_neg < k_neg))
+
+
+def _device_regrow_flat(
+    key: jax.Array, old_flat: jax.Array, drop: jax.Array, total: int
+) -> jax.Array:
+    """One fresh vacant flat position per dropped slot (static shapes).
+
+    2*n uniform candidates are drawn; a candidate is valid if it is distinct
+    from every *old* position (kept or dropped) and is the first occurrence
+    of its value among the candidates. Valid candidates are compacted (order
+    preserved) and dealt out to dropped slots by drop-rank. Dropped slots
+    beyond the valid supply keep their old — now vacant — position with a
+    fresh init: a vanishing-probability fallback (density << 1) that keeps
+    uniqueness and capacity unconditionally.
+    """
+    n = old_flat.shape[0]
+    c = 2 * n
+    cand = jax.random.randint(key, (c,), 0, total, dtype=jnp.int32)
+    sorted_old = jnp.sort(old_flat)
+    idx = jnp.clip(jnp.searchsorted(sorted_old, cand), 0, n - 1)
+    occupied = sorted_old[idx] == cand
+    ordc = jnp.argsort(cand)
+    sc = cand[ordc]
+    first_sorted = jnp.ones((c,), bool).at[1:].set(sc[1:] != sc[:-1])
+    uniq = jnp.zeros((c,), bool).at[ordc].set(first_sorted)
+    valid = uniq & ~occupied
+    n_valid = valid.sum()
+    compact = cand[jnp.argsort(~valid)]  # stable: valid first, order kept
+    drop_rank = jnp.cumsum(drop) - 1
+    take = compact[jnp.clip(drop_rank, 0, c - 1)]
+    use_cand = drop & (drop_rank < n_valid)
+    return jnp.where(use_cand, take, old_flat)
+
+
+def _init_device(key, shape, *, fan_in_dense: int, scheme: str) -> jax.Array:
+    """jax.random analogue of sparsity._init_numpy (same families/scales)."""
+    if scheme == "normal":
+        return jax.random.normal(key, shape, jnp.float32) * 0.05
+    if scheme == "he_uniform":
+        limit = float(np.sqrt(6.0 / max(1, fan_in_dense)))
+        return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+    if scheme == "xavier":
+        limit = float(np.sqrt(3.0 / max(1, fan_in_dense)))
+        return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+    if scheme == "zeros":
+        return jnp.zeros(shape, jnp.float32)
+    raise ValueError(f"unknown init scheme {scheme!r}")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("in_dim", "out_dim", "zeta", "init_scheme")
+)
+def evolve_element_device(
+    rows: jax.Array,
+    cols: jax.Array,
+    values: jax.Array,
+    momentum: jax.Array,
+    key: jax.Array,
+    *,
+    in_dim: int,
+    out_dim: int,
+    zeta: float,
+    init_scheme: str = "he_uniform",
+):
+    """Jitted SET evolution step on fixed-capacity COO arrays.
+
+    Returns ``(rows, cols, values, momentum, n_pruned)`` in canonical
+    (col, row) order. Same criterion as :func:`evolve_element`; regrowth
+    samples vacancies with ``jax.random`` (see ``_device_regrow_flat``).
+    Shapes are static — repeated calls never recompile.
+    """
+    total = in_dim * out_dim
+    if total >= 2**31:
+        raise ValueError(
+            f"flat position encoding needs in_dim*out_dim < 2**31, got {total}"
+        )
+    nnz = values.shape[0]
+    drop = _element_drop_flags(values, zeta)
+    k_grow, k_init = jax.random.split(key)
+    old_flat = rows.astype(jnp.int32) * out_dim + cols.astype(jnp.int32)
+    new_flat = _device_regrow_flat(k_grow, old_flat, drop, total)
+    init_vals = _init_device(
+        k_init, (nnz,), fan_in_dense=in_dim, scheme=init_scheme
+    ).astype(values.dtype)
+    vals = jnp.where(drop, init_vals, values)
+    mom = jnp.where(drop, jnp.zeros((), momentum.dtype), momentum)
+    new_rows = new_flat // out_dim
+    new_cols = new_flat % out_dim
+    order = jnp.argsort(new_cols * in_dim + new_rows)
+    return (
+        new_rows[order],
+        new_cols[order],
+        vals[order],
+        mom[order],
+        drop.sum(),
+    )
+
+
+def evolve_element_device_reference(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    values: np.ndarray,
+    momentum: np.ndarray,
+    key: jax.Array,
+    *,
+    in_dim: int,
+    out_dim: int,
+    zeta: float,
+    init_scheme: str = "he_uniform",
+):
+    """Host (numpy) mirror of :func:`evolve_element_device`.
+
+    Runs the identical algorithm with plain numpy (stable sorts, f32 tail
+    sizes) while drawing the *same* random numbers from the same jax key —
+    the oracle for the device ≡ host equivalence tests.
+    """
+    v = np.asarray(values, np.float32)
+    nnz = v.shape[0]
+    total = in_dim * out_dim
+    pos = v > 0
+    neg = v < 0
+    k_pos = int(np.floor(np.float32(zeta) * np.float32(pos.sum())))
+    k_neg = int(np.floor(np.float32(zeta) * np.float32(neg.sum())))
+
+    def ranks(keys):
+        order = np.argsort(keys, kind="stable")
+        r = np.zeros(nnz, np.int64)
+        r[order] = np.arange(nnz)
+        return r
+
+    rank_pos = ranks(np.where(pos, v, np.inf))
+    rank_neg = ranks(np.where(neg, -v, np.inf))
+    drop = (v == 0) | (pos & (rank_pos < k_pos)) | (neg & (rank_neg < k_neg))
+
+    k_grow, k_init = jax.random.split(key)
+    c = 2 * nnz
+    cand = np.asarray(jax.random.randint(k_grow, (c,), 0, total, dtype=jnp.int32))
+    old_flat = rows.astype(np.int64) * out_dim + cols.astype(np.int64)
+    old_flat = old_flat.astype(np.int32)
+    sorted_old = np.sort(old_flat)
+    idx = np.clip(np.searchsorted(sorted_old, cand), 0, nnz - 1)
+    occupied = sorted_old[idx] == cand
+    ordc = np.argsort(cand, kind="stable")
+    sc = cand[ordc]
+    first_sorted = np.ones(c, bool)
+    first_sorted[1:] = sc[1:] != sc[:-1]
+    uniq = np.zeros(c, bool)
+    uniq[ordc] = first_sorted
+    valid = uniq & ~occupied
+    n_valid = int(valid.sum())
+    compact = cand[np.argsort(~valid, kind="stable")]
+    drop_rank = np.cumsum(drop) - 1
+    take = compact[np.clip(drop_rank, 0, c - 1)]
+    use_cand = drop & (drop_rank < n_valid)
+    new_flat = np.where(use_cand, take, old_flat)
+
+    init_vals = np.asarray(
+        _init_device(k_init, (nnz,), fan_in_dense=in_dim, scheme=init_scheme)
+    ).astype(v.dtype)
+    vals = np.where(drop, init_vals, v)
+    mom = np.where(drop, np.float32(0), np.asarray(momentum, np.float32))
+    new_rows = new_flat // out_dim
+    new_cols = new_flat % out_dim
+    order = np.argsort(new_cols * in_dim + new_rows, kind="stable")
+    return (
+        new_rows[order].astype(np.int32),
+        new_cols[order].astype(np.int32),
+        vals[order],
+        mom[order],
+        int(drop.sum()),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "zeta"))
+def evolve_block_device(
+    rows: jax.Array,
+    cols: jax.Array,
+    values: jax.Array,
+    momentum: jax.Array,
+    key: jax.Array,
+    *,
+    meta: BlockMeta,
+    zeta: float,
+):
+    """Jitted block-granularity SET evolution (coverage-protected).
+
+    Prunes the zeta-tail of blocks by mean |w| via a ``lax.scan`` over the
+    score-sorted order carrying per-column live counts (a block is only
+    dropped while its output block-column keeps >= 1 other slot — the same
+    protection as the host path); regrows vacant tiles zero-init. Returns
+    ``(rows, cols, values, momentum, n_pruned)`` in canonical (col, row)
+    order; shapes static, so repeated calls never recompile.
+    """
+    if meta.total_blocks >= 2**31:
+        raise ValueError(
+            "flat position encoding needs grid_m*grid_n < 2**31, "
+            f"got {meta.total_blocks}"
+        )
+    nb = values.shape[0]
+    k = int(zeta * nb)
+    scores = jnp.abs(values).mean(axis=(1, 2))
+    order = jnp.argsort(scores)
+    col_counts = jnp.zeros((meta.grid_n,), jnp.int32).at[cols].add(1)
+
+    def body(carry, i):
+        counts, nd = carry
+        c = cols[i]
+        can = (counts[c] > 1) & (nd < k)
+        counts = counts.at[c].add(jnp.where(can, -1, 0))
+        return (counts, nd + can.astype(jnp.int32)), can
+
+    (_, n_drop), drop_sorted = jax.lax.scan(
+        body, (col_counts, jnp.zeros((), jnp.int32)), order
+    )
+    drop = jnp.zeros((nb,), bool).at[order].set(drop_sorted)
+
+    k_grow, _ = jax.random.split(key)
+    old_flat = rows.astype(jnp.int32) * meta.grid_n + cols.astype(jnp.int32)
+    new_flat = _device_regrow_flat(k_grow, old_flat, drop, meta.total_blocks)
+    zero = jnp.zeros((), values.dtype)
+    vals = jnp.where(drop[:, None, None], zero, values)
+    mom = jnp.where(drop[:, None, None], jnp.zeros((), momentum.dtype), momentum)
+    new_rows = new_flat // meta.grid_n
+    new_cols = new_flat % meta.grid_n
+    order2 = jnp.argsort(new_cols * meta.grid_m + new_rows)
+    return new_rows[order2], new_cols[order2], vals[order2], mom[order2], n_drop
+
+
+@functools.partial(jax.jit, static_argnames=("meta",))
+def block_device_arrays(
+    rows: jax.Array, cols: jax.Array, *, meta: BlockMeta
+) -> BlockTopoArrays:
+    """Device-resident analogue of ``BlockTopology.device_arrays``: builds the
+    kernels' derived views (first-visit flags, row-sorted permutation) from
+    canonical (col, row)-sorted coordinates without a host round-trip."""
+    nb = rows.shape[0]
+    ones = jnp.ones((nb,), jnp.int32)
+    first_col = ones.at[1:].set((cols[1:] != cols[:-1]).astype(jnp.int32))
+    perm_r = jnp.argsort(rows * meta.grid_n + cols).astype(jnp.int32)
+    rows_r = rows[perm_r]
+    cols_r = cols[perm_r]
+    first_row = ones.at[1:].set((rows_r[1:] != rows_r[:-1]).astype(jnp.int32))
+    return BlockTopoArrays(
+        rows=rows, cols=cols, first_col=first_col,
+        rows_r=rows_r, cols_r=cols_r, first_row=first_row, perm_r=perm_r,
+    )
 
 
 def _sample_vacant(

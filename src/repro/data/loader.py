@@ -37,7 +37,10 @@ class ShardedLoader:
         n = self._shard_idx.size
         return n // self.batch_size if self.drop_remainder else -(-n // self.batch_size)
 
-    def epoch(self, epoch: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        """The epoch's shuffled sample indices (remainder already dropped if
+        configured). This is the whole host-side contribution to an epoch —
+        the fused trainer ships it to the device and gathers batches there."""
         rng = np.random.default_rng((self.seed * 1_000_003 + epoch) & 0x7FFFFFFF)
         order = rng.permutation(self._shard_idx)
         n_full = (
@@ -45,6 +48,10 @@ class ShardedLoader:
             if self.drop_remainder
             else order.size
         )
-        for s in range(0, n_full, self.batch_size):
+        return order[:n_full]
+
+    def epoch(self, epoch: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        order = self.epoch_order(epoch)
+        for s in range(0, order.size, self.batch_size):
             sel = order[s : s + self.batch_size]
             yield self.x[sel], self.y[sel]

@@ -1,6 +1,7 @@
-"""Jit'd public ops for block-sparse linear layers.
+"""Jit'd public ops for sparse linear layers.
 
-Three interchangeable implementations (same math, same topology arrays):
+Block granularity — three interchangeable implementations (same math, same
+topology arrays):
 
 * ``bsmm_pallas``   — the Pallas TPU kernel (custom_vjp wiring fwd/dX/dW
                       kernels). ``interpret=True`` validates on CPU.
@@ -8,6 +9,14 @@ Three interchangeable implementations (same math, same topology arrays):
                       live blocks; natively differentiable; shards cleanly
                       under GSPMD (used by the multi-pod dry-run).
 * ``ref.bsmm_ref``  — densify-then-matmul oracle (tests only).
+
+Element granularity (the paper-faithful COO path) — dispatched by ``espmm``:
+
+* ``segment`` (default) — chunked col-sorted ``jax.ops.segment_sum``; peak
+                          intermediate memory O(batch * chunk), not
+                          O(batch * nnz) (DESIGN.md §1).
+* ``scatter``           — the original gather/scatter-add formulation
+                          (materializes (batch, nnz); reference/fallback).
 """
 from __future__ import annotations
 
@@ -17,7 +26,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparsity import BlockMeta, BlockTopoArrays
+from repro.core.sparsity import (
+    SPMM_AUTO_ELEMS,
+    SPMM_AUTO_NNZ,
+    BlockMeta,
+    BlockTopoArrays,
+    ElemTopoArrays,
+    element_spmm,
+    element_spmm_segment,
+)
 from repro.kernels import block_sparse_matmul as _k
 
 
@@ -150,3 +167,38 @@ def bsmm(
             x, values, topo, meta, block_b=block_b, interpret=interpret
         )
     raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Element-sparse (COO) path
+# ---------------------------------------------------------------------------
+
+
+def espmm(
+    x: jax.Array,
+    values: jax.Array,
+    topo: ElemTopoArrays,
+    out_dim: int,
+    *,
+    impl: str = "auto",
+    chunk: int | None = None,
+) -> jax.Array:
+    """Element-sparse ``y = x @ W`` for COO topology arrays.
+
+    ``auto`` (default) picks per call site: scatter-add for small problems
+    (faster on CPU XLA, intermediate still tiny), the chunked segment-sum
+    path once nnz or the (batch, nnz) intermediate crosses the thresholds in
+    ``core.sparsity`` — keeping peak memory flat in nnz at scale.
+    """
+    if impl == "auto":
+        nnz = int(values.shape[0])
+        batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+        big = nnz >= SPMM_AUTO_NNZ or batch * nnz >= SPMM_AUTO_ELEMS
+        impl = "segment" if big else "scatter"
+    if impl == "segment":
+        return element_spmm_segment(
+            x, values, topo.rows, topo.cols, out_dim, chunk=chunk
+        )
+    if impl == "scatter":
+        return element_spmm(x, values, topo.rows, topo.cols, out_dim)
+    raise ValueError(f"unknown element impl {impl!r}")

@@ -20,6 +20,25 @@ from repro.optim.sgd import MomentumSGD
 PyTree = Any
 
 
+def scan_segment(step_core, params, opt_state, key, step_inputs):
+    """Run a multi-step train segment as one ``lax.scan`` (no per-step
+    dispatch): threads (params, opt_state, key) through ``step_core`` and
+    stacks the per-step metrics. ``step_core(params, opt_state, inp, rng)``
+    must return ``(params, opt_state, metrics)``. Jit the caller and donate
+    params/opt_state for a fully device-resident epoch segment."""
+
+    def body(carry, inp):
+        p, s, k = carry
+        k, sub = jax.random.split(k)
+        p, s, metrics = step_core(p, s, inp, sub)
+        return (p, s, k), metrics
+
+    (params, opt_state, key), metrics = jax.lax.scan(
+        body, (params, opt_state, key), step_inputs
+    )
+    return params, opt_state, key, metrics
+
+
 def _microbatched_grad(loss_fn, params, batch, microbatches: int):
     """Gradient accumulation over leading-batch microbatches (lax.scan).
     Activation memory scales 1/microbatches; grads accumulate in f32."""

@@ -23,7 +23,6 @@ from repro.core.sparsity import (
     BlockMeta,
     BlockTopology,
     ElementTopology,
-    element_spmm,
 )
 from repro.kernels import ops as kops
 
@@ -39,6 +38,8 @@ class SparseMLPConfig:
     dropout: float = 0.3
     init: str = "he_uniform"
     impl: str = "element"  # element | block | masked | dense
+    element_impl: str = "auto"  # auto (default) | segment | scatter — kops.espmm
+    spmm_chunk: Optional[int] = None  # None -> sparsity.SPMM_CHUNK
     block_m: int = 128
     block_n: int = 128
     dtype: str = "float32"
@@ -140,8 +141,10 @@ def mlp_forward(
         bias = params["biases"][l]
         out_dim = config.layer_dims[l + 1]
         if config.impl == "element":
-            rows, cols = topo_arrays[l].rows, topo_arrays[l].cols
-            h = element_spmm(h, vals, rows, cols, out_dim) + bias
+            h = kops.espmm(
+                h, vals, topo_arrays[l], out_dim,
+                impl=config.element_impl, chunk=config.spmm_chunk,
+            ) + bias
         elif config.impl == "block":
             meta = BlockMeta(
                 config.layer_dims[l], out_dim, config.block_m, config.block_n

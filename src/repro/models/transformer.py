@@ -438,7 +438,12 @@ class PatternLM:
                 if nc is not None:
                     new_slot_cache[slot] = nc
                 aux = aux + aux_b
-            h, aux = jax.lax.optimization_barrier((h, aux))
+            if mode != "train":
+                # keeps XLA from fusing across scan iterations in inference
+                # graphs; omitted under grad — optimization_barrier has no
+                # differentiation rule, and remat already pins the train-mode
+                # iteration boundaries.
+                h, aux = jax.lax.optimization_barrier((h, aux))
             return (h, aux), new_slot_cache
 
         body = pattern_body

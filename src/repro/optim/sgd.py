@@ -20,6 +20,7 @@ import jax.numpy as jnp
 __all__ = [
     "MomentumSGD",
     "SGDState",
+    "replace_values_velocity",
     "constant_lr",
     "warmup_linear_scaled_lr",
     "step_decay_lr",
@@ -33,6 +34,15 @@ PyTree = Any
 class SGDState(NamedTuple):
     velocity: PyTree
     step: jax.Array
+
+
+def replace_values_velocity(state: SGDState, new_values_vel) -> SGDState:
+    """Rebuild an SGDState whose ``velocity['values']`` entries were remapped
+    by a topology change (SET evolution / importance pruning) — momentum is
+    kept on surviving connections and reset on regrown ones, paper Alg. 1."""
+    velocity = dict(state.velocity)
+    velocity["values"] = tuple(new_values_vel)
+    return SGDState(velocity=velocity, step=state.step)
 
 
 @dataclasses.dataclass(frozen=True)

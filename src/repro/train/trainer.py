@@ -1,6 +1,23 @@
 """Sequential SET trainer — paper Algorithm 2 (SET + Importance Pruning).
 
-Per epoch: jitted momentum-SGD minibatch steps, then on the host
+Two execution modes (``TrainerConfig.fused_epochs``):
+
+* **Fused (default, DESIGN.md §3)** — an epoch is ONE jitted, buffer-donated
+  device call: the training set lives on the device, the host ships only the
+  epoch's shuffled index permutation, and a ``lax.scan`` (launch.steps.
+  scan_segment) runs every minibatch step inside the call. Between segments
+  the SET prune/regrow cycle also runs jitted on fixed-capacity topology
+  arrays (``core.topology.evolve_*_device``), so a whole training run does a
+  handful of dispatches per epoch and zero host<->device parameter traffic.
+  The host topology mirror is re-synchronised lazily — only when importance
+  pruning fires (a genuine shape change, recompiling at most once per event)
+  and at the end of the run.
+* **Per-batch (legacy)** — one jitted call per minibatch, evolution on the
+  host (numpy) every epoch. Kept as the dispatch-bound baseline for the
+  ``benchmarks/`` epoch-segment comparison and as the fallback for layers
+  whose flat-position encoding exceeds int32.
+
+Per epoch, both modes: jitted momentum-SGD minibatch steps, then
   1. Importance Pruning (if schedule fires): remove weak hidden neurons'
      incoming connections, cascade-remove their outgoing connections, shrink
      the arrays (a recompile happens at most once per pruning event).
@@ -27,18 +44,38 @@ from repro.core.importance import (
     importance_prune_block,
     importance_prune_element,
 )
-from repro.core.topology import evolve_block, evolve_element
+from repro.core.sparsity import (
+    BlockMeta,
+    BlockTopology,
+    ElementTopology,
+    ElemTopoArrays,
+)
+from repro.core.topology import (
+    block_device_arrays,
+    evolve_block,
+    evolve_block_device,
+    evolve_element,
+    evolve_element_device,
+)
 from repro.data.loader import ShardedLoader
 from repro.data.synthetic import Dataset
+from repro.launch.steps import scan_segment
 from repro.models.mlp import (
     SparseMLP,
     SparseMLPConfig,
     cross_entropy_loss,
     mlp_forward,
 )
-from repro.optim.sgd import MomentumSGD, SGDState
+from repro.optim.sgd import MomentumSGD, replace_values_velocity
 
-__all__ = ["TrainerConfig", "SequentialTrainer", "evaluate"]
+__all__ = [
+    "TrainerConfig",
+    "SequentialTrainer",
+    "evaluate",
+    "make_step_fn",
+    "make_eval_fn",
+    "make_segment_fn",
+]
 
 
 @dataclasses.dataclass
@@ -54,6 +91,8 @@ class TrainerConfig:
     eval_every: int = 1
     seed: int = 0
     lr_schedule: Optional[Callable] = None
+    fused_epochs: bool = True  # one scan-based device call per epoch
+    device_evolution: bool = True  # jitted SET evolution between segments
 
 
 def make_step_fn(config: SparseMLPConfig, opt: MomentumSGD):
@@ -70,7 +109,46 @@ def make_step_fn(config: SparseMLPConfig, opt: MomentumSGD):
     return step
 
 
+@functools.lru_cache(maxsize=32)
+def make_segment_fn(config: SparseMLPConfig, opt: MomentumSGD):
+    """Jitted multi-minibatch epoch segment.
+
+    ``segment(params, opt_state, topo_arrays, x_all, y_all, perm, lrs, key)``
+    gathers the epoch's batches from the device-resident dataset by the
+    (steps, batch) index permutation and runs them all inside one
+    ``lax.scan``; params/opt_state buffers are donated (where the backend
+    supports it) so the optimizer state never leaves the device. Cached per
+    (model config, optimizer) so repeated trainers share the jit cache.
+    """
+
+    def segment(params, opt_state, topo_arrays, x_all, y_all, perm, lrs, key):
+        def step_core(p, s, inp, rng):
+            idx, lr = inp
+            xb = jnp.take(x_all, idx, axis=0)
+            yb = jnp.take(y_all, idx, axis=0)
+
+            def loss_fn(pp):
+                logits = mlp_forward(
+                    pp, topo_arrays, xb, config, train=True, rng=rng
+                )
+                return cross_entropy_loss(logits, yb)
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p, s = opt.update(grads, s, p, lr)
+            return p, s, loss
+
+        return scan_segment(step_core, params, opt_state, key, (perm, lrs))
+
+    # donation is a no-op (with a warning) on CPU — only request it elsewhere
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(segment, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=64)
 def make_eval_fn(config: SparseMLPConfig):
+    """Cached per config: repeated ``evaluate`` calls (one per epoch) reuse
+    the same jitted forward instead of re-tracing every time."""
+
     @jax.jit
     def fwd(params, topo_arrays, x):
         return mlp_forward(params, topo_arrays, x, config, train=False)
@@ -78,10 +156,21 @@ def make_eval_fn(config: SparseMLPConfig):
     return fwd
 
 
-def evaluate(model: SparseMLP, x: np.ndarray, y: np.ndarray, batch: int = 512) -> float:
+def evaluate(
+    model: SparseMLP,
+    x: np.ndarray,
+    y: np.ndarray,
+    batch: int = 512,
+    *,
+    params=None,
+    topo_arrays=None,
+) -> float:
+    """Accuracy on (x, y). ``params``/``topo_arrays`` override the model's
+    host-side views — the fused trainer passes its device-resident state so
+    evaluation needs no host synchronisation."""
     fwd = make_eval_fn(model.config)
-    params = model.params()
-    topo = model.topo_arrays()
+    params = model.params() if params is None else params
+    topo = model.topo_arrays() if topo_arrays is None else topo_arrays
     correct = 0
     for s in range(0, x.shape[0], batch):
         logits = fwd(params, topo, jnp.asarray(x[s : s + batch]))
@@ -101,6 +190,7 @@ class SequentialTrainer:
         self.rng = np.random.default_rng(tc.seed)
         self.key = jax.random.PRNGKey(tc.seed)
         self._step = make_step_fn(model.config, self.opt)
+        self._segment = make_segment_fn(model.config, self.opt)
         self.history: Dict[str, List] = {
             "epoch": [], "train_loss": [], "test_acc": [], "n_params": [],
             "epoch_seconds": [],
@@ -125,8 +215,6 @@ class SequentialTrainer:
             # cascade: connections out of previously-pruned neurons die too
             if pruned_prev is not None and pruned_prev.size and cfg.impl == "element":
                 keep = ~np.isin(topo.rows, pruned_prev)
-                from repro.core.sparsity import ElementTopology
-
                 topo = ElementTopology(
                     topo.in_dim, topo.out_dim, topo.rows[keep], topo.cols[keep]
                 )
@@ -148,13 +236,7 @@ class SequentialTrainer:
             model.values[l] = jnp.asarray(res.values)
             vel[l] = jnp.asarray(res.momentum)
             pruned_prev = res.pruned_neurons
-        self.opt_state = SGDState(
-            velocity={
-                "values": tuple(vel),
-                "biases": self.opt_state.velocity["biases"],
-            },
-            step=self.opt_state.step,
-        )
+        self.opt_state = replace_values_velocity(self.opt_state, vel)
 
     def _evolve(self) -> None:
         tc, model = self.tc, self.model
@@ -177,17 +259,186 @@ class SequentialTrainer:
             model.topos[l] = res.topology
             model.values[l] = jnp.asarray(res.values, model.values[l].dtype)
             vel[l] = jnp.asarray(res.momentum)
-        self.opt_state = SGDState(
-            velocity={
-                "values": tuple(vel),
-                "biases": self.opt_state.velocity["biases"],
-            },
-            step=self.opt_state.step,
-        )
+        self.opt_state = replace_values_velocity(self.opt_state, vel)
+
+    # -- device-side topology mutations -------------------------------------
+
+    def _evolve_device(self, topo, params, opt_state):
+        """Jitted SET evolution for every layer; returns the new device
+        (topo_arrays, params, opt_state) without touching the host mirror."""
+        tc, cfg = self.tc, self.model.config
+        values = list(params["values"])
+        vel = list(opt_state.velocity["values"])
+        new_topo = list(topo)
+        for l in range(cfg.n_layers):
+            self.key, sub = jax.random.split(self.key)
+            if cfg.impl == "element":
+                n_in, n_out = cfg.layer_dims[l], cfg.layer_dims[l + 1]
+                rows, cols, vals, mom, _ = evolve_element_device(
+                    topo[l].rows, topo[l].cols, values[l], vel[l], sub,
+                    in_dim=n_in, out_dim=n_out, zeta=tc.zeta,
+                    init_scheme=cfg.init,
+                )
+                new_topo[l] = ElemTopoArrays(rows, cols)
+            else:
+                meta = BlockMeta(
+                    cfg.layer_dims[l], cfg.layer_dims[l + 1],
+                    cfg.block_m, cfg.block_n,
+                )
+                rows, cols, vals, mom, _ = evolve_block_device(
+                    topo[l].rows, topo[l].cols, values[l], vel[l], sub,
+                    meta=meta, zeta=tc.zeta,
+                )
+                new_topo[l] = block_device_arrays(rows, cols, meta=meta)
+            values[l] = vals
+            vel[l] = mom
+        params = {"values": tuple(values), "biases": params["biases"]}
+        return tuple(new_topo), params, replace_values_velocity(opt_state, vel)
+
+    def _sync_topology_to_host(self, topo) -> None:
+        """Pull device topology back into the host mirror (model.topos) —
+        needed only before host-side ops (importance pruning) and at the end
+        of a fused run."""
+        cfg = self.model.config
+        for l in range(cfg.n_layers):
+            n_in, n_out = cfg.layer_dims[l], cfg.layer_dims[l + 1]
+            if cfg.impl == "element":
+                self.model.topos[l] = ElementTopology(
+                    n_in, n_out,
+                    np.asarray(topo[l].rows), np.asarray(topo[l].cols),
+                )
+            elif cfg.impl == "block":
+                meta = BlockMeta(n_in, n_out, cfg.block_m, cfg.block_n)
+                self.model.topos[l] = BlockTopology(
+                    meta, np.asarray(topo[l].rows), np.asarray(topo[l].cols)
+                )
+
+    def _host_topology_op(self, topo, topo_dirty: bool, op):
+        """Run a host-side topology mutation from a fused run: re-sync the
+        host mirror if the device topology has diverged, apply ``op`` (which
+        mutates model/opt_state), and return the refreshed device views."""
+        if topo_dirty:
+            self._sync_topology_to_host(topo)
+        op()
+        return self.model.params(), self.opt_state, self.model.topo_arrays()
+
+    def _supports_device_evolution(self) -> bool:
+        # the device paths encode flat positions in int32
+        cfg = self.model.config
+        if cfg.impl == "element":
+            return all(
+                cfg.layer_dims[l] * cfg.layer_dims[l + 1] < 2**31
+                for l in range(cfg.n_layers)
+            )
+        if cfg.impl == "block":
+            return all(
+                BlockMeta(
+                    cfg.layer_dims[l], cfg.layer_dims[l + 1],
+                    cfg.block_m, cfg.block_n,
+                ).total_blocks < 2**31
+                for l in range(cfg.n_layers)
+            )
+        return False
 
     # -- main loop -----------------------------------------------------------
 
     def run(self, log_every: int = 0) -> Dict[str, List]:
+        if self.tc.fused_epochs:
+            return self._run_fused(log_every)
+        return self._run_per_batch(log_every)
+
+    def _run_fused(self, log_every: int) -> Dict[str, List]:
+        tc, model = self.tc, self.model
+        cfg = model.config
+        loader = ShardedLoader(
+            self.data.x_train, self.data.y_train, tc.batch_size, seed=tc.seed
+        )
+        steps = loader.steps_per_epoch
+        if steps == 0:
+            raise ValueError("batch_size larger than the training shard")
+        lr_fn = tc.lr_schedule or (lambda step: tc.lr)
+        x_all = jnp.asarray(self.data.x_train)
+        y_all = jnp.asarray(self.data.y_train)
+        params = model.params()
+        opt_state = self.opt_state
+        topo = model.topo_arrays()
+        sparse_impl = cfg.impl in ("element", "block")
+        device_evo = (
+            tc.evolve
+            and tc.device_evolution
+            and sparse_impl
+            and self._supports_device_evolution()
+        )
+        topo_dirty = False  # device topology has diverged from model.topos
+        gstep = 0
+        for epoch in range(tc.epochs):
+            t0 = time.perf_counter()
+            perm = jnp.asarray(
+                loader.epoch_order(epoch).astype(np.int32).reshape(
+                    steps, tc.batch_size
+                )
+            )
+            lrs = jnp.asarray(
+                [float(lr_fn(gstep + i)) for i in range(steps)], jnp.float32
+            )
+            params, opt_state, self.key, losses = self._segment(
+                params, opt_state, topo, x_all, y_all, perm, lrs, self.key
+            )
+            gstep += steps
+            model.set_params(params)
+            self.opt_state = opt_state
+            # -- topology phase --
+            fire_pruning = (
+                sparse_impl
+                and tc.pruning is not None
+                and tc.pruning.should_prune(epoch)
+            )
+            if fire_pruning:
+                params, opt_state, topo = self._host_topology_op(
+                    topo, topo_dirty, lambda: self._importance_prune(epoch)
+                )
+                topo_dirty = False
+            if epoch < tc.epochs - 1 and tc.evolve and sparse_impl:
+                if device_evo:
+                    topo, params, opt_state = self._evolve_device(
+                        topo, params, opt_state
+                    )
+                    model.set_params(params)
+                    self.opt_state = opt_state
+                    topo_dirty = True
+                else:
+                    params, opt_state, topo = self._host_topology_op(
+                        topo, topo_dirty, self._evolve
+                    )
+                    topo_dirty = False
+            # dispatch is async — wait for the epoch's device work so
+            # epoch_seconds measures compute, not enqueue
+            jax.block_until_ready((params, losses))
+            dt = time.perf_counter() - t0
+            if (epoch + 1) % tc.eval_every == 0 or epoch == tc.epochs - 1:
+                acc = evaluate(
+                    model, self.data.x_test, self.data.y_test,
+                    params=params, topo_arrays=topo,
+                )
+            else:
+                acc = float("nan")
+            self.history["epoch"].append(epoch)
+            self.history["train_loss"].append(float(np.asarray(losses).mean()))
+            self.history["test_acc"].append(acc)
+            # element nnz is evolution-invariant, so the host mirror's count
+            # stays correct even while topo_dirty
+            self.history["n_params"].append(model.n_params)
+            self.history["epoch_seconds"].append(dt)
+            if log_every and (epoch + 1) % log_every == 0:
+                print(
+                    f"epoch {epoch:4d} loss {self.history['train_loss'][-1]:.4f} "
+                    f"acc {acc:.4f} params {model.n_params}"
+                )
+        if topo_dirty:
+            self._sync_topology_to_host(topo)
+        return self.history
+
+    def _run_per_batch(self, log_every: int) -> Dict[str, List]:
         tc, model = self.tc, self.model
         loader = ShardedLoader(
             self.data.x_train, self.data.y_train, tc.batch_size, seed=tc.seed
@@ -217,6 +468,7 @@ class SequentialTrainer:
             self._importance_prune(epoch)
             if epoch < tc.epochs - 1:  # paper: no evolution after final epoch
                 self._evolve()
+            jax.block_until_ready(model.params())
             dt = time.perf_counter() - t0
             if (epoch + 1) % tc.eval_every == 0 or epoch == tc.epochs - 1:
                 acc = evaluate(model, self.data.x_test, self.data.y_test)

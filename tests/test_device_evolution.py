@@ -1,0 +1,237 @@
+"""Device-resident SET evolution (DESIGN.md §3) and the fused epoch trainer.
+
+Covers the ISSUE-mandated equivalences: device evolution == its host
+reference given the same rng, the prune decision == the legacy host oracle
+(it is deterministic in the values), topology invariants (unique positions,
+canonical sort, constant capacity, coverage), the no-recompile guarantee
+across evolution steps, and fused-epoch == per-batch training.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.sparsity import BlockMeta, BlockTopology, ElementTopology
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def element_case(seed=0, in_dim=120, out_dim=80, epsilon=10):
+    rng = np.random.default_rng(seed)
+    topo = ElementTopology.erdos_renyi(in_dim, out_dim, epsilon, rng)
+    vals = np.asarray(topo.init_values(rng))
+    mom = rng.standard_normal(topo.nnz).astype(np.float32)
+    return topo, vals, mom
+
+
+# ---------------------------------------------------------------------------
+# element granularity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,zeta", [(0, 0.25), (1, 0.3), (2, 0.0), (3, 0.5)])
+def test_element_device_matches_host_reference(seed, zeta):
+    """Same key -> bit-identical topology, values, and momentum."""
+    topo, vals, mom = element_case(seed)
+    key = jax.random.PRNGKey(100 + seed)
+    dev = T.evolve_element_device(
+        jnp.asarray(topo.rows), jnp.asarray(topo.cols),
+        jnp.asarray(vals), jnp.asarray(mom), key,
+        in_dim=topo.in_dim, out_dim=topo.out_dim, zeta=zeta,
+    )
+    ref = T.evolve_element_device_reference(
+        topo.rows, topo.cols, vals, mom, key,
+        in_dim=topo.in_dim, out_dim=topo.out_dim, zeta=zeta,
+    )
+    for d, r in zip(dev, ref):
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(r))
+
+
+def test_element_device_kept_set_matches_host_oracle():
+    """The prune decision is deterministic in the values: the surviving
+    (position, value, momentum) set must equal the legacy host path's."""
+    topo, vals, mom = element_case(7)
+    zeta = 0.25  # exactly representable: f32 and f64 tail sizes agree
+    dev = T.evolve_element_device(
+        jnp.asarray(topo.rows), jnp.asarray(topo.cols),
+        jnp.asarray(vals), jnp.asarray(mom), jax.random.PRNGKey(0),
+        in_dim=topo.in_dim, out_dim=topo.out_dim, zeta=zeta,
+    )
+    drop = set(T.prune_indices_by_magnitude(vals, zeta).tolist())
+    kept_host = {
+        (int(r), int(c)): (float(v), float(m))
+        for i, (r, c, v, m) in enumerate(zip(topo.rows, topo.cols, vals, mom))
+        if i not in drop
+    }
+    dr, dc, dv, dm = (np.asarray(a) for a in dev[:4])
+    kept_dev = {
+        (int(r), int(c)): (float(v), float(m))
+        for r, c, v, m in zip(dr, dc, dv, dm)
+        if (int(r), int(c)) in kept_host
+    }
+    assert kept_dev == kept_host
+    assert int(dev[4]) == len(drop)
+
+
+@pytest.mark.parametrize("seed,zeta", [(0, 0.3), (5, 0.5), (9, 0.1)])
+def test_element_device_invariants(seed, zeta):
+    topo, vals, mom = element_case(seed)
+    dr, dc, dv, dm, n_pruned = T.evolve_element_device(
+        jnp.asarray(topo.rows), jnp.asarray(topo.cols),
+        jnp.asarray(vals), jnp.asarray(mom), jax.random.PRNGKey(seed),
+        in_dim=topo.in_dim, out_dim=topo.out_dim, zeta=zeta,
+    )
+    dr, dc, dm = np.asarray(dr), np.asarray(dc), np.asarray(dm)
+    # constant capacity
+    assert dr.shape[0] == topo.nnz
+    # unique positions
+    flat = dr.astype(np.int64) * topo.out_dim + dc
+    assert np.unique(flat).size == flat.size
+    # canonical (col, row) sort
+    skey = dc.astype(np.int64) * topo.in_dim + dr
+    assert (np.diff(skey) > 0).all()
+    # bounds
+    assert (0 <= dr).all() and (dr < topo.in_dim).all()
+    assert (0 <= dc).all() and (dc < topo.out_dim).all()
+    # momentum reset on regrown slots: positions not in the old topology
+    old = {(int(r), int(c)) for r, c in zip(topo.rows, topo.cols)}
+    grown = np.array([(int(r), int(c)) not in old for r, c in zip(dr, dc)])
+    assert dm[grown].sum() == 0
+    assert grown.sum() <= int(n_pruned)  # fallback slots reuse old positions
+
+
+def test_element_device_no_recompile_across_steps():
+    """Two evolution steps with different values/keys hit the same trace."""
+    # dims unique to this test so the first call really is a fresh trace
+    topo, vals, mom = element_case(11, in_dim=130, out_dim=85)
+    args = dict(in_dim=topo.in_dim, out_dim=topo.out_dim, zeta=0.3)
+    r, c = jnp.asarray(topo.rows), jnp.asarray(topo.cols)
+    v, m = jnp.asarray(vals), jnp.asarray(mom)
+    before = T.evolve_element_device._cache_size()
+    r, c, v, m, _ = T.evolve_element_device(r, c, v, m, jax.random.PRNGKey(0), **args)
+    after_first = T.evolve_element_device._cache_size()
+    r, c, v, m, _ = T.evolve_element_device(r, c, v, m, jax.random.PRNGKey(1), **args)
+    after_second = T.evolve_element_device._cache_size()
+    assert after_first == before + 1
+    assert after_second == after_first  # zero recompiles on step 2
+
+
+# ---------------------------------------------------------------------------
+# block granularity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,zeta", [(0, 0.3), (3, 0.5), (5, 0.1)])
+def test_block_device_invariants(seed, zeta):
+    rng = np.random.default_rng(seed)
+    meta = BlockMeta(in_dim=64, out_dim=48, block_m=8, block_n=8)
+    topo = BlockTopology.erdos_renyi(meta, 0.5, rng)
+    vals = np.asarray(topo.init_values(rng))
+    mom = np.ones_like(vals)
+    br, bc, bv, bm, n_pruned = T.evolve_block_device(
+        jnp.asarray(topo.rows), jnp.asarray(topo.cols),
+        jnp.asarray(vals), jnp.asarray(mom), jax.random.PRNGKey(seed),
+        meta=meta, zeta=zeta,
+    )
+    br, bc, bv, bm = (np.asarray(a) for a in (br, bc, bv, bm))
+    assert br.shape[0] == topo.n_blocks  # capacity
+    flat = br.astype(np.int64) * meta.grid_n + bc
+    assert np.unique(flat).size == flat.size  # unique
+    assert np.unique(bc).size == meta.grid_n  # coverage survives pruning
+    skey = bc.astype(np.int64) * meta.grid_m + br
+    assert (np.diff(skey) > 0).all()  # canonical sort
+    # regrown blocks are zero-init with zero momentum
+    grown = np.abs(bv).sum(axis=(1, 2)) == 0
+    assert bm[grown].sum() == 0
+    assert int(n_pruned) <= int(zeta * topo.n_blocks)
+    # host-mirror construction accepts the result (re-checks all invariants)
+    BlockTopology(meta, br, bc)
+
+
+def test_block_device_arrays_matches_host():
+    rng = np.random.default_rng(2)
+    meta = BlockMeta(in_dim=64, out_dim=64, block_m=8, block_n=8)
+    topo = BlockTopology.erdos_renyi(meta, 0.4, rng)
+    host = topo.device_arrays()
+    dev = T.block_device_arrays(
+        jnp.asarray(topo.rows), jnp.asarray(topo.cols), meta=meta
+    )
+    for h, d in zip(host, dev):
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(d))
+
+
+# ---------------------------------------------------------------------------
+# fused epoch trainer
+# ---------------------------------------------------------------------------
+
+
+def _tiny_setup(dropout=0.0):
+    from repro.data import datasets
+    from repro.models.mlp import SparseMLP, SparseMLPConfig
+
+    data = datasets.load("fashionmnist", scale=0.02, seed=0)
+    cfg = SparseMLPConfig(
+        layer_dims=(data.n_features, 32, data.n_classes),
+        epsilon=12, activation="all_relu", alpha=0.6, dropout=dropout,
+        impl="element",
+    )
+    return data, cfg
+
+
+def test_fused_epoch_matches_per_batch():
+    """With evolution off the fused scan segment must reproduce the legacy
+    per-batch loop (same shuffles, same lr, same rng splits)."""
+    from repro.models.mlp import SparseMLP
+    from repro.train.trainer import SequentialTrainer, TrainerConfig
+
+    data, cfg = _tiny_setup()
+    finals = {}
+    losses = {}
+    for fused in (True, False):
+        model = SparseMLP(cfg, seed=0)
+        tc = TrainerConfig(
+            epochs=2, batch_size=32, lr=0.01, seed=0, evolve=False,
+            fused_epochs=fused,
+        )
+        hist = SequentialTrainer(model, data, tc).run()
+        finals[fused] = [np.asarray(v) for v in model.values]
+        losses[fused] = hist["train_loss"]
+    for a, b in zip(finals[True], finals[False]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(losses[True], losses[False], rtol=1e-4)
+
+
+def test_fused_trainer_with_device_evolution_learns():
+    from repro.models.mlp import SparseMLP
+    from repro.train.trainer import SequentialTrainer, TrainerConfig
+
+    data, cfg = _tiny_setup(dropout=0.1)
+    model = SparseMLP(cfg, seed=0)
+    tc = TrainerConfig(epochs=8, batch_size=32, lr=0.01, zeta=0.2, seed=0)
+    trainer = SequentialTrainer(model, data, tc)
+    hist = trainer.run()
+    assert hist["train_loss"][-1] < hist["train_loss"][0]
+    assert hist["test_acc"][-1] > 0.5
+    # evolution actually moved connections and the host mirror was re-synced
+    for topo in model.topos:
+        flat = topo.rows.astype(np.int64) * topo.out_dim + topo.cols
+        assert np.unique(flat).size == flat.size
+
+
+def test_fused_trainer_segment_no_recompile_across_epochs():
+    """The epoch segment compiles once; evolution steps do not invalidate it
+    (fixed-capacity topology arrays keep every shape static)."""
+    from repro.models.mlp import SparseMLP
+    from repro.train.trainer import SequentialTrainer, TrainerConfig, make_segment_fn
+
+    data, cfg = _tiny_setup()
+    model = SparseMLP(cfg, seed=3)
+    tc = TrainerConfig(epochs=4, batch_size=32, lr=0.01, zeta=0.3, seed=3)
+    trainer = SequentialTrainer(model, data, tc)
+    segment = make_segment_fn(cfg, trainer.opt)  # lru-cached: same object
+    assert segment is trainer._segment
+    before = segment._cache_size()
+    trainer.run()
+    added = segment._cache_size() - before
+    assert added <= 1  # one trace for the whole run, despite 3 evolutions
