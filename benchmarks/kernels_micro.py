@@ -5,11 +5,16 @@ the dense matmul at equal *live-parameter* count; the Pallas path is validated
 in interpret mode (not timed — interpret mode is a correctness harness, not a
 perf one). Derived column reports achieved GFLOP/s and the sparse/dense ratio.
 
-Element granularity: the chunked segment-sum SpMM vs the legacy scatter-add
-formulation. Besides wall time, records each compiled executable's temp
-buffer footprint (``memory_analysis``) at two nnz sizes — the scatter path's
-peak intermediate is O(batch * nnz) while the segment path's stays
-O(batch * chunk), flat in nnz.
+Element granularity — forward AND backward (a train step is ~2/3 backward):
+
+* forward rows for the custom-VJP / segment / scatter impls at two nnz sizes;
+* ``value_and_grad`` rows for the same sweep — the custom path's hand-derived
+  backward (DESIGN.md §1 "Backward") vs XLA autodiff through segment/scatter;
+* per-pass temp-byte scaling for the custom path (fwd-only, grad-wrt-x ≈ dX,
+  grad-wrt-values ≈ dW executables compiled separately): each must stay flat
+  when nnz grows 4x, while the scatter grad's temp grows ~4x with it;
+* an end-to-end SET-MLP train-step row (``launch.steps.make_mlp_train_step``)
+  on the auto dispatch vs pinned scatter.
 """
 import time
 
@@ -19,20 +24,20 @@ import numpy as np
 
 from benchmarks.common import row
 from repro.core.sparsity import (
-    SPMM_CHUNK,
     BlockMeta,
     BlockTopology,
     ElementTopology,
+    spmm_chunk_for,
 )
 from repro.kernels import ops
 
 
 def bench(fn, *args, iters=10):
-    fn(*args).block_until_ready()
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
-    out.block_until_ready()
+    jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters
 
 
@@ -85,11 +90,16 @@ def run_block(B=256, dim=1024, density=0.25, bm=64, seed=0):
 
 
 def run_element(B=256, dim=2048, epsilon=64, seed=0):
-    """segment-sum vs scatter element SpMM: wall time + temp-memory scaling.
+    """Element SpMM forward + backward: wall time and temp-memory scaling.
 
-    Times both impls at nnz0, then re-measures compiled temp bytes at 4*nnz0:
-    the scatter temp grows ~4x (it materializes (B, nnz)) while the segment
-    temp stays flat at its (B, chunk) ceiling.
+    At nnz0 (the 262k CI point) every impl is timed both forward-only and as
+    ``jax.value_and_grad`` wrt (x, values). At 4*nnz0 the fast paths are
+    re-timed and every executable's compiled temp footprint is re-measured:
+    the scatter impl materializes (B, nnz) — and its autodiff backward
+    re-materializes it — so its temps grow ~4x, while the chunked passes stay
+    at their (B, chunk) ceiling. The custom path's backward is additionally
+    split into dX (grad wrt x) and dW (grad wrt values) executables so the
+    per-pass temp scaling is visible, not just the fused total.
     """
     rng = np.random.default_rng(seed)
     summary = {}
@@ -98,21 +108,21 @@ def run_element(B=256, dim=2048, epsilon=64, seed=0):
         "nnz4x": ElementTopology.erdos_renyi(dim, dim, 4 * epsilon, rng),
     }
     x = jnp.asarray(rng.standard_normal((B, dim)), jnp.float32)
+    # the scatter path beyond 262k nnz costs seconds per call (that cliff is
+    # the point of this benchmark) — keep its timed iteration count low
+    iters = {"segment": 10, "scatter": 3, "custom": 10}
     for label, topo in topos.items():
         t = topo.device_arrays()
         vals = topo.init_values(rng)
-        fns = {
-            "segment": jax.jit(
-                lambda x, v, t=t: ops.espmm(x, v, t, dim, impl="segment")
-            ),
-            "scatter": jax.jit(
-                lambda x, v, t=t: ops.espmm(x, v, t, dim, impl="scatter")
-            ),
-        }
         flops = 2 * B * topo.nnz
-        for impl, fn in fns.items():
-            compiled, temp = _compile_with_temp_bytes(fn, x, vals)
-            dt = bench(compiled, x, vals)
+
+        def impl_fn(impl):
+            return lambda x, v: ops.espmm(x, v, t, dim, impl=impl)
+
+        for impl in ("segment", "scatter", "custom"):
+            fwd = jax.jit(impl_fn(impl))
+            compiled, temp = _compile_with_temp_bytes(fwd, x, vals)
+            dt = bench(compiled, x, vals, iters=iters[impl])
             summary[f"{impl}_{label}_s"] = dt
             summary[f"{impl}_{label}_temp_bytes"] = temp
             row(
@@ -121,22 +131,153 @@ def run_element(B=256, dim=2048, epsilon=64, seed=0):
                 f"gflops={flops / dt / 1e9:.1f};nnz={topo.nnz};"
                 f"temp_bytes={temp};batch_x_nnz={B * topo.nnz}",
             )
-    seg0, seg4 = summary["segment_nnz0_temp_bytes"], summary["segment_nnz4x_temp_bytes"]
-    sc0, sc4 = summary["scatter_nnz0_temp_bytes"], summary["scatter_nnz4x_temp_bytes"]
-    if None not in (seg0, seg4, sc0, sc4):
-        summary["segment_temp_growth_4x_nnz"] = seg4 / max(1, seg0)
-        summary["scatter_temp_growth_4x_nnz"] = sc4 / max(1, sc0)
-        # the acceptance check: segment peak memory must not track batch*nnz
-        summary["segment_temp_flat_in_nnz"] = seg4 < 2 * seg0
+            # backward: value_and_grad wrt (x, values). Timing the scatter
+            # grad at 1M nnz costs ~30 s/call on CPU — compile it for the
+            # temp measurement but skip the timed loop there.
+            g = jax.jit(
+                jax.value_and_grad(
+                    lambda x, v, f=impl_fn(impl): f(x, v).sum(),
+                    argnums=(0, 1),
+                )
+            )
+            compiled_g, temp_g = _compile_with_temp_bytes(g, x, vals)
+            summary[f"{impl}_grad_{label}_temp_bytes"] = temp_g
+            if impl == "scatter" and label == "nnz4x":
+                row(
+                    f"kernels/espmm_grad_{impl}_{label}",
+                    0.0,
+                    f"nnz={topo.nnz};temp_bytes={temp_g};timed=False",
+                )
+                continue
+            dt_g = bench(compiled_g, x, vals, iters=iters[impl])
+            summary[f"{impl}_grad_{label}_s"] = dt_g
+            row(
+                f"kernels/espmm_grad_{impl}_{label}",
+                dt_g * 1e6,
+                f"gflops={3 * flops / dt_g / 1e9:.1f};nnz={topo.nnz};"
+                f"temp_bytes={temp_g};batch_x_nnz={B * topo.nnz}",
+            )
+        # custom backward split per pass: dX (grad wrt x) / dW (grad wrt v)
+        for pass_name, argnum in (("dx", 0), ("dw", 1)):
+            g1 = jax.jit(
+                jax.grad(
+                    lambda x, v, f=impl_fn("custom"): f(x, v).sum(),
+                    argnums=argnum,
+                )
+            )
+            compiled_1, temp_1 = _compile_with_temp_bytes(g1, x, vals)
+            dt_1 = bench(compiled_1, x, vals, iters=iters["custom"])
+            summary[f"custom_{pass_name}_{label}_s"] = dt_1
+            summary[f"custom_{pass_name}_{label}_temp_bytes"] = temp_1
+            row(
+                f"kernels/espmm_{pass_name}_custom_{label}",
+                dt_1 * 1e6,
+                f"nnz={topo.nnz};temp_bytes={temp_1}",
+            )
+
+    def growth(key):
+        t0, t4 = summary[f"{key}_nnz0_temp_bytes"], summary[f"{key}_nnz4x_temp_bytes"]
+        return None if None in (t0, t4) else t4 / max(1, t0)
+
+    temps = {
+        k: growth(k)
+        for k in (
+            "segment", "scatter", "custom",
+            "custom_grad", "scatter_grad", "custom_dx", "custom_dw",
+        )
+    }
+    if None not in temps.values():
+        summary.update({f"{k}_temp_growth_4x_nnz": v for k, v in temps.items()})
+        # acceptance: every custom pass's peak memory must not track batch*nnz
+        flat = {
+            k: temps[k] < 1.5 for k in ("custom", "custom_grad", "custom_dx", "custom_dw")
+        }
+        summary["custom_temp_flat_in_nnz"] = all(flat.values())
+        summary["segment_temp_flat_in_nnz"] = temps["segment"] < 2
         row(
             "kernels/espmm_temp_scaling",
             0.0,
-            f"segment_growth={summary['segment_temp_growth_4x_nnz']:.2f};"
-            f"scatter_growth={summary['scatter_temp_growth_4x_nnz']:.2f};"
-            f"chunk={SPMM_CHUNK};segment_flat_in_nnz={summary['segment_temp_flat_in_nnz']}",
+            f"segment_growth={temps['segment']:.2f};"
+            f"scatter_growth={temps['scatter']:.2f};"
+            f"chunk={spmm_chunk_for(B, topos['nnz0'].nnz)};"
+            f"segment_flat_in_nnz={summary['segment_temp_flat_in_nnz']}",
+        )
+        row(
+            "kernels/espmm_grad_temp_scaling",
+            0.0,
+            f"custom_fwd_growth={temps['custom']:.2f};"
+            f"custom_grad_growth={temps['custom_grad']:.2f};"
+            f"custom_dx_growth={temps['custom_dx']:.2f};"
+            f"custom_dw_growth={temps['custom_dw']:.2f};"
+            f"scatter_grad_growth={temps['scatter_grad']:.2f};"
+            f"custom_temp_flat_in_nnz={summary['custom_temp_flat_in_nnz']}",
         )
     summary["segment_vs_scatter_time"] = (
         summary["segment_nnz4x_s"] / summary["scatter_nnz4x_s"]
+    )
+    # the headline acceptance number: custom value_and_grad speedup over
+    # autodiff-through-scatter at the 262k CI point
+    summary["custom_grad_speedup_vs_scatter_nnz0"] = (
+        summary["scatter_grad_nnz0_s"] / summary["custom_grad_nnz0_s"]
+    )
+    row(
+        "kernels/espmm_grad_speedup",
+        0.0,
+        f"custom_over_scatter_nnz0="
+        f"{summary['custom_grad_speedup_vs_scatter_nnz0']:.2f}",
+    )
+    return summary
+
+
+def run_train_step(B=128, dims=(784, 512, 10), epsilon=20, seed=0):
+    """End-to-end SET-MLP train step (fwd + custom-VJP bwd + SGD update):
+    the auto dispatch (custom kernels at these sizes) vs pinned scatter."""
+    from repro.launch.steps import make_mlp_train_step
+    from repro.models.mlp import SparseMLP, SparseMLPConfig
+    from repro.optim.sgd import MomentumSGD
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, dims[0])), jnp.float32)
+    y = jnp.asarray(rng.integers(0, dims[-1], size=B), jnp.int32)
+    lr = jnp.asarray(0.01, jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    summary = {}
+    for impl_label, element_impl in (("auto", "auto"), ("scatter", "scatter")):
+        cfg = SparseMLPConfig(
+            layer_dims=tuple(dims), epsilon=epsilon, element_impl=element_impl,
+            dropout=0.0,
+        )
+        model = SparseMLP(cfg, seed=seed)
+        opt = MomentumSGD()
+        step = make_mlp_train_step(cfg, opt)
+        params, topo = model.params(), model.topo_arrays()
+        opt_state = opt.init(params)
+
+        def call(params, opt_state):
+            return step(params, opt_state, topo, x, y, lr, key)
+
+        p, s, loss = call(params, opt_state)
+        jax.block_until_ready(loss)
+        t0 = time.perf_counter()
+        iters = 10
+        for _ in range(iters):
+            p, s, loss = call(p, s)
+        jax.block_until_ready(loss)
+        dt = (time.perf_counter() - t0) / iters
+        summary[f"train_step_{impl_label}_s"] = dt
+        nnz = sum(t.nnz for t in model.topos)
+        row(
+            f"kernels/train_step_element_{impl_label}",
+            dt * 1e6,
+            f"nnz_total={nnz};batch={B};layers={len(dims) - 1}",
+        )
+    summary["auto_speedup_vs_scatter"] = (
+        summary["train_step_scatter_s"] / summary["train_step_auto_s"]
+    )
+    row(
+        "kernels/train_step_element_speedup",
+        0.0,
+        f"auto_over_scatter={summary['auto_speedup_vs_scatter']:.2f}",
     )
     return summary
 
@@ -144,6 +285,7 @@ def run_element(B=256, dim=2048, epsilon=64, seed=0):
 def run(B=256, dim=1024, density=0.25, bm=64, seed=0):
     out = {"block": run_block(B=B, dim=dim, density=density, bm=bm, seed=seed)}
     out["element"] = run_element(seed=seed)
+    out["train_step"] = run_train_step(seed=seed)
     return out
 
 

@@ -1,13 +1,78 @@
 """Benchmark driver — one section per paper table (+ roofline + kernels).
 Prints ``name,us_per_call,derived`` CSV rows and, per executed section,
 writes machine-readable ``BENCH_<section>.json`` (rows + the section's
-summary dict) so the perf trajectory is tracked across PRs."""
+summary dict) so the perf trajectory is tracked across PRs.
+
+``--compare BENCH_<section>.json`` re-runs that section and diffs the fresh
+rows against the committed baseline: any hot-path row (``HOT_PATH_ROWS``)
+slower by more than ``REGRESSION_TOLERANCE`` exits nonzero, so PRs can't
+silently regress the kernels. Wall-clock baselines are machine-specific —
+compare against a baseline produced on the same machine, not across hosts.
+"""
 import argparse
 import json
 import pathlib
+import re
 import sys
 import time
 import traceback
+
+# Rows gated by --compare: the named hot paths whose wall clock this repo
+# actually optimizes. Other rows are informational — correctness-flag rows
+# (us_per_call == 0) and sub-10ms micro rows (dense_matmul, bsmm at CI
+# scale) whose run-to-run swing on a shared CPU exceeds the tolerance.
+# Gated rows are all >= ~15 ms, where measured noise is < 20%.
+HOT_PATH_ROWS = {
+    "kernels": [
+        "kernels/espmm_custom_nnz0",
+        "kernels/espmm_custom_nnz4x",
+        "kernels/espmm_grad_custom_nnz0",
+        "kernels/espmm_grad_custom_nnz4x",
+        "kernels/espmm_segment_nnz0",
+        "kernels/train_step_element_auto",
+    ],
+}
+REGRESSION_TOLERANCE = 1.25  # fresh > 1.25x baseline => fail
+
+
+def compare_against_baseline(baseline_path: str, payloads: dict) -> int:
+    """Diff this run's rows against a committed BENCH_<section>.json.
+    Returns the number of >tolerance regressions among hot-path rows."""
+    path = pathlib.Path(baseline_path)
+    baseline = json.loads(path.read_text())
+    section = baseline.get("section")
+    if section is None:
+        m = re.match(r"BENCH_(\w+)\.json", path.name)
+        section = m.group(1) if m else None
+    if section not in payloads:
+        print(
+            f"--compare: section {section!r} was not executed this run "
+            f"(use --only {section})",
+            file=sys.stderr,
+        )
+        return 1
+    fresh = {r["name"]: r["us_per_call"] for r in payloads[section]["rows"]}
+    base = {r["name"]: r["us_per_call"] for r in baseline.get("rows", [])}
+    gated = HOT_PATH_ROWS.get(section, [])
+    regressions = 0
+    for name in gated:
+        if name not in base or base[name] <= 0:
+            continue  # new row (or flag row) — nothing to gate against yet
+        if name not in fresh:
+            print(f"REGRESSION {name}: row disappeared from fresh run",
+                  file=sys.stderr)
+            regressions += 1
+            continue
+        ratio = fresh[name] / base[name]
+        status = "REGRESSION" if ratio > REGRESSION_TOLERANCE else "ok"
+        line = (
+            f"compare {name}: baseline={base[name]:.1f}us "
+            f"fresh={fresh[name]:.1f}us ratio={ratio:.2f} {status}"
+        )
+        print(line, file=sys.stderr if status == "REGRESSION" else sys.stdout)
+        if status == "REGRESSION":
+            regressions += 1
+    return regressions
 
 
 def main() -> None:
@@ -21,8 +86,17 @@ def main() -> None:
         "--json-dir", default=".",
         help="directory for the BENCH_<section>.json files",
     )
+    ap.add_argument(
+        "--compare", default=None, metavar="BASELINE_JSON",
+        help="diff fresh rows against this committed BENCH_<section>.json; "
+        f"exit nonzero on >{REGRESSION_TOLERANCE}x hot-path regressions",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.compare and only is not None:
+        m = re.match(r"BENCH_(\w+)\.json", pathlib.Path(args.compare).name)
+        if m:  # make sure the compared section actually runs
+            only.add(m.group(1))
 
     from benchmarks import (
         common,
@@ -50,6 +124,7 @@ def main() -> None:
     json_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
+    payloads = {}
     for name, fn in sections:
         if only and name not in only:
             continue
@@ -78,6 +153,17 @@ def main() -> None:
             }
         out = json_dir / f"BENCH_{name}.json"
         out.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+        payloads[name] = payload
+    if args.compare:
+        regressions = compare_against_baseline(args.compare, payloads)
+        if regressions:
+            print(
+                f"--compare: {regressions} hot-path regression(s) beyond "
+                f"{REGRESSION_TOLERANCE}x",
+                file=sys.stderr,
+            )
+            raise SystemExit(2)
+        print("--compare: no hot-path regressions")
     if failures:
         raise SystemExit(1)
 

@@ -4,7 +4,9 @@ Two granularities, both storing ONLY the live parameters (no dense mask):
 
 * ``ElementSparse`` — COO element-level sparsity. This is the paper-faithful
   representation (SciPy-CSR equivalent) used for the SET-MLP experiments.
-  Compute is a gather/scatter-add SpMM whose FLOP count is O(B * nnz).
+  Compute is a chunked segment-sum SpMM whose FLOP count is O(B * nnz);
+  topology arrays carry a dual (col,row)/(row,col) order so the hand-derived
+  backward passes are segment reductions too (DESIGN.md §1b).
 
 * ``BlockSparse`` — MXU-aligned block sparsity (TPU adaptation, see DESIGN.md
   §2). Active (block_m, block_n) tiles are stored as a compact
@@ -31,11 +33,15 @@ __all__ = [
     "BlockMeta",
     "BlockTopoArrays",
     "BlockTopology",
+    "ElemTopoArrays",
     "ElementTopology",
+    "coo_dw",
+    "coo_matmul_T",
     "density_from_epsilon",
     "element_spmm",
     "element_spmm_segment",
     "erdos_renyi_nnz",
+    "spmm_chunk_for",
 ]
 
 
@@ -268,8 +274,28 @@ def _ensure_coverage(
 
 
 class ElemTopoArrays(NamedTuple):
+    """Device-side dual-order COO topology. All int32, shape (nnz,).
+
+    Canonical order is sorted by (col, row) — ``cols`` is non-decreasing, so
+    the forward/dW passes are sorted segment reductions. The ``*_r`` fields
+    are the same connections re-sorted by (row, col) for the hand-derived dX
+    backward pass (``rows_r`` non-decreasing — sorted segment ids, no XLA
+    scatter anywhere); ``perm_r[j]`` maps row-ordered slot j back to the
+    canonical slot owning its value. ``first_col``/``first_row`` flag segment
+    boundaries (1 where the sort key changes), mirroring ``BlockTopoArrays``:
+    the XLA-path kernels use ``indices_are_sorted`` segment sums and don't
+    read them, but a Pallas element kernel needs them for its first-visit
+    output-tile zeroing exactly like the block kernels — the layouts are
+    kept identical so the two granularities stay drop-in interchangeable.
+    """
+
     rows: jax.Array
     cols: jax.Array
+    first_col: jax.Array  # 1 where cols[i] != cols[i-1]
+    rows_r: jax.Array
+    cols_r: jax.Array
+    first_row: jax.Array  # 1 where rows_r[i] != rows_r[i-1]
+    perm_r: jax.Array
 
 
 class ElementTopology:
@@ -305,7 +331,19 @@ class ElementTopology:
         return self.nnz / (self.in_dim * self.out_dim)
 
     def device_arrays(self) -> "ElemTopoArrays":
-        return ElemTopoArrays(jnp.asarray(self.rows), jnp.asarray(self.cols))
+        rows, cols = self.rows, self.cols
+        perm_r = np.lexsort((cols, rows)).astype(np.int32)
+        rows_r = rows[perm_r]
+        cols_r = cols[perm_r]
+        return ElemTopoArrays(
+            rows=jnp.asarray(rows),
+            cols=jnp.asarray(cols),
+            first_col=jnp.asarray(_first_flags(cols)),
+            rows_r=jnp.asarray(rows_r),
+            cols_r=jnp.asarray(cols_r),
+            first_row=jnp.asarray(_first_flags(rows_r)),
+            perm_r=jnp.asarray(perm_r),
+        )
 
     def init_values(
         self, rng: np.random.Generator, dtype=jnp.float32, scheme: str = "he_uniform"
@@ -323,10 +361,15 @@ def element_spmm(
 ) -> jax.Array:
     """Truly sparse y = x @ W for COO W. FLOPs = 2 * B * nnz.
 
-    Differentiable through the gather/scatter (XLA generates the transposed
-    scatter/gather pair for the VJP, also O(B * nnz)). Materializes the full
-    (batch, nnz) contribution array — kept as the simple reference; the
-    memory-bounded default is ``element_spmm_segment`` (DESIGN.md §1).
+    Reference/fallback formulation only. It materializes the full
+    (batch, nnz) contribution array, and — worse — its autodiff VJP is the
+    transposed scatter/gather pair XLA emits: the dX path scatters with
+    *unsorted* row indices (the scatter cliff ``BENCH_kernels.json`` measures
+    at 3–14x beyond ~65k nnz) and re-materializes the (batch, nnz)
+    contribution array again on the way back. The memory-bounded default for
+    training is the hand-derived custom-VJP path (``kernels.ops.espmm`` with
+    ``impl="custom"``; DESIGN.md §1 "Backward"), whose three passes all peak
+    at O(batch * chunk).
     """
     contrib = x[..., rows] * values  # (..., nnz)
     out_shape = x.shape[:-1] + (out_dim,)
@@ -334,19 +377,43 @@ def element_spmm(
     return y.at[..., cols].add(contrib)
 
 
-# Largest per-chunk contribution width: peak intermediate of the segment-sum
-# SpMM is (batch, SPMM_CHUNK) regardless of nnz.
-SPMM_CHUNK = 8192
+# Batch-aware chunk policy: instead of a fixed width, target a fixed
+# (batch * chunk) temp-element budget so the peak intermediate of every
+# chunked pass (fwd / dX / dW) is the same number of bytes whatever the
+# batch. 2M f32 elements = 8 MiB per temp; at the benchmark's B=256 this
+# reproduces the previous fixed chunk of 8192.
+SPMM_TEMP_BUDGET_ELEMS = 2 * 1024 * 1024
+# Floor so tiny batches don't degenerate into thousands of scan steps.
+SPMM_CHUNK_MIN = 512
 
-# "auto" impl policy: below this nnz the scatter-add formulation is faster on
-# XLA:CPU (the chunked segment reduction pays scan + transpose overhead that
-# only amortizes at scale), and its (batch, nnz) intermediate is still small;
-# above it XLA's scatter falls off a cliff (measured ~14x slower by nnz=131k)
-# and its intermediate grows unboundedly, so the segment path takes over.
-SPMM_AUTO_NNZ = 65536
-# ...and independently of nnz, switch to the memory-bounded segment path once
-# the (batch, nnz) scatter intermediate would exceed this many elements.
-SPMM_AUTO_ELEMS = 16 * 1024 * 1024
+# "auto" impl policy for ``kernels.ops.espmm`` — calibrated on
+# jax.value_and_grad wall clock (fwd + dX + dW), not forward-only: the
+# scatter formulation's autodiff backward hits the unsorted-scatter cliff
+# far earlier and harder than its forward (measured on XLA:CPU at B=256:
+# custom/scatter value_and_grad speedup 1.2x by nnz=1k, 2.1x by 4k, 5x by
+# 65k, 15x by 262k), so the crossover sits two orders of magnitude below
+# the old forward-only fit of 65536. Below this nnz the scatter-add
+# formulation still wins the *forward* (eval shares this dispatch), its
+# (batch, nnz) intermediate is still tiny, and its backward deficit is
+# ~20% — above it the custom-VJP path wins both directions outright
+# (benchmarks/kernels_micro.py tracks fwd and value_and_grad rows).
+SPMM_AUTO_NNZ = 2048
+# ...and independently of nnz, switch to the memory-bounded custom-VJP path
+# once the (batch, nnz) scatter intermediate (which autodiff re-materializes
+# on the backward pass too) would exceed this many elements.
+SPMM_AUTO_ELEMS = 512 * 1024
+
+
+def spmm_chunk_for(batch: int, nnz: int, chunk: Optional[int] = None) -> int:
+    """Chunk width for the chunked element passes.
+
+    ``chunk=None`` picks the batch-aware width targeting
+    ``SPMM_TEMP_BUDGET_ELEMS`` temp elements; an explicit ``chunk`` is only
+    clamped to [1, nnz].
+    """
+    if chunk is None:
+        chunk = max(SPMM_CHUNK_MIN, SPMM_TEMP_BUDGET_ELEMS // max(1, int(batch)))
+    return max(1, min(int(chunk), max(1, int(nnz))))
 
 
 def element_spmm_segment(
@@ -360,50 +427,137 @@ def element_spmm_segment(
 ) -> jax.Array:
     """Col-sorted segment-sum SpMM (DESIGN.md §1). Same math as
     ``element_spmm`` but the (batch, nnz) contribution array is never
-    materialized at once: nnz is processed in chunks of at most ``chunk``
-    columns via ``jax.ops.segment_sum`` under a ``lax.scan``, so peak
-    intermediate memory is O(batch * chunk) instead of O(batch * nnz).
+    materialized at once: a thin wrapper over :func:`coo_matmul_T` (the
+    shared chunked sorted-segment reduction), so peak intermediate memory is
+    O(batch * chunk) instead of O(batch * nnz).
+
+    Differentiable by XLA autodiff — but autodiff through the scan saves a
+    residual slab per chunk (O(batch * nnz) again); training goes through
+    the hand-derived custom VJP in ``kernels.ops`` instead, which reuses the
+    same primitive for its dX pass over the row-sorted dual order.
 
     Requires the canonical topology ordering (sorted by (col, row) —
     ``ElementTopology`` guarantees it), which makes every chunk's segment ids
     sorted and the segment reduction a single linear pass.
+
+    ``chunk=None`` picks the batch-aware width (``spmm_chunk_for``).
     """
     nnz = int(values.shape[0])
-    if chunk is None:
-        chunk = SPMM_CHUNK
-    chunk = max(1, min(int(chunk), nnz))
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     dtype = jnp.result_type(x2.dtype, values.dtype)
+    if nnz == 0:  # explicit: no connections -> zero output, no scan
+        return jnp.zeros((*lead, out_dim), dtype)
+    yT = coo_matmul_T(x2.T, values, rows, cols, out_dim, chunk=chunk)
+    return yT.T.reshape(*lead, out_dim)
 
-    def one_chunk(r, c, v):
-        contrib = x2[:, r] * v  # (B, chunk)
+
+# ---------------------------------------------------------------------------
+# transpose-free chunked passes (DESIGN.md §1 "Backward")
+#
+# The three passes of the hand-derived espmm VJP are the same primitive:
+# a chunked sorted-segment reduction computed in transposed (features, batch)
+# layout, so the only layout changes are one transpose of the operand on the
+# way in and one of the result on the way out — never per chunk.
+# ---------------------------------------------------------------------------
+
+
+def coo_matmul_T(
+    srcT: jax.Array,
+    values: jax.Array,
+    gather_idx: jax.Array,
+    segment_idx: jax.Array,
+    n_segments: int,
+    *,
+    chunk: Optional[int] = None,
+) -> jax.Array:
+    """``accT[segment_idx[j], :] += srcT[gather_idx[j], :] * values[j]``.
+
+    ``srcT`` is (src_dim, B); returns (n_segments, B). ``segment_idx`` must be
+    non-decreasing — the canonical (col, row) order for the forward
+    (gather rows, segment cols) and the row-sorted dual order for dX
+    (gather cols_r, segment rows_r) both guarantee it — so every chunk's
+    ``segment_sum`` is one sorted linear pass, no scatter. Peak intermediate
+    is the (chunk, B) contribution slab; nnz is walked by a ``lax.scan``.
+    """
+    nnz = int(values.shape[0])
+    B = srcT.shape[-1]
+    dtype = jnp.result_type(srcT.dtype, values.dtype)
+    if nnz == 0:
+        return jnp.zeros((n_segments, B), dtype)
+    chunk = spmm_chunk_for(B, nnz, chunk)
+
+    def one_chunk(g, s, v):
+        contrib = srcT[g, :] * v[:, None]  # (chunk, B) — already transposed
         return jax.ops.segment_sum(
-            contrib.T.astype(dtype), c, num_segments=out_dim,
+            contrib.astype(dtype), s, num_segments=n_segments,
             indices_are_sorted=True,
-        ).T  # (B, out_dim)
+        )
 
     n_chunks = -(-nnz // chunk)
     if n_chunks == 1:
-        y = one_chunk(rows, cols, values)
-    else:
-        pad = n_chunks * chunk - nnz
-        # padded slots: col == out_dim (dropped by segment_sum) and value 0
-        rows_p = jnp.concatenate([rows, jnp.zeros((pad,), rows.dtype)])
-        cols_p = jnp.concatenate([cols, jnp.full((pad,), out_dim, cols.dtype)])
-        vals_p = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
-        slices = (
-            rows_p.reshape(n_chunks, chunk),
-            cols_p.reshape(n_chunks, chunk),
-            vals_p.reshape(n_chunks, chunk),
-        )
+        return one_chunk(gather_idx, segment_idx, values)
+    pad = n_chunks * chunk - nnz
+    # padded slots: segment id == n_segments (dropped by segment_sum, and
+    # >= every real id so per-chunk sortedness holds) and value 0
+    g_p = jnp.concatenate([gather_idx, jnp.zeros((pad,), gather_idx.dtype)])
+    s_p = jnp.concatenate(
+        [segment_idx, jnp.full((pad,), n_segments, segment_idx.dtype)]
+    )
+    v_p = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+    slices = (
+        g_p.reshape(n_chunks, chunk),
+        s_p.reshape(n_chunks, chunk),
+        v_p.reshape(n_chunks, chunk),
+    )
 
-        def body(y, sl):
-            return y + one_chunk(*sl), None
+    def body(acc, sl):
+        return acc + one_chunk(*sl), None
 
-        y0 = jnp.zeros((x2.shape[0], out_dim), dtype)
-        y, _ = jax.lax.scan(body, y0, slices)
-    return y.reshape(*lead, out_dim)
+    acc0 = jnp.zeros((n_segments, B), dtype)
+    acc, _ = jax.lax.scan(body, acc0, slices)
+    return acc
+
+
+def coo_dw(
+    xT: jax.Array,
+    dyT: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    chunk: Optional[int] = None,
+) -> jax.Array:
+    """Per-slot batch contraction ``dv[j] = sum_b x[b, rows[j]] * dy[b, cols[j]]``.
+
+    ``xT`` is (in_dim, B), ``dyT`` is (out_dim, B); returns (nnz,) aligned to
+    the canonical slot order. Chunked like :func:`coo_matmul_T`: the two
+    gathered (chunk, B) slabs are the peak intermediate, reduced over batch
+    immediately — the (batch, nnz) contribution array is never materialized.
+    """
+    nnz = int(rows.shape[0])
+    dtype = jnp.result_type(xT.dtype, dyT.dtype)
+    if nnz == 0:
+        return jnp.zeros((0,), dtype)
+    chunk = spmm_chunk_for(xT.shape[-1], nnz, chunk)
+
+    def one_chunk(r, c):
+        return (xT[r, :].astype(dtype) * dyT[c, :].astype(dtype)).sum(axis=-1)
+
+    n_chunks = -(-nnz // chunk)
+    if n_chunks == 1:
+        return one_chunk(rows, cols)
+    pad = n_chunks * chunk - nnz
+    # padded slots gather slot 0 — their outputs are sliced off below
+    r_p = jnp.concatenate([rows, jnp.zeros((pad,), rows.dtype)])
+    c_p = jnp.concatenate([cols, jnp.zeros((pad,), cols.dtype)])
+
+    def body(carry, sl):
+        return carry, one_chunk(*sl)
+
+    _, dv = jax.lax.scan(
+        body, 0, (r_p.reshape(n_chunks, chunk), c_p.reshape(n_chunks, chunk))
+    )
+    return dv.reshape(-1)[:nnz]
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ from repro.core.sparsity import (
     BlockMeta,
     BlockTopoArrays,
     BlockTopology,
+    ElemTopoArrays,
     ElementTopology,
 )
 
@@ -51,6 +52,7 @@ __all__ = [
     "evolve_element_device_reference",
     "evolve_block_device",
     "block_device_arrays",
+    "element_device_arrays",
     "retain_valid_updates_element",
     "retain_valid_updates_block",
     "prune_indices_by_magnitude",
@@ -502,6 +504,43 @@ def evolve_block_device(
     return new_rows[order2], new_cols[order2], vals[order2], mom[order2], n_drop
 
 
+def _dual_order_views(rows: jax.Array, cols: jax.Array, n_cols: int):
+    """Shared builder for both granularities' device topology views: from
+    canonical (col, row)-sorted coordinates, derive the segment-boundary
+    flags and the row-sorted mirror + permutation. ``n_cols`` is the column
+    key cardinality (out_dim for elements, grid_n for blocks); the flat key
+    ``rows * n_cols + cols`` must fit int32. Field order matches both
+    ``ElemTopoArrays`` and ``BlockTopoArrays``."""
+    n = rows.shape[0]
+    ones = jnp.ones((n,), jnp.int32)
+    first_col = ones.at[1:].set((cols[1:] != cols[:-1]).astype(jnp.int32))
+    perm_r = jnp.argsort(rows * n_cols + cols).astype(jnp.int32)
+    rows_r = rows[perm_r]
+    cols_r = cols[perm_r]
+    first_row = ones.at[1:].set((rows_r[1:] != rows_r[:-1]).astype(jnp.int32))
+    return rows, cols, first_col, rows_r, cols_r, first_row, perm_r
+
+
+@functools.partial(jax.jit, static_argnames=("in_dim", "out_dim"))
+def element_device_arrays(
+    rows: jax.Array, cols: jax.Array, *, in_dim: int, out_dim: int
+) -> ElemTopoArrays:
+    """Device-resident analogue of ``ElementTopology.device_arrays``: builds
+    the dual-order views (segment-boundary flags, row-sorted permutation)
+    from canonical (col, row)-sorted COO coordinates without a host
+    round-trip — ``evolve_element_device`` callers chain straight into this
+    so the custom-VJP espmm backward always sees fresh dual arrays.
+
+    Requires ``in_dim * out_dim < 2**31`` (same flat-position encoding as
+    the device evolution path)."""
+    if in_dim * out_dim >= 2**31:
+        raise ValueError(
+            "flat position encoding needs in_dim*out_dim < 2**31, "
+            f"got {in_dim * out_dim}"
+        )
+    return ElemTopoArrays(*_dual_order_views(rows, cols, out_dim))
+
+
 @functools.partial(jax.jit, static_argnames=("meta",))
 def block_device_arrays(
     rows: jax.Array, cols: jax.Array, *, meta: BlockMeta
@@ -509,17 +548,7 @@ def block_device_arrays(
     """Device-resident analogue of ``BlockTopology.device_arrays``: builds the
     kernels' derived views (first-visit flags, row-sorted permutation) from
     canonical (col, row)-sorted coordinates without a host round-trip."""
-    nb = rows.shape[0]
-    ones = jnp.ones((nb,), jnp.int32)
-    first_col = ones.at[1:].set((cols[1:] != cols[:-1]).astype(jnp.int32))
-    perm_r = jnp.argsort(rows * meta.grid_n + cols).astype(jnp.int32)
-    rows_r = rows[perm_r]
-    cols_r = cols[perm_r]
-    first_row = ones.at[1:].set((rows_r[1:] != rows_r[:-1]).astype(jnp.int32))
-    return BlockTopoArrays(
-        rows=rows, cols=cols, first_col=first_col,
-        rows_r=rows_r, cols_r=cols_r, first_row=first_row, perm_r=perm_r,
-    )
+    return BlockTopoArrays(*_dual_order_views(rows, cols, meta.grid_n))
 
 
 def _sample_vacant(

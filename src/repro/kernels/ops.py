@@ -12,11 +12,22 @@ topology arrays):
 
 Element granularity (the paper-faithful COO path) — dispatched by ``espmm``:
 
-* ``segment`` (default) — chunked col-sorted ``jax.ops.segment_sum``; peak
-                          intermediate memory O(batch * chunk), not
-                          O(batch * nnz) (DESIGN.md §1).
-* ``scatter``           — the original gather/scatter-add formulation
-                          (materializes (batch, nnz); reference/fallback).
+* ``custom``  — hand-derived ``custom_vjp`` over the transpose-free chunked
+                segment-sum passes (DESIGN.md §1 "Backward"): forward in
+                transposed (out_dim, batch) layout over the canonical
+                (col, row) order; dX over the row-sorted dual order (sorted
+                segment ids — no XLA scatter anywhere in the train step);
+                dW as a chunked per-slot batch contraction. All three passes
+                peak at O(batch * chunk) intermediate memory.
+* ``segment`` — the same chunked forward with XLA-autodiff backward; never
+                selected by ``auto`` (its scan autodiff re-materializes
+                O(batch * nnz) residuals) — reachable only when pinned, as
+                the benchmarks' autodiff baseline.
+* ``scatter`` — the original gather/scatter-add formulation (materializes
+                (batch, nnz); reference/fallback).
+* ``auto``    — ``scatter`` for small problems, ``custom`` at scale;
+                thresholds calibrated on value_and_grad wall clock
+                (``core.sparsity.SPMM_AUTO_*``).
 """
 from __future__ import annotations
 
@@ -32,8 +43,11 @@ from repro.core.sparsity import (
     BlockMeta,
     BlockTopoArrays,
     ElemTopoArrays,
+    coo_dw,
+    coo_matmul_T,
     element_spmm,
     element_spmm_segment,
+    spmm_chunk_for,
 )
 from repro.kernels import block_sparse_matmul as _k
 
@@ -172,6 +186,64 @@ def bsmm(
 # ---------------------------------------------------------------------------
 # Element-sparse (COO) path
 # ---------------------------------------------------------------------------
+#
+# Hand-derived VJP (DESIGN.md §1 "Backward"). For y = x @ W with W in COO:
+#
+#   fwd  yT[cols[j], :]  += xT[rows[j], :]  * v[j]     canonical (col,row)
+#   dX   dxT[rows_r[j],:] += dyT[cols_r[j],:] * v[perm_r[j]]   row-sorted
+#   dW   dv[j]            = sum_b x[b, rows[j]] * dy[b, cols[j]]
+#
+# Every pass is a chunked sorted-segment reduction (or contraction) in
+# transposed (features, batch) layout — no per-chunk transposes, no XLA
+# scatter, peak intermediate O(batch * chunk) for all three.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _espmm_core(out_dim: int, chunk, x2, values, topo: ElemTopoArrays):
+    yT = coo_matmul_T(
+        x2.T, values, topo.rows, topo.cols, out_dim, chunk=chunk
+    )
+    return yT.T
+
+
+def _espmm_core_fwd(out_dim, chunk, x2, values, topo):
+    y = _espmm_core(out_dim, chunk, x2, values, topo)
+    return y, (x2, values, topo)
+
+
+def _espmm_core_bwd(out_dim, chunk, res, dy):
+    x2, values, topo = res
+    in_dim = x2.shape[-1]
+    dyT = dy.T
+    # dX over the row-sorted dual order: segment ids (rows_r) sorted, the
+    # values gathered through perm_r from their canonical slots
+    dxT = coo_matmul_T(
+        dyT, values[topo.perm_r], topo.cols_r, topo.rows_r, in_dim,
+        chunk=chunk,
+    )
+    # dW in canonical slot order
+    dv = coo_dw(x2.T, dyT, topo.rows, topo.cols, chunk=chunk)
+    dtopo = ElemTopoArrays(*(_float0_zeros(t) for t in topo))
+    return dxT.T.astype(x2.dtype), dv.astype(values.dtype), dtopo
+
+
+_espmm_core.defvjp(_espmm_core_fwd, _espmm_core_bwd)
+
+
+def espmm_custom(
+    x: jax.Array,
+    values: jax.Array,
+    topo: ElemTopoArrays,
+    out_dim: int,
+    *,
+    chunk: int | None = None,
+) -> jax.Array:
+    """Element-sparse ``y = x @ W`` with the hand-derived custom VJP."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    chunk = spmm_chunk_for(x2.shape[0], int(values.shape[0]), chunk)
+    y = _espmm_core(out_dim, chunk, x2, values, topo)
+    return y.reshape(*lead, out_dim)
 
 
 def espmm(
@@ -186,15 +258,20 @@ def espmm(
     """Element-sparse ``y = x @ W`` for COO topology arrays.
 
     ``auto`` (default) picks per call site: scatter-add for small problems
-    (faster on CPU XLA, intermediate still tiny), the chunked segment-sum
-    path once nnz or the (batch, nnz) intermediate crosses the thresholds in
-    ``core.sparsity`` — keeping peak memory flat in nnz at scale.
+    (faster on CPU XLA, intermediate still tiny, and its autodiff backward
+    is still cheap), the hand-derived custom-VJP path once nnz or the
+    (batch, nnz) intermediate crosses the thresholds in ``core.sparsity`` —
+    keeping peak memory flat in nnz and the backward scatter-free at scale.
+    The thresholds are calibrated on ``value_and_grad`` timings (a train
+    step is ~2/3 backward), not forward-only ones.
     """
     if impl == "auto":
         nnz = int(values.shape[0])
         batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
         big = nnz >= SPMM_AUTO_NNZ or batch * nnz >= SPMM_AUTO_ELEMS
-        impl = "segment" if big else "scatter"
+        impl = "custom" if big else "scatter"
+    if impl == "custom":
+        return espmm_custom(x, values, topo, out_dim, chunk=chunk)
     if impl == "segment":
         return element_spmm_segment(
             x, values, topo.rows, topo.cols, out_dim, chunk=chunk

@@ -2,8 +2,11 @@
 shared by the dry-run, the pod training driver, and the serving driver.
 
 train_step: momentum-SGD (paper Eq. 1) on CE loss (+ MoE aux), gradients
-reduced over the data axes by GSPMD from the in/out shardings. Sparse-FFN
-topology arrays ride along as non-trainable inputs.
+reduced over the data axes by GSPMD from the in/out shardings. Sparse
+topology arrays ride along as non-trainable inputs — for the element (COO)
+path that now includes the dual-order views (``ElemTopoArrays``), so the
+whole step (forward AND the hand-derived custom-VJP backward) runs on the
+chunked segment-sum kernels with no XLA scatter anywhere.
 """
 from __future__ import annotations
 
@@ -13,11 +16,36 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models.mlp import SparseMLPConfig, cross_entropy_loss, mlp_forward
 from repro.models.transformer import PatternLM, chunked_softmax_xent
 from repro.models.whisper import WhisperModel
 from repro.optim.sgd import MomentumSGD
 
 PyTree = Any
+
+
+def make_mlp_train_step(config: SparseMLPConfig, opt: MomentumSGD):
+    """Jitted single-minibatch SET-MLP train step (value_and_grad + update).
+
+    The shared building block for the sequential trainer's per-batch mode
+    and the kernels micro-benchmark's train-step row: one espmm per layer in
+    the forward, the custom-VJP dX/dW passes in the backward (for
+    ``element_impl`` in {"auto", "custom"}), then the momentum-SGD update.
+    Topology arrays are non-trainable inputs, so SET evolution between calls
+    never recompiles it.
+    """
+
+    @jax.jit
+    def step(params, opt_state, topo_arrays, x, y, lr, rng):
+        def loss_fn(p):
+            logits = mlp_forward(p, topo_arrays, x, config, train=True, rng=rng)
+            return cross_entropy_loss(logits, y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, loss
+
+    return step
 
 
 def scan_segment(step_core, params, opt_state, key, step_inputs):

@@ -5,6 +5,12 @@ live connections (ElementTopology COO — the paper-faithful path) or as live
 MXU blocks (BlockTopology — the TPU path). The activation is All-ReLU with
 the paper's 1-based hidden-layer parity; the output layer is linear.
 
+The COO path carries dual-order topology arrays (``ElemTopoArrays``): the
+canonical (col, row) order drives the forward/dW segment reductions and the
+row-sorted mirror drives the hand-derived dX backward pass, so training
+steps differentiate through ``kops.espmm`` without any XLA scatter
+(DESIGN.md §1 "Backward").
+
 The forward/step functions are pure (jit-able); all topology mutation happens
 host-side in the trainer between epochs, matching the paper's protocol.
 """
@@ -38,8 +44,13 @@ class SparseMLPConfig:
     dropout: float = 0.3
     init: str = "he_uniform"
     impl: str = "element"  # element | block | masked | dense
-    element_impl: str = "auto"  # auto (default) | segment | scatter — kops.espmm
-    spmm_chunk: Optional[int] = None  # None -> sparsity.SPMM_CHUNK
+    # kops.espmm dispatch: auto (default) | custom | segment | scatter.
+    # "auto" trains on the hand-derived custom-VJP kernels beyond the
+    # value_and_grad-calibrated thresholds in core.sparsity.
+    element_impl: str = "auto"
+    # None -> batch-aware width targeting sparsity.SPMM_TEMP_BUDGET_ELEMS
+    # temp elements per chunked pass (sparsity.spmm_chunk_for)
+    spmm_chunk: Optional[int] = None
     block_m: int = 128
     block_n: int = 128
     dtype: str = "float32"

@@ -48,10 +48,10 @@ from repro.core.sparsity import (
     BlockMeta,
     BlockTopology,
     ElementTopology,
-    ElemTopoArrays,
 )
 from repro.core.topology import (
     block_device_arrays,
+    element_device_arrays,
     evolve_block,
     evolve_block_device,
     evolve_element,
@@ -59,7 +59,7 @@ from repro.core.topology import (
 )
 from repro.data.loader import ShardedLoader
 from repro.data.synthetic import Dataset
-from repro.launch.steps import scan_segment
+from repro.launch.steps import make_mlp_train_step, scan_segment
 from repro.models.mlp import (
     SparseMLP,
     SparseMLPConfig,
@@ -96,17 +96,9 @@ class TrainerConfig:
 
 
 def make_step_fn(config: SparseMLPConfig, opt: MomentumSGD):
-    @jax.jit
-    def step(params, opt_state, topo_arrays, x, y, lr, rng):
-        def loss_fn(p):
-            logits = mlp_forward(p, topo_arrays, x, config, train=True, rng=rng)
-            return cross_entropy_loss(logits, y)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params, lr)
-        return params, opt_state, loss
-
-    return step
+    """Single-minibatch jitted step — shared with the kernels micro-benchmark
+    via ``launch.steps.make_mlp_train_step``."""
+    return make_mlp_train_step(config, opt)
 
 
 @functools.lru_cache(maxsize=32)
@@ -279,7 +271,12 @@ class SequentialTrainer:
                     in_dim=n_in, out_dim=n_out, zeta=tc.zeta,
                     init_scheme=cfg.init,
                 )
-                new_topo[l] = ElemTopoArrays(rows, cols)
+                # rebuild the dual-order views (row-sorted mirror + boundary
+                # flags) on-device so the custom-VJP backward never sees a
+                # stale permutation after connections move
+                new_topo[l] = element_device_arrays(
+                    rows, cols, in_dim=n_in, out_dim=n_out
+                )
             else:
                 meta = BlockMeta(
                     cfg.layer_dims[l], cfg.layer_dims[l + 1],

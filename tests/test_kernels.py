@@ -212,8 +212,10 @@ def test_espmm_dispatcher():
     t = topo.device_arrays()
     y_seg = ops.espmm(x, vals, t, topo.out_dim, impl="segment")
     y_sc = ops.espmm(x, vals, t, topo.out_dim, impl="scatter")
+    y_cus = ops.espmm(x, vals, t, topo.out_dim, impl="custom")
     y_auto = ops.espmm(x, vals, t, topo.out_dim)  # default: auto
     np.testing.assert_allclose(np.asarray(y_seg), np.asarray(y_sc), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_cus), np.asarray(y_sc), rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_sc), rtol=1e-5, atol=1e-6)
     with pytest.raises(ValueError):
         ops.espmm(x, vals, t, topo.out_dim, impl="nope")
