@@ -31,6 +31,10 @@ HOT_PATH_ROWS = {
         "kernels/espmm_segment_nnz0",
         "kernels/train_step_element_auto",
     ],
+    "table3": [
+        "table3/phase1_epoch/fashionmnist/fused_vmap",
+        "table3/phase1_epoch/fashionmnist/fused_shardmap",
+    ],
 }
 REGRESSION_TOLERANCE = 1.25  # fresh > 1.25x baseline => fail
 

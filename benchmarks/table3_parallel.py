@@ -1,5 +1,9 @@
-"""Paper Table 3: WASAP-SGD vs WASSP-SGD vs sequential — accuracy + time."""
+"""Paper Table 3: WASAP-SGD vs WASSP-SGD vs sequential — accuracy + time,
+plus the phase-1 epoch-fusion comparison (seed round-loop vs the
+device-resident fused epoch, vmap vs shard_map worker axis)."""
 import time
+
+import numpy as np
 
 from benchmarks.common import SCALES, row
 from repro.core.wasap import WASAPConfig, WASAPTrainer
@@ -8,36 +12,38 @@ from repro.models.mlp import SparseMLP, SparseMLPConfig
 from repro.train.trainer import SequentialTrainer, TrainerConfig
 
 
-def run(scale_name="ci", name="fashionmnist", workers=3, seed=0):
-    scale = SCALES[scale_name]
+def _mk(dims, hp, seed):
+    return SparseMLP(
+        SparseMLPConfig(
+            layer_dims=dims, epsilon=hp["epsilon"], activation="all_relu",
+            alpha=hp["alpha"], dropout=0.1, init=hp["init"], impl="element",
+        ),
+        seed=seed,
+    )
+
+
+def accuracy_comparison(scale, name="fashionmnist", workers=3, seed=0):
+    """The paper's Table 3 columns: final accuracy + total wall clock."""
     data = datasets.load(name, scale=scale.data_scale, seed=seed)
     hp = datasets.PAPER_HPARAMS[name]
     dims = (data.n_features, 64, 64, 64, data.n_classes)
-    out = []
-
-    def mk():
-        return SparseMLP(
-            SparseMLPConfig(
-                layer_dims=dims, epsilon=hp["epsilon"], activation="all_relu",
-                alpha=hp["alpha"], dropout=0.1, init=hp["init"], impl="element",
-            ),
-            seed=seed,
-        )
+    out = {}
 
     # sequential baseline
     t0 = time.perf_counter()
     hist = SequentialTrainer(
-        mk(), data,
-        TrainerConfig(epochs=scale.epochs, batch_size=32, lr=hp["lr"], zeta=0.3, seed=seed),
+        _mk(dims, hp, seed), data,
+        TrainerConfig(epochs=scale.epochs, batch_size=32, lr=hp["lr"],
+                      zeta=0.3, seed=seed),
     ).run()
     dt = time.perf_counter() - t0
-    out.append(("sequential", hist["test_acc"][-1], dt))
+    out["sequential"] = {"acc": hist["test_acc"][-1], "seconds": dt}
     row(f"table3/{name}/sequential", dt * 1e6, f"acc={hist['test_acc'][-1]:.4f}")
 
     for mode in ("wassp", "wasap"):
         t0 = time.perf_counter()
         wt = WASAPTrainer(
-            mk(), data,
+            _mk(dims, hp, seed), data,
             WASAPConfig(
                 n_workers=workers, phase1_epochs=max(1, scale.epochs - 2),
                 phase2_epochs=2, sync_every=4, lr=hp["lr"], zeta=0.3,
@@ -46,9 +52,100 @@ def run(scale_name="ci", name="fashionmnist", workers=3, seed=0):
         )
         hist = wt.run()
         dt = time.perf_counter() - t0
-        out.append((mode, hist["test_acc"][-1], dt))
+        out[mode] = {"acc": hist["test_acc"][-1], "seconds": dt}
         row(f"table3/{name}/{mode}", dt * 1e6, f"acc={hist['test_acc'][-1]:.4f}")
     return out
+
+
+def phase1_epoch_comparison(scale, name="fashionmnist", workers=4, seed=0,
+                            batch_size=4, sync_every=1):
+    """Phase-1 per-epoch wall clock — the tentpole number.
+
+    Variants (same model/data/seed; median of steady-state epochs, epoch 0
+    excluded as compile amortization; the trainer blocks on device results
+    before reading the clock):
+      * ``seed``           — the seed-era round loop: Python re-entry each
+                             sync round, host-side replication of the full
+                             param/optimizer pytree, numpy batch stacking,
+                             host numpy evolution.
+      * ``fused_vmap``     — ONE jitted donated call per epoch scanning all
+                             rounds on device (worker axis as vmap) +
+                             device-resident master evolution.
+      * ``fused_shardmap`` — the same epoch shard_map'd over the data axis
+                             of the worker mesh (1-device data axis on this
+                             host unless devices are forced): the pod
+                             program, same semantics.
+
+    Measured at small batch and small H (many sync rounds/epoch) — the
+    dispatch-bound regime the fusion targets, mirroring table2's epoch
+    segment comparison. At CI scale the data is 1/50th of the paper's, so
+    the per-round host overhead the seed loop pays (Python re-entry, pytree
+    replication, numpy stacking) only dominates when rounds are frequent;
+    at full scale every regime is dispatch-bound for the seed loop. The
+    fused path's fixed per-epoch cost is the device master evolution, whose
+    XLA sorts are CPU-slow but accelerator-fast.
+    """
+    data = datasets.load(name, scale=scale.data_scale, seed=seed)
+    hp = datasets.PAPER_HPARAMS[name]
+    dims = (data.n_features, 64, 64, 64, data.n_classes)
+    epochs = max(8, scale.epochs)  # median over 7 steady-state epochs
+    out = {}
+    variants = (
+        ("seed", False, "vmap"),
+        ("fused_vmap", True, "vmap"),
+        ("fused_shardmap", True, "shard_map"),
+    )
+    for mode, fused, worker_axis in variants:
+        wt = WASAPTrainer(
+            _mk(dims, hp, seed), data,
+            WASAPConfig(
+                n_workers=workers, phase1_epochs=epochs, phase2_epochs=0,
+                sync_every=sync_every, lr=hp["lr"], zeta=0.3, seed=seed,
+                batch_size=batch_size, fused=fused, worker_axis=worker_axis,
+            ),
+        )
+        hist = wt.run()
+        p1 = [
+            s for s, ph in zip(hist["epoch_seconds"], hist["phase"]) if ph == 1
+        ]
+        per_epoch = float(np.median(p1[1:]))  # epoch 0 pays the compile
+        out[f"{mode}_per_epoch_s"] = per_epoch
+        out[f"{mode}_acc"] = max(
+            a for a, ph in zip(hist["test_acc"], hist["phase"]) if ph == 1
+        )
+        row(
+            f"table3/phase1_epoch/{name}/{mode}",
+            per_epoch * 1e6,
+            f"epochs={epochs};batch={batch_size};h={sync_every};"
+            f"workers={workers};acc={out[f'{mode}_acc']:.4f}",
+        )
+    out["fused_speedup_vs_seed"] = (
+        out["seed_per_epoch_s"] / out["fused_vmap_per_epoch_s"]
+    )
+    out["shardmap_vs_vmap"] = (
+        out["fused_vmap_per_epoch_s"] / out["fused_shardmap_per_epoch_s"]
+    )
+    row(
+        f"table3/phase1_epoch/{name}/speedup",
+        0.0,
+        f"fused_vs_seed={out['fused_speedup_vs_seed']:.2f}x;"
+        f"shardmap_vs_vmap={out['shardmap_vs_vmap']:.2f}x",
+    )
+    return out
+
+
+def run(scale_name="ci", name="fashionmnist", workers=3, seed=0,
+        phase1_workers=4):
+    # the two sections intentionally differ: accuracy mirrors the paper's
+    # 3-worker Table 3 setup, the phase-1 timing regime is pinned at 4
+    # workers (the committed BENCH_table3.json baseline)
+    scale = SCALES[scale_name]
+    return {
+        "accuracy": accuracy_comparison(scale, name, workers, seed),
+        "phase1_epoch": phase1_epoch_comparison(
+            scale, name, workers=phase1_workers, seed=seed
+        ),
+    }
 
 
 if __name__ == "__main__":

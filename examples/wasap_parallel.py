@@ -20,6 +20,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=3)
     ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument(
+        "--worker-axis", default="vmap", choices=("vmap", "shard_map"),
+        help="phase-1 worker axis: vmap (single device) or shard_map over "
+        "the data mesh axis (the pod program; bit-identical results)",
+    )
     args = ap.parse_args()
 
     data = datasets.load("fashionmnist", scale=0.03)
@@ -40,7 +45,7 @@ def main():
         mk(), data,
         WASAPConfig(n_workers=args.workers, phase1_epochs=args.epochs - 2,
                     phase2_epochs=2, sync_every=4, lr=hp["lr"], zeta=0.3,
-                    mode="wasap", batch_size=32),
+                    mode="wasap", batch_size=32, worker_axis=args.worker_axis),
     )
     hist = trainer.run()
     print(f"final acc={hist['test_acc'][-1]:.4f} params={hist['n_params'][-1]}")

@@ -91,13 +91,18 @@ def importance_prune_element(
     """
     values = np.asarray(values, np.float32)
     imp = neuron_importance_element(topo, values)
-    t = schedule.resolve_threshold(imp[np.unique(topo.cols)])
-    prune_mask = imp < t
+    # only columns with at least one incoming connection are prunable —
+    # zero-degree neurons have nothing to remove and must not be reported
+    # in pruned_neurons (they would over-count the prune)
+    live = np.zeros(topo.out_dim, bool)
+    live[topo.cols] = True
+    t = schedule.resolve_threshold(imp[live])
+    prune_mask = (imp < t) & live
     if protected is not None:
         prune_mask[protected] = False
-    # never prune ALL neurons
-    if prune_mask.all():
-        keep_one = int(np.argmax(imp))
+    # never prune ALL live neurons
+    if prune_mask[live].all() and live.any():
+        keep_one = int(np.flatnonzero(live)[np.argmax(imp[live])])
         prune_mask[keep_one] = False
     pruned = np.flatnonzero(prune_mask)
     keep = ~np.isin(topo.cols, pruned)

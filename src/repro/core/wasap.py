@@ -1,45 +1,78 @@
-"""WASAP-SGD (paper Algorithm 1) — SPMD/TPU adaptation.
+"""WASAP-SGD (paper Algorithm 1) — device-resident SPMD/TPU adaptation.
 
 Phase 1 (paper: async parameter server) → **local SGD with periodic sparse
 model averaging**: K workers take H local momentum-SGD steps on their data
 shards, then weights (and momentum) are averaged. H>1 reproduces asynchrony's
 communication-avoidance and staleness; H=1 with the Goyal warmup/linear-
 scaling schedule is exactly the paper's synchronous control, WASSP-SGD.
-The master's periodic topology evolution runs at epoch boundaries on the
-averaged model, and every worker update is implicitly `RetainValidUpdates`-
-filtered because values are re-aligned to the evolved topology before workers
-resume (DESIGN.md §2 maps this to the paper's line 14).
 
-Phase 2: workers train **locally** and evolve their own topologies
-independently (per-worker PRNG streams); at the end the K sparse models are
-averaged over the union of their topologies and re-sparsified to the target
-connection count by the paper's sign-aware magnitude rule (Algorithm 1,
-line 37).
+Phase 1 runs on the device-resident substrate (DESIGN.md §4): ONE jitted,
+buffer-donated call per epoch ``lax.scan``s over the sync rounds — an inner
+scan over the H local steps per worker, then an on-device pytree average
+between rounds. The training set lives on the device; the host ships only
+each worker-shard's epoch index permutation (``ShardedLoader.epoch_order``),
+per-step learning rates, and validity weights (tail rounds are padded to a
+static H so one compile serves the whole run). The worker axis is expressed
+two interchangeable ways, selected by ``WASAPConfig.worker_axis``:
 
-Everything device-side is expressed as a vmap over the worker axis, which is
-exactly the per-`data`-mesh-axis program shard_map would run on a pod — the
-same functions drive both the CPU tests and the pod launcher.
+* ``"vmap"``   — stacked (K, ...) worker axis on one device (CPU tests).
+* ``"shard_map"`` — the same program shard_map'd over the 'data' axis of a
+  ``launch.mesh.make_worker_mesh`` mesh, each shard vmapping its local
+  workers and averaging after an ``all_gather`` over the axis (the
+  deterministic-order equivalent of a pmean) — bit-identical to the vmap
+  path, and the per-shard program a pod runs.
+
+The master's topology evolution between epochs runs jitted on fixed-capacity
+arrays (``core.topology.evolve_element_layers_device``) — zero recompiles,
+zero host<->device parameter traffic for the whole phase. Every worker
+update is implicitly `RetainValidUpdates`-filtered because values are
+re-aligned to the evolved topology before workers resume (the paper's
+Algorithm 1 line 14).
+
+Phase 2: workers train **locally** on the fused epoch segments
+(``train.trainer.make_segment_fn``) and evolve their own topologies
+independently on device (per-worker PRNG streams); at the end the K sparse
+models are averaged over the union of their topologies and re-sparsified to
+the target connection count by the paper's sign-aware magnitude rule
+(Algorithm 1, line 37).
+
+``WASAPConfig.fused=False`` keeps the seed-era round loop — per-round Python
+dispatch, host-side replication, numpy batch stacking, host evolution — as
+the measured baseline for ``benchmarks/table3_parallel.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.core.sparsity import ElementTopology, element_spmm
-from repro.core.topology import evolve_element, prune_indices_by_magnitude
+from repro.core.sparsity import ElementTopology
+from repro.core.topology import (
+    evolve_element,
+    evolve_element_layers_device,
+    prune_indices_by_magnitude,
+)
 from repro.data.loader import ShardedLoader
 from repro.data.synthetic import Dataset
-from repro.models.mlp import SparseMLP, SparseMLPConfig, cross_entropy_loss, mlp_forward
-from repro.optim.sgd import MomentumSGD, SGDState
-from repro.train.trainer import evaluate
+from repro.launch.mesh import make_worker_mesh
+from repro.launch.steps import make_mlp_step_core, scan_masked_segment
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
+from repro.train.trainer import evaluate, make_segment_fn, make_step_fn
 
-__all__ = ["WASAPConfig", "WASAPTrainer", "sparse_average_and_resparsify"]
+__all__ = [
+    "WASAPConfig",
+    "WASAPTrainer",
+    "make_phase1_epoch_fn",
+    "sparse_average_and_resparsify",
+]
 
 
 @dataclasses.dataclass
@@ -59,47 +92,13 @@ class WASAPConfig:
     seed: int = 0
     batch_size: int = 32
     average_momentum: bool = True
+    fused: bool = True           # one jitted call per epoch (False: seed loop)
+    worker_axis: str = "vmap"    # vmap | shard_map
 
 
 # ---------------------------------------------------------------------------
 # device-side worker programs
 # ---------------------------------------------------------------------------
-
-
-def _make_worker_round(config: SparseMLPConfig, opt: MomentumSGD):
-    """One sync round: each worker runs H local steps over its own batches.
-
-    Stacked worker axis (K, ...) — on a pod this axis is the `data` mesh axis
-    and vmap becomes shard_map; semantics identical.
-    """
-
-    @jax.jit
-    def worker_round(stacked_params, stacked_opt, topo, xs, ys, lrs, rngs):
-        # xs: (K, H, B, F); ys: (K, H, B); lrs: (H,)
-        def per_worker(params, opt_state, x_h, y_h, rng):
-            def step(carry, hb):
-                params, opt_state, rng = carry
-                x, y, lr = hb
-
-                def loss_fn(p):
-                    logits = mlp_forward(
-                        p, topo, x, config, train=True, rng=rng
-                    )
-                    return cross_entropy_loss(logits, y)
-
-                rng, sub = jax.random.split(rng)
-                loss, grads = jax.value_and_grad(loss_fn)(params)
-                params, opt_state = opt.update(grads, opt_state, params, lr)
-                return (params, opt_state, rng), loss
-
-            (params, opt_state, _), losses = jax.lax.scan(
-                step, (params, opt_state, rng), (x_h, y_h, lrs)
-            )
-            return params, opt_state, losses.mean()
-
-        return jax.vmap(per_worker)(stacked_params, stacked_opt, xs, ys, rngs)
-
-    return worker_round
 
 
 def _average_pytree(stacked, weights=None):
@@ -114,6 +113,13 @@ def _average_pytree(stacked, weights=None):
     return jax.tree.map(wavg, stacked)
 
 
+def _cast_like(tree, ref):
+    """Restore the reference dtypes after an averaging reduction (mean
+    promotes the int32 step counter to float; scan carries and repeated jit
+    calls both need dtype-stable state)."""
+    return jax.tree.map(lambda a, r: a.astype(r.dtype), tree, ref)
+
+
 _average_workers = jax.jit(_average_pytree)
 
 
@@ -121,22 +127,176 @@ def _replicate(tree, k: int):
     return jax.tree.map(lambda a: jnp.broadcast_to(a, (k,) + a.shape), tree)
 
 
+def _take_worker0(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def make_phase1_epoch_fn(
+    config: SparseMLPConfig,
+    opt: MomentumSGD,
+    *,
+    n_workers: int,
+    average_momentum: bool = True,
+    worker_axis: str = "vmap",
+    mesh=None,
+):
+    """Build the jitted phase-1 epoch: one device call scanning sync rounds.
+
+    ``epoch_fn(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)``
+
+    * ``idx``   — (R, K, H, B) int32 sample indices into the device-resident
+      ``x_all``/``y_all`` (each worker-shard's ``ShardedLoader.epoch_order``,
+      padded to R*H steps);
+    * ``lrs``/``valid`` — (R, H) per-step learning rates and validity
+      weights (0 on padded tail steps: those steps trace but leave the
+      carry untouched, so the tail round never changes a shape);
+    * ``keys``  — (R, K, 2) per-round per-worker PRNG keys (dropout).
+
+    Returns ``(params, opt_state, loss_sums)`` with ``loss_sums`` the (R,)
+    per-round sums of valid per-step losses.
+
+    ``worker_axis="vmap"`` stacks the K workers on one device;
+    ``"shard_map"`` maps the same program over the 'data' axis of ``mesh``
+    (each shard vmaps its K/D local workers, all_gathers the worker axis,
+    and averages in the same order as the vmap path — bit-identical).
+    """
+    if worker_axis not in ("vmap", "shard_map"):
+        raise ValueError(f"worker_axis must be vmap|shard_map, got {worker_axis!r}")
+    if worker_axis == "shard_map":
+        if mesh is None:
+            raise ValueError("worker_axis='shard_map' needs a mesh")
+        data_size = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+        if n_workers % data_size != 0:
+            raise ValueError(
+                f"n_workers={n_workers} must be divisible by the mesh's "
+                f"data axis ({data_size})"
+            )
+        k_local = n_workers // data_size
+    else:
+        k_local = n_workers
+
+    def local_steps(params, opt_state, topo, x_all, y_all, idx_h, lrs_h, valid_h, key):
+        step_core = make_mlp_step_core(config, opt, topo, x_all, y_all)
+        params, opt_state, _, losses = scan_masked_segment(
+            step_core, params, opt_state, key, (idx_h, lrs_h), valid_h
+        )
+        return params, opt_state, losses.sum()
+
+    def epoch_program(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys):
+        def round_body(carry, inp):
+            params, opt_state = carry
+            idx_r, lrs_r, valid_r, keys_r = inp
+            sp = _replicate(params, k_local)
+            so = _replicate(opt_state, k_local)
+            sp, so, lsum = jax.vmap(
+                lambda p, s, i, kk: local_steps(
+                    p, s, topo, x_all, y_all, i, lrs_r, valid_r, kk
+                )
+            )(sp, so, idx_r, keys_r)
+            if worker_axis == "shard_map":
+                # gather the full worker axis so every shard averages the K
+                # results in the same order as the vmap path — the
+                # deterministic-order equivalent of a pmean
+                sp, so, lsum = jax.tree.map(
+                    lambda a: jax.lax.all_gather(a, "data", axis=0, tiled=True),
+                    (sp, so, lsum),
+                )
+            new_params = _cast_like(_average_pytree(sp), params)
+            new_opt = (
+                _cast_like(_average_pytree(so), opt_state)
+                if average_momentum
+                else _take_worker0(so)
+            )
+            return (new_params, new_opt), lsum.sum()
+
+        (params, opt_state), loss_sums = jax.lax.scan(
+            round_body, (params, opt_state), (idx, lrs, valid, keys)
+        )
+        return params, opt_state, loss_sums
+
+    fn = epoch_program
+    if worker_axis == "shard_map":
+        fn = shard_map(
+            epoch_program,
+            mesh=mesh,
+            in_specs=(
+                P(), P(), P(), P(), P(),          # params/opt/topo/x/y replicated
+                P(None, "data"),                  # idx   (R, K, H, B) on axis 1
+                P(), P(),                         # lrs/valid replicated
+                P(None, "data"),                  # keys  (R, K, 2)   on axis 1
+            ),
+            out_specs=(P(), P(), P()),
+            check_rep=False,  # all_gather + mean makes every output replicated
+        )
+    # donation is a no-op (with a warning) on CPU — only request it elsewhere
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def _make_worker_round(config: SparseMLPConfig, opt: MomentumSGD):
+    """Seed-era round: each worker runs H local steps over stacked batches.
+
+    Kept as the measured baseline for the fused epoch (per-round Python
+    dispatch, host-side replication, numpy batch stacking). Tail rounds are
+    padded to a static H with ``valid`` weights so one compile serves the
+    whole run, and the dropout key plumbing is explicit: each step splits a
+    fresh ``sub`` that the loss closes over (the seed closed over the
+    rebound parent key by late binding and never used its split).
+    """
+
+    @jax.jit
+    def worker_round(stacked_params, stacked_opt, topo, xs, ys, lrs, valid, rngs):
+        # xs: (K, H, B, F); ys: (K, H, B); lrs/valid: (H,)
+        step_core = make_mlp_step_core(config, opt, topo)
+
+        def per_worker(params, opt_state, x_h, y_h, rng):
+            params, opt_state, _, losses = scan_masked_segment(
+                step_core, params, opt_state, rng, (x_h, y_h, lrs), valid
+            )
+            return params, opt_state, losses.sum()
+
+        return jax.vmap(per_worker)(stacked_params, stacked_opt, xs, ys, rngs)
+
+    return worker_round
+
+
 # ---------------------------------------------------------------------------
 # final merge (Algorithm 1, line 37)
 # ---------------------------------------------------------------------------
 
 
+def _sign_aware_drop(avg: np.ndarray, surplus: int) -> np.ndarray:
+    """Indices of ``surplus`` connections to drop by the paper's sign-aware
+    magnitude rule: exact zeros first, then each sign's proportional
+    low-magnitude tail (the smallest positives and the largest negatives,
+    via :func:`prune_indices_by_magnitude`), with any integer remainder
+    topped up from the smallest remaining ``|avg|``."""
+    zeros = np.flatnonzero(avg == 0)
+    if zeros.size >= surplus:
+        return zeros[:surplus]
+    n_signed = int((avg > 0).sum() + (avg < 0).sum())
+    zeta = (surplus - zeros.size) / n_signed
+    drop = prune_indices_by_magnitude(avg, zeta)  # zeros + per-sign tails
+    short = surplus - drop.size  # >= 0: per-sign tail sizes are floored
+    if short > 0:
+        rest = np.setdiff1d(np.arange(avg.size), drop)
+        rest = rest[np.argsort(np.abs(avg[rest]), kind="stable")]
+        drop = np.concatenate([drop, rest[:short]])
+    return drop
+
+
 def sparse_average_and_resparsify(
     topos: List[ElementTopology],
     values: List[np.ndarray],
-    target_nnz_per_layer: List[int],
-) -> Tuple[List[ElementTopology], List[np.ndarray]]:
+    target_nnz: int,
+) -> Tuple[ElementTopology, np.ndarray]:
     """Average K sparse models over the union of their topologies, then keep
-    the target number of connections by the paper's sign-aware magnitude rule
-    (drop smallest-positive / largest-negative surplus)."""
+    ``target_nnz`` connections by the paper's sign-aware magnitude rule
+    (Algorithm 1 line 37): the surplus is pruned as exact zeros, the
+    smallest-positive tail and the largest-negative tail — each sign
+    contributing its proportional share — not a plain |value| ranking."""
     k = len(topos)
     assert k >= 1
-    out_t, out_v = [], []
     in_dim, out_dim = topos[0].in_dim, topos[0].out_dim
     flat_all = np.concatenate(
         [t.rows.astype(np.int64) * out_dim + t.cols for t in topos]
@@ -147,15 +307,10 @@ def sparse_average_and_resparsify(
     np.add.at(summed, inv, val_all)
     avg = (summed / k).astype(np.float32)  # absent connections count as zero
 
-    target = target_nnz_per_layer
-    if uniq.size > target:
-        # surplus = S' - S unimportant connections pruned by magnitude
-        surplus = uniq.size - target
-        drop = prune_indices_by_magnitude(avg, zeta=1.0)  # ranked tails
-        # prune_indices_by_magnitude(.,1.0) returns all sorted tail candidates;
-        # take the `surplus` weakest: interleave pos/neg by |value|
-        order = np.argsort(np.abs(avg))
-        drop = order[:surplus]
+    surplus = uniq.size - int(target_nnz)
+    if surplus > 0:
+        # surplus = S' - S unimportant connections pruned (Algorithm 1 l.37)
+        drop = _sign_aware_drop(avg, surplus)
         keep = np.setdiff1d(np.arange(uniq.size), drop)
     else:
         keep = np.arange(uniq.size)
@@ -182,7 +337,42 @@ class WASAPTrainer:
         self.opt = MomentumSGD(momentum=wc.momentum, weight_decay=wc.weight_decay)
         self.rng = np.random.default_rng(wc.seed)
         self.key = jax.random.PRNGKey(wc.seed)
-        self._round = _make_worker_round(model.config, self.opt)
+        cfg = model.config
+        # the device paths encode flat positions in int32
+        self._device_ok = all(
+            cfg.layer_dims[l] * cfg.layer_dims[l + 1] < 2**31
+            for l in range(cfg.n_layers)
+        )
+        if not self._device_ok:
+            if wc.worker_axis == "shard_map":
+                raise ValueError(
+                    "worker_axis='shard_map' needs the device-resident path, "
+                    "but a layer's in_dim*out_dim exceeds int32"
+                )
+            if wc.fused:
+                warnings.warn(
+                    "fused WASAP needs in_dim*out_dim < 2**31 per layer; "
+                    "falling back to the seed round loop",
+                    stacklevel=2,
+                )
+        self._fused = wc.fused and self._device_ok
+        self._h = 1 if wc.mode == "wassp" else wc.sync_every
+        if self._fused:
+            mesh = (
+                make_worker_mesh(wc.n_workers)
+                if wc.worker_axis == "shard_map"
+                else None
+            )
+            self._epoch_fn = make_phase1_epoch_fn(
+                cfg, self.opt,
+                n_workers=wc.n_workers,
+                average_momentum=wc.average_momentum,
+                worker_axis=wc.worker_axis,
+                mesh=mesh,
+            )
+            self._segment = make_segment_fn(cfg, self.opt)
+        else:
+            self._round = _make_worker_round(cfg, self.opt)
         self.loaders = [
             ShardedLoader(
                 data.x_train, data.y_train, wc.batch_size,
@@ -194,6 +384,14 @@ class WASAPTrainer:
             "epoch": [], "phase": [], "test_acc": [], "train_loss": [],
             "n_params": [], "epoch_seconds": [],
         }
+        self._device_data = None  # lazy: one upload shared by both phases
+
+    def _data_on_device(self):
+        if self._device_data is None:
+            self._device_data = (
+                jnp.asarray(self.data.x_train), jnp.asarray(self.data.y_train)
+            )
+        return self._device_data
 
     # -- lr schedules --------------------------------------------------------
 
@@ -207,16 +405,89 @@ class WASAPTrainer:
         # wasap: larger LR for the first few epochs, then fixed (paper §2.3)
         return wc.lr * wc.lr_boost if epoch < wc.lr_boost_epochs else wc.lr
 
-    # -- phases ----------------------------------------------------------------
+    # -- phases --------------------------------------------------------------
 
     def run(self) -> Dict[str, list]:
-        wc, model = self.wc, self.model
-        cfg = model.config
-        k = wc.n_workers
-        h = 1 if wc.mode == "wassp" else wc.sync_every
-        gstep = 0
+        if self._fused:
+            self._run_phase1_fused()
+            worker_states = self._run_phase2_fused()
+        else:
+            self._run_phase1_roundloop()
+            worker_states = self._run_phase2_perbatch()
+        self._merge_workers(worker_states)
+        acc = evaluate(self.model, self.data.x_test, self.data.y_test)
+        wc = self.wc
+        self.history["epoch"].append(wc.phase1_epochs + wc.phase2_epochs)
+        self.history["phase"].append("final")
+        self.history["train_loss"].append(float("nan"))
+        self.history["test_acc"].append(acc)
+        self.history["n_params"].append(self.model.n_params)
+        self.history["epoch_seconds"].append(0.0)
+        return self.history
 
-        # ---------------- phase 1: local SGD + periodic averaging ----------
+    # -- phase 1: local SGD + periodic averaging (device-resident) -----------
+
+    def _run_phase1_fused(self) -> None:
+        wc, model = self.wc, self.model
+        k, h, bsz = wc.n_workers, self._h, wc.batch_size
+        steps = min(ld.steps_per_epoch for ld in self.loaders)
+        if steps == 0:
+            raise ValueError("batch_size larger than the worker shards")
+        rounds = -(-steps // h)
+        padded = rounds * h
+        x_all, y_all = self._data_on_device()
+        params = model.params()
+        opt_state = self.opt.init(params)
+        topo = model.topo_arrays()
+        gstep = 0
+        for epoch in range(wc.phase1_epochs):
+            t0 = time.perf_counter()
+            idx = np.zeros((rounds, k, h, bsz), np.int32)
+            for wk, ld in enumerate(self.loaders):
+                order = np.zeros((padded, bsz), np.int32)
+                order[:steps] = (
+                    ld.epoch_order(epoch)[: steps * bsz]
+                    .astype(np.int32)
+                    .reshape(steps, bsz)
+                )
+                idx[:, wk] = order.reshape(rounds, h, bsz)
+            valid = np.zeros((rounds * h,), np.float32)
+            valid[:steps] = 1.0
+            lrs = np.zeros((rounds * h,), np.float32)
+            lrs[:steps] = [self._lr(gstep + i, epoch) for i in range(steps)]
+            self.key, sub = jax.random.split(self.key)
+            keys = jax.random.split(sub, rounds * k).reshape(rounds, k, 2)
+            params, opt_state, loss_sums = self._epoch_fn(
+                params, opt_state, topo, x_all, y_all,
+                jnp.asarray(idx), jnp.asarray(lrs.reshape(rounds, h)),
+                jnp.asarray(valid.reshape(rounds, h)), keys,
+            )
+            gstep += steps
+            # master topology evolution on the averaged model; momentum is
+            # re-aligned (RetainValidUpdates semantics for the velocity)
+            self.key, sub = jax.random.split(self.key)
+            topo, params, opt_state = self._evolve_master_device(
+                topo, params, opt_state, sub
+            )
+            # dispatch is async — wait for the epoch's device work so
+            # epoch_seconds measures compute, not enqueue
+            jax.block_until_ready((params, loss_sums))
+            dt = time.perf_counter() - t0
+            train_loss = float(jnp.sum(loss_sums)) / (k * steps)
+            acc = evaluate(
+                model, self.data.x_test, self.data.y_test,
+                params=params, topo_arrays=topo,
+            )
+            self._log(epoch, 1, train_loss, dt, acc)
+        model.set_params(params)
+        self._sync_topos_to_host(topo)
+
+    def _run_phase1_roundloop(self) -> None:
+        """Seed-era phase 1: per-round Python dispatch, host replication,
+        numpy batch stacking, host numpy evolution — the fused baseline."""
+        wc, model = self.wc, self.model
+        k, h = wc.n_workers, self._h
+        gstep = 0
         params = model.params()
         opt_state = self.opt.init(params)
         for epoch in range(wc.phase1_epochs):
@@ -224,55 +495,127 @@ class WASAPTrainer:
             topo = model.topo_arrays()
             batches = [list(ld.epoch(epoch)) for ld in self.loaders]
             steps = min(len(b) for b in batches)
-            losses = []
-            s = 0
+            if steps == 0:
+                raise ValueError("batch_size larger than the worker shards")
+            loss_total, s = 0.0, 0
             while s < steps:
                 hh = min(h, steps - s)
-                xs = jnp.asarray(
-                    np.stack([np.stack([b[s + i][0] for i in range(hh)]) for b in batches])
+                # pad the tail round to a static H (valid-masked) so one
+                # compile serves the whole run
+                xs = np.zeros(
+                    (k, h) + batches[0][0][0].shape, batches[0][0][0].dtype
                 )
-                ys = jnp.asarray(
-                    np.stack([np.stack([b[s + i][1] for i in range(hh)]) for b in batches])
-                )
-                lrs = jnp.asarray(
-                    [self._lr(gstep + i, epoch) for i in range(hh)], jnp.float32
-                )
+                ys = np.zeros((k, h) + batches[0][0][1].shape, batches[0][0][1].dtype)
+                for wk, b in enumerate(batches):
+                    for i in range(hh):
+                        xs[wk, i], ys[wk, i] = b[s + i]
+                valid = np.zeros((h,), np.float32)
+                valid[:hh] = 1.0
+                lrs = np.zeros((h,), np.float32)
+                lrs[:hh] = [self._lr(gstep + i, epoch) for i in range(hh)]
                 self.key, *subs = jax.random.split(self.key, k + 1)
                 sp = _replicate(params, k)
                 so = _replicate(opt_state, k)
-                sp, so, loss = self._round(
-                    sp, so, topo, xs, ys, lrs, jnp.stack(subs)
+                sp, so, lsum = self._round(
+                    sp, so, topo, jnp.asarray(xs), jnp.asarray(ys),
+                    jnp.asarray(lrs), jnp.asarray(valid), jnp.stack(subs),
                 )
-                params = _average_workers(sp)
+                params = _cast_like(_average_workers(sp), params)
                 if wc.average_momentum:
-                    opt_state = _average_workers(so)
+                    opt_state = _cast_like(_average_workers(so), opt_state)
                 else:
-                    opt_state = jax.tree.map(lambda a: a[0], so)
-                losses.append(float(loss.mean()))
+                    opt_state = _take_worker0(so)
+                loss_total += float(lsum.sum())
                 s += hh
                 gstep += hh
             model.set_params(params)
-            # master topology evolution on the averaged model; momentum is
-            # re-aligned (RetainValidUpdates semantics for the velocity)
+            # master topology evolution on the averaged model (host numpy)
             self._evolve_master(opt_state)
             params = model.params()
             opt_state = self._realigned_opt_state
-            self._log(epoch, 1, losses, time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            acc = evaluate(model, self.data.x_test, self.data.y_test)
+            self._log(epoch, 1, loss_total / (k * steps), dt, acc)
 
-        # ---------------- phase 2: independent local training --------------
-        # each worker owns a replica + its own topology evolution
+    # -- phase 2: independent local training ---------------------------------
+
+    def _run_phase2_fused(self) -> List[tuple]:
+        """Each worker owns a device-resident replica: fused epoch segments
+        (one jitted call per worker-epoch) + device topology evolution."""
+        wc, model = self.wc, self.model
+        cfg = model.config
+        k, bsz = wc.n_workers, wc.batch_size
+        x_all, y_all = self._data_on_device()
+        base = model.params()
+        workers = []
+        for wk in range(k):
+            self.key, sub = jax.random.split(self.key)
+            workers.append({
+                # per-worker copies: segments donate their buffers off-CPU
+                "params": jax.tree.map(jnp.array, base),
+                "opt": self.opt.init(base),
+                "topo": model.topo_arrays(),
+                "key": sub,
+            })
+        for epoch in range(wc.phase1_epochs, wc.phase1_epochs + wc.phase2_epochs):
+            t0 = time.perf_counter()
+            losses = []
+            for wk in range(k):
+                w = workers[wk]
+                ld = self.loaders[wk]
+                steps = ld.steps_per_epoch
+                perm = jnp.asarray(
+                    ld.epoch_order(epoch).astype(np.int32).reshape(steps, bsz)
+                )
+                lrs = jnp.full((steps,), wc.lr, jnp.float32)
+                w["params"], w["opt"], w["key"], ls = self._segment(
+                    w["params"], w["opt"], w["topo"], x_all, y_all,
+                    perm, lrs, w["key"],
+                )
+                losses.append(ls)
+                # per-worker evolution (divergent topologies)
+                w["key"], sub = jax.random.split(w["key"])
+                w["topo"], vals, vel = evolve_element_layers_device(
+                    w["topo"], list(w["params"]["values"]),
+                    list(w["opt"].velocity["values"]), sub,
+                    layer_dims=cfg.layer_dims, zeta=wc.zeta,
+                    init_scheme=cfg.init,
+                )
+                w["params"] = {
+                    "values": tuple(vals), "biases": w["params"]["biases"]
+                }
+                w["opt"] = replace_values_velocity(w["opt"], vel)
+            jax.block_until_ready([w["params"] for w in workers])
+            dt = time.perf_counter() - t0
+            loss = float(np.mean([np.asarray(l).mean() for l in losses]))
+            self._log(epoch, 2, loss, dt, float("nan"))
+        out = []
+        for w in workers:
+            topos = [
+                ElementTopology(
+                    cfg.layer_dims[l], cfg.layer_dims[l + 1],
+                    np.asarray(t.rows), np.asarray(t.cols),
+                )
+                for l, t in enumerate(w["topo"])
+            ]
+            vals = [np.asarray(v, np.float32) for v in w["params"]["values"]]
+            out.append((topos, vals, list(w["params"]["biases"])))
+        return out
+
+    def _run_phase2_perbatch(self) -> List[tuple]:
+        """Seed-era phase 2: per-batch dispatch + host numpy evolution."""
+        wc, model = self.wc, self.model
+        cfg = model.config
+        k = wc.n_workers
         worker_models = []
         for wk in range(k):
             m = SparseMLP(cfg, seed=wc.seed)  # structure placeholder
-            m.topos = [t for t in self.model.topos]
-            m.values = [v for v in self.model.values]
-            m.biases = [b for b in self.model.biases]
+            m.topos = [t for t in model.topos]
+            m.values = [v for v in model.values]
+            m.biases = [b for b in model.biases]
             worker_models.append(m)
         worker_opt = [self.opt.init(m.params()) for m in worker_models]
         worker_rngs = [np.random.default_rng(wc.seed * 97 + 13 * wk) for wk in range(k)]
-
-        from repro.train.trainer import make_step_fn
-
         step_fn = make_step_fn(cfg, self.opt)
         for epoch in range(wc.phase1_epochs, wc.phase1_epochs + wc.phase2_epochs):
             t0 = time.perf_counter()
@@ -287,7 +630,7 @@ class WASAPTrainer:
                     params, ostate, loss = step_fn(
                         params, ostate, topo,
                         jnp.asarray(xb), jnp.asarray(yb),
-                        jnp.asarray(self.wc.lr, jnp.float32), sub,
+                        jnp.asarray(wc.lr, jnp.float32), sub,
                     )
                     losses.append(float(loss))
                 m.set_params(params)
@@ -305,38 +648,55 @@ class WASAPTrainer:
                     m.topos[l] = res.topology
                     m.values[l] = jnp.asarray(res.values)
                     vel[l] = jnp.asarray(res.momentum)
-                worker_opt[wk] = SGDState(
-                    velocity={
-                        "values": tuple(vel),
-                        "biases": ostate.velocity["biases"],
-                    },
-                    step=ostate.step,
-                )
-            self._log(epoch, 2, losses, time.perf_counter() - t0, eval_model=None)
+                worker_opt[wk] = replace_values_velocity(ostate, vel)
+            dt = time.perf_counter() - t0
+            self._log(epoch, 2, float(np.mean(losses)) if losses else float("nan"),
+                      dt, float("nan"))
+        return [
+            (
+                list(m.topos),
+                [np.asarray(v, np.float32) for v in m.values],
+                list(m.biases),
+            )
+            for m in worker_models
+        ]
 
-        # ---------------- final: SWA + re-sparsify -------------------------
-        target_nnz = [t.nnz for t in self.model.topos]
+    # -- final: SWA + re-sparsify --------------------------------------------
+
+    def _merge_workers(self, worker_states: List[tuple]) -> None:
+        model = self.model
+        cfg = model.config
+        target_nnz = [t.nnz for t in model.topos]
         for l in range(cfg.n_layers):
             topo, vals = sparse_average_and_resparsify(
-                [m.topos[l] for m in worker_models],
-                [np.asarray(m.values[l], np.float32) for m in worker_models],
+                [ws[0][l] for ws in worker_states],
+                [ws[1][l] for ws in worker_states],
                 target_nnz[l],
             )
-            self.model.topos[l] = topo
-            self.model.values[l] = jnp.asarray(vals)
-            self.model.biases[l] = jnp.mean(
-                jnp.stack([m.biases[l] for m in worker_models]), axis=0
+            model.topos[l] = topo
+            model.values[l] = jnp.asarray(vals)
+            model.biases[l] = jnp.mean(
+                jnp.stack([ws[2][l] for ws in worker_states]), axis=0
             )
-        acc = evaluate(self.model, self.data.x_test, self.data.y_test)
-        self.history["epoch"].append(wc.phase1_epochs + wc.phase2_epochs)
-        self.history["phase"].append("final")
-        self.history["train_loss"].append(float("nan"))
-        self.history["test_acc"].append(acc)
-        self.history["n_params"].append(self.model.n_params)
-        self.history["epoch_seconds"].append(0.0)
-        return self.history
 
-    # -- helpers ----------------------------------------------------------------
+    # -- helpers --------------------------------------------------------------
+
+    def _evolve_master_device(self, topo, params, opt_state, key):
+        cfg, wc = self.model.config, self.wc
+        topo, values, vel = evolve_element_layers_device(
+            topo, list(params["values"]), list(opt_state.velocity["values"]),
+            key, layer_dims=cfg.layer_dims, zeta=wc.zeta, init_scheme=cfg.init,
+        )
+        params = {"values": tuple(values), "biases": params["biases"]}
+        return topo, params, replace_values_velocity(opt_state, vel)
+
+    def _sync_topos_to_host(self, topo) -> None:
+        cfg = self.model.config
+        for l in range(cfg.n_layers):
+            self.model.topos[l] = ElementTopology(
+                cfg.layer_dims[l], cfg.layer_dims[l + 1],
+                np.asarray(topo[l].rows), np.asarray(topo[l].cols),
+            )
 
     def _evolve_master(self, opt_state: SGDState) -> None:
         model, wc = self.model, self.wc
@@ -354,20 +714,12 @@ class WASAPTrainer:
             model.topos[l] = res.topology
             model.values[l] = jnp.asarray(res.values)
             vel[l] = jnp.asarray(res.momentum)
-        self._realigned_opt_state = SGDState(
-            velocity={"values": tuple(vel), "biases": opt_state.velocity["biases"]},
-            step=opt_state.step,
-        )
+        self._realigned_opt_state = replace_values_velocity(opt_state, vel)
 
-    def _log(self, epoch, phase, losses, dt, eval_model="self") -> None:
-        acc = (
-            evaluate(self.model, self.data.x_test, self.data.y_test)
-            if eval_model == "self"
-            else float("nan")
-        )
+    def _log(self, epoch, phase, loss, dt, acc) -> None:
         self.history["epoch"].append(epoch)
         self.history["phase"].append(phase)
-        self.history["train_loss"].append(float(np.mean(losses)) if losses else float("nan"))
+        self.history["train_loss"].append(loss)
         self.history["test_acc"].append(acc)
         self.history["n_params"].append(self.model.n_params)
         self.history["epoch_seconds"].append(dt)

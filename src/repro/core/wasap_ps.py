@@ -79,7 +79,13 @@ class AsyncParameterServer:
         self.vel_values = [np.zeros(t.nnz, np.float32) for t in model.topos]
         self.vel_biases = [np.zeros(int(b.size), np.float32) for b in model.biases]
         self.applied_updates = 0
-        self.stats = {"stale_entries_dropped": 0, "updates": 0, "evolutions": 0}
+        self.stats = {
+            "stale_entries_dropped": 0,
+            "updates": 0,
+            "evolutions": 0,
+            "queue_full_retries": 0,
+            "grads_dropped": 0,
+        }
 
         self._grad_fn = self._make_grad_fn()
         self.steps_per_epoch = (
@@ -223,10 +229,24 @@ class AsyncParameterServer:
                     "topos": topos,
                 }
                 gb = [np.asarray(g, np.float32) for g in grads["biases"]]
-                try:
-                    self.grad_queue.put((gv, gb, tv, tw), timeout=1.0)
-                except queue.Full:
-                    continue
+                # a full queue means the PS is momentarily behind — keep
+                # retrying the push for THIS gradient rather than silently
+                # discarding the computed work and advancing to the next batch
+                pushed = False
+                while not self.stop_flag.is_set():
+                    try:
+                        self.grad_queue.put((gv, gb, tv, tw), timeout=1.0)
+                        pushed = True
+                        break
+                    except queue.Full:
+                        with self.lock:
+                            self.stats["queue_full_retries"] += 1
+                if not pushed:
+                    # shutdown raced the retry: the gradient is dropped, but
+                    # accounted for instead of vanishing silently
+                    with self.lock:
+                        self.stats["grads_dropped"] += 1
+                    return
             epoch += 1
 
     # -- entry -----------------------------------------------------------------

@@ -7,9 +7,17 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
-__all__ = ["make_production_mesh", "HardwareSpec", "V5E"]
+__all__ = [
+    "make_production_mesh",
+    "make_debug_mesh",
+    "make_worker_mesh",
+    "HardwareSpec",
+    "V5E",
+]
 
 import dataclasses
 
@@ -38,3 +46,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — for tests."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_worker_mesh(n_workers: int):
+    """Mesh for a shard_map'd worker axis of ``n_workers`` logical workers.
+
+    The 'data' axis takes the largest size that divides both ``n_workers``
+    (each shard vmaps over an integer number of local workers) and the
+    available device count — gcd(n_workers, devices). On a single-device
+    host this degenerates to data=1 (the whole worker axis lives in the
+    in-shard vmap), so the same shard_map program runs everywhere.
+    """
+    data = math.gcd(n_workers, jax.device_count())
+    return jax.make_mesh((data, 1), ("data", "model"))

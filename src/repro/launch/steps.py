@@ -24,6 +24,38 @@ from repro.optim.sgd import MomentumSGD
 PyTree = Any
 
 
+def make_mlp_step_core(config: SparseMLPConfig, opt: MomentumSGD, topo_arrays,
+                       x_all=None, y_all=None):
+    """The one SET-MLP minibatch step body (loss → value_and_grad →
+    momentum-SGD update), shaped for ``scan_segment``/``scan_masked_segment``.
+
+    With ``x_all``/``y_all`` (device-resident dataset) the step input is
+    ``(idx, lr)`` and the batch is gathered on device (clip mode: loader
+    permutations are always in bounds, so skip fill-mode bounds masking —
+    measurably cheaper on CPU XLA); without them the input is ``(x, y, lr)``.
+    Shared by the sequential trainer's fused segment and both WASAP phase-1
+    round programs so the step semantics live in exactly one place.
+    """
+
+    def step_core(p, s, inp, rng):
+        if x_all is None:
+            xb, yb, lr = inp
+        else:
+            idx, lr = inp
+            xb = jnp.take(x_all, idx, axis=0, mode="clip")
+            yb = jnp.take(y_all, idx, axis=0, mode="clip")
+
+        def loss_fn(pp):
+            logits = mlp_forward(pp, topo_arrays, xb, config, train=True, rng=rng)
+            return cross_entropy_loss(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p, s = opt.update(grads, s, p, lr)
+        return p, s, loss
+
+    return step_core
+
+
 def make_mlp_train_step(config: SparseMLPConfig, opt: MomentumSGD):
     """Jitted single-minibatch SET-MLP train step (value_and_grad + update).
 
@@ -37,13 +69,8 @@ def make_mlp_train_step(config: SparseMLPConfig, opt: MomentumSGD):
 
     @jax.jit
     def step(params, opt_state, topo_arrays, x, y, lr, rng):
-        def loss_fn(p):
-            logits = mlp_forward(p, topo_arrays, x, config, train=True, rng=rng)
-            return cross_entropy_loss(logits, y)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params, lr)
-        return params, opt_state, loss
+        core = make_mlp_step_core(config, opt, topo_arrays)
+        return core(params, opt_state, (x, y, lr), rng)
 
     return step
 
@@ -63,6 +90,33 @@ def scan_segment(step_core, params, opt_state, key, step_inputs):
 
     (params, opt_state, key), metrics = jax.lax.scan(
         body, (params, opt_state, key), step_inputs
+    )
+    return params, opt_state, key, metrics
+
+
+def scan_masked_segment(step_core, params, opt_state, key, step_inputs, valid):
+    """``scan_segment`` with per-step validity weights.
+
+    ``valid`` is a float (steps,) vector: steps where ``valid == 0`` still
+    trace (so padded tails keep every shape static and one compile serves
+    the whole run) but leave the (params, opt_state) carry untouched and
+    contribute zero to the stacked metrics. ``step_core`` must return a
+    scalar metric (it is scaled by ``valid``). Used by the WASAP phase-1
+    round function, whose tail rounds pad the local-step axis to a static H.
+    """
+
+    def body(carry, inp):
+        p, s, k = carry
+        x, v = inp
+        k, sub = jax.random.split(k)
+        new_p, new_s, metric = step_core(p, s, x, sub)
+        keep = v > 0
+        p = jax.tree.map(lambda n, o: jnp.where(keep, n, o), new_p, p)
+        s = jax.tree.map(lambda n, o: jnp.where(keep, n, o), new_s, s)
+        return (p, s, k), metric * v
+
+    (params, opt_state, key), metrics = jax.lax.scan(
+        body, (params, opt_state, key), (step_inputs, valid)
     )
     return params, opt_state, key, metrics
 

@@ -51,21 +51,15 @@ from repro.core.sparsity import (
 )
 from repro.core.topology import (
     block_device_arrays,
-    element_device_arrays,
     evolve_block,
     evolve_block_device,
     evolve_element,
-    evolve_element_device,
+    evolve_element_layers_device,
 )
 from repro.data.loader import ShardedLoader
 from repro.data.synthetic import Dataset
-from repro.launch.steps import make_mlp_train_step, scan_segment
-from repro.models.mlp import (
-    SparseMLP,
-    SparseMLPConfig,
-    cross_entropy_loss,
-    mlp_forward,
-)
+from repro.launch.steps import make_mlp_step_core, make_mlp_train_step, scan_segment
+from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
 from repro.optim.sgd import MomentumSGD, replace_values_velocity
 
 __all__ = [
@@ -114,21 +108,7 @@ def make_segment_fn(config: SparseMLPConfig, opt: MomentumSGD):
     """
 
     def segment(params, opt_state, topo_arrays, x_all, y_all, perm, lrs, key):
-        def step_core(p, s, inp, rng):
-            idx, lr = inp
-            xb = jnp.take(x_all, idx, axis=0)
-            yb = jnp.take(y_all, idx, axis=0)
-
-            def loss_fn(pp):
-                logits = mlp_forward(
-                    pp, topo_arrays, xb, config, train=True, rng=rng
-                )
-                return cross_entropy_loss(logits, yb)
-
-            loss, grads = jax.value_and_grad(loss_fn)(p)
-            p, s = opt.update(grads, s, p, lr)
-            return p, s, loss
-
+        step_core = make_mlp_step_core(config, opt, topo_arrays, x_all, y_all)
         return scan_segment(step_core, params, opt_state, key, (perm, lrs))
 
     # donation is a no-op (with a warning) on CPU — only request it elsewhere
@@ -261,23 +241,19 @@ class SequentialTrainer:
         tc, cfg = self.tc, self.model.config
         values = list(params["values"])
         vel = list(opt_state.velocity["values"])
-        new_topo = list(topo)
-        for l in range(cfg.n_layers):
+        if cfg.impl == "element":
+            # shared with the WASAP master evolution: dual-order views are
+            # rebuilt on-device so the custom-VJP backward never sees a
+            # stale permutation after connections move
             self.key, sub = jax.random.split(self.key)
-            if cfg.impl == "element":
-                n_in, n_out = cfg.layer_dims[l], cfg.layer_dims[l + 1]
-                rows, cols, vals, mom, _ = evolve_element_device(
-                    topo[l].rows, topo[l].cols, values[l], vel[l], sub,
-                    in_dim=n_in, out_dim=n_out, zeta=tc.zeta,
-                    init_scheme=cfg.init,
-                )
-                # rebuild the dual-order views (row-sorted mirror + boundary
-                # flags) on-device so the custom-VJP backward never sees a
-                # stale permutation after connections move
-                new_topo[l] = element_device_arrays(
-                    rows, cols, in_dim=n_in, out_dim=n_out
-                )
-            else:
+            new_topo, values, vel = evolve_element_layers_device(
+                topo, values, vel, sub,
+                layer_dims=cfg.layer_dims, zeta=tc.zeta, init_scheme=cfg.init,
+            )
+        else:
+            new_topo = list(topo)
+            for l in range(cfg.n_layers):
+                self.key, sub = jax.random.split(self.key)
                 meta = BlockMeta(
                     cfg.layer_dims[l], cfg.layer_dims[l + 1],
                     cfg.block_m, cfg.block_n,
@@ -287,8 +263,8 @@ class SequentialTrainer:
                     meta=meta, zeta=tc.zeta,
                 )
                 new_topo[l] = block_device_arrays(rows, cols, meta=meta)
-            values[l] = vals
-            vel[l] = mom
+                values[l] = vals
+                vel[l] = mom
         params = {"values": tuple(values), "biases": params["biases"]}
         return tuple(new_topo), params, replace_values_velocity(opt_state, vel)
 

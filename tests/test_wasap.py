@@ -1,4 +1,13 @@
-"""WASAP-SGD: SPMD adaptation + faithful async-PS emulation behaviour tests."""
+"""WASAP-SGD: device-resident SPMD adaptation + faithful async-PS tests."""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -6,11 +15,18 @@ from repro.core.sparsity import ElementTopology
 from repro.core.wasap import (
     WASAPConfig,
     WASAPTrainer,
+    _average_pytree,
+    _cast_like,
+    _make_worker_round,
+    _replicate,
+    make_phase1_epoch_fn,
     sparse_average_and_resparsify,
 )
 from repro.core.wasap_ps import AsyncPSConfig, AsyncParameterServer
 from repro.data import datasets
+from repro.launch.mesh import make_worker_mesh
 from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.optim.sgd import MomentumSGD
 from repro.train.trainer import evaluate
 
 
@@ -37,13 +53,37 @@ def test_sparse_average_and_resparsify_union_then_prune():
     topo, vals = sparse_average_and_resparsify([t1, t2], [v1, v2], 3)
     assert topo.nnz == 3
     # union has 4 slots; averages: (0,0)=3.0 (1,1)=0.25 (2,2)=-1.0 (3,3)=0.1
-    # keep 3 largest |avg| -> (0,0), (2,2), (1,1)
+    # drop the weakest -> (3,3)
     dense = np.zeros((4, 4), np.float32)
     dense[topo.rows, topo.cols] = vals
     assert dense[0, 0] == pytest.approx(3.0)
     assert dense[2, 2] == pytest.approx(-1.0)
     assert dense[1, 1] == pytest.approx(0.25)
     assert dense[3, 3] == 0.0
+
+
+def test_resparsify_sign_aware_disagrees_with_abs_ranking():
+    """Sign-aware rule: each sign contributes its proportional tail. With 2
+    positives and 4 negatives and surplus 3, the sign-aware drop is
+    {0.1, -0.5, -0.6} — a plain |value| ranking would drop {0.1, 0.2, -0.5}
+    (all the small positives first). 0.2 must survive; -0.6 must not."""
+    vals = np.array([0.1, 0.2, -0.5, -0.6, -0.7, -0.8], np.float32)
+    rows = np.arange(6, dtype=np.int32)
+    topo = ElementTopology(6, 6, rows, rows)  # diagonal slots
+    merged, mvals = sparse_average_and_resparsify([topo], [vals], 3)
+    dense = np.zeros((6, 6), np.float32)
+    dense[merged.rows, merged.cols] = mvals
+    kept = sorted(float(dense[i, i]) for i in range(6) if dense[i, i] != 0)
+    np.testing.assert_allclose(kept, [-0.8, -0.7, 0.2], rtol=1e-6)
+
+
+def test_resparsify_drops_exact_zeros_first():
+    vals = np.array([0.0, 3.0, -2.0, 0.9], np.float32)
+    rows = np.arange(4, dtype=np.int32)
+    topo = ElementTopology(4, 4, rows, rows)
+    merged, mvals = sparse_average_and_resparsify([topo], [vals], 3)
+    assert merged.nnz == 3
+    assert 0.0 not in set(np.round(mvals, 6).tolist())
 
 
 def test_sparsity_level_restored_after_averaging():
@@ -57,6 +97,192 @@ def test_sparsity_level_restored_after_averaging():
     merged, vals = sparse_average_and_resparsify(topos, values, target)
     assert merged.nnz == target  # S' >= S collapsed back to S
     assert vals.shape == (target,)
+
+
+# ---------------------------------------------------------------------------
+# importance pruning (zero-degree regression — lives here, NOT in the
+# hypothesis-gated test_topology module, so it runs even without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def test_importance_prune_element_ignores_zero_degree_columns():
+    """Columns with NO incoming connections are not neurons being pruned:
+    they must not appear in pruned_neurons nor inflate the prune count."""
+    from repro.core.importance import PruningSchedule, importance_prune_element
+
+    # out_dim 4 but only columns 0, 1, 3 have connections — column 2 is
+    # zero-degree; column 1 is genuinely weak and must be the only prune
+    topo = ElementTopology(
+        3, 4, rows=np.array([0, 1, 2, 0, 1]), cols=np.array([0, 0, 1, 3, 3])
+    )
+    vals = np.array([2.0, -3.0, 0.01, 1.5, -2.5], np.float32)
+    sched = PruningSchedule(tau=0, period=1, threshold=1.0)
+    res = importance_prune_element(topo, vals, sched)
+    assert 2 not in res.pruned_neurons
+    np.testing.assert_array_equal(res.pruned_neurons, [1])
+    assert res.removed_params == 1
+    assert res.topology.nnz == topo.nnz - 1
+
+
+# ---------------------------------------------------------------------------
+# device-resident phase-1 round function
+# ---------------------------------------------------------------------------
+
+
+def _phase1_case(seed=0, n=96, k=2, h=3, b=8, rounds=2):
+    rng = np.random.default_rng(seed)
+    f, c = 20, 5
+    x_all = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    y_all = jnp.asarray(rng.integers(0, c, n).astype(np.int32))
+    cfg = SparseMLPConfig(layer_dims=(f, 16, c), epsilon=8, dropout=0.2,
+                          impl="element")
+    model = SparseMLP(cfg, seed=seed)
+    opt = MomentumSGD(momentum=0.9, weight_decay=1e-4)
+    params = model.params()
+    opt_state = opt.init(params)
+    topo = model.topo_arrays()
+    idx = jnp.asarray(rng.integers(0, n, (rounds, k, h, b)).astype(np.int32))
+    lrs = jnp.full((rounds, h), 0.05, jnp.float32)
+    valid = np.ones((rounds, h), np.float32)
+    valid[-1, -1] = 0.0  # padded tail step
+    valid = jnp.asarray(valid)
+    keys = jax.random.split(jax.random.PRNGKey(42), rounds * k).reshape(rounds, k, 2)
+    return cfg, opt, params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys
+
+
+def test_phase1_vmap_shardmap_bit_equivalence():
+    """Same inputs through the vmap and shard_map worker axes (1xK debug
+    mesh) -> bit-identical params and optimizer state. The scalar per-round
+    loss diagnostics are only compared to 1e-6: XLA fuses the two programs'
+    reductions differently, a 1-ulp effect that never feeds back into the
+    training state."""
+    cfg, opt, params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys = (
+        _phase1_case()
+    )
+    ep_vmap = make_phase1_epoch_fn(cfg, opt, n_workers=2, worker_axis="vmap")
+    p1, o1, l1 = ep_vmap(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)
+    mesh = make_worker_mesh(2)
+    ep_sm = make_phase1_epoch_fn(
+        cfg, opt, n_workers=2, worker_axis="shard_map", mesh=mesh
+    )
+    p2, o2, l2 = ep_sm(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)
+    for a, b in zip(jax.tree.leaves((p1, o1)), jax.tree.leaves((p2, o2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
+
+
+def test_phase1_vmap_shardmap_equivalence_multidevice():
+    """The same check with the worker axis REALLY sharded: a subprocess
+    forces 2 host devices so the debug mesh has a 2-way data axis."""
+    script = textwrap.dedent(
+        """
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.core.wasap import make_phase1_epoch_fn
+        from repro.launch.mesh import make_worker_mesh
+        from repro.models.mlp import SparseMLP, SparseMLPConfig
+        from repro.optim.sgd import MomentumSGD
+
+        assert jax.device_count() == 2, jax.devices()
+        rng = np.random.default_rng(0)
+        n, f, c, k, h, b, rounds = 64, 12, 4, 2, 2, 4, 2
+        x_all = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+        y_all = jnp.asarray(rng.integers(0, c, n).astype(np.int32))
+        cfg = SparseMLPConfig(layer_dims=(f, 8, c), epsilon=6, dropout=0.1,
+                              impl="element")
+        model = SparseMLP(cfg, seed=0)
+        opt = MomentumSGD(momentum=0.9, weight_decay=1e-4)
+        params, topo = model.params(), model.topo_arrays()
+        opt_state = opt.init(params)
+        idx = jnp.asarray(rng.integers(0, n, (rounds, k, h, b)).astype(np.int32))
+        lrs = jnp.full((rounds, h), 0.05, jnp.float32)
+        valid = jnp.ones((rounds, h), jnp.float32)
+        keys = jax.random.split(jax.random.PRNGKey(7), rounds * k)
+        keys = keys.reshape(rounds, k, 2)
+        ev = make_phase1_epoch_fn(cfg, opt, n_workers=k, worker_axis="vmap")
+        p1, o1, _ = ev(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)
+        mesh = make_worker_mesh(k)
+        assert dict(zip(mesh.axis_names, mesh.devices.shape))["data"] == 2
+        es = make_phase1_epoch_fn(cfg, opt, n_workers=k,
+                                  worker_axis="shard_map", mesh=mesh)
+        p2, o2, _ = es(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)
+        for a, b in zip(jax.tree.leaves((p1, o1)), jax.tree.leaves((p2, o2))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("MULTIDEVICE_OK")
+        """
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True, text=True,
+        timeout=600, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "MULTIDEVICE_OK" in res.stdout
+
+
+def test_fused_epoch_matches_padded_round_loop():
+    """The per-epoch scan must reproduce the legacy round loop bit-for-bit
+    when both consume the same per-round worker keys — including a
+    valid-masked tail round."""
+    cfg, opt, params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys = (
+        _phase1_case()
+    )
+    k = idx.shape[1]
+    ep = make_phase1_epoch_fn(cfg, opt, n_workers=k, worker_axis="vmap")
+    p1, o1, l1 = ep(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)
+
+    round_fn = _make_worker_round(cfg, opt)
+    p, o = params, opt_state
+    total = 0.0
+    y_np = np.asarray(y_all)
+    for r in range(idx.shape[0]):
+        xs = jnp.stack([x_all[idx[r, w]] for w in range(k)])
+        ys = jnp.asarray(np.stack([y_np[idx[r, w]] for w in range(k)]))
+        sp, so = _replicate(p, k), _replicate(o, k)
+        sp, so, lsum = round_fn(sp, so, topo, xs, ys, lrs[r], valid[r], keys[r])
+        p = _cast_like(_average_pytree(sp), p)
+        o = _cast_like(_average_pytree(so), o)
+        total += float(lsum.sum())
+    for a, b in zip(jax.tree.leaves((p1, o1)), jax.tree.leaves((p, o))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(float(jnp.sum(l1)), total, rtol=1e-5)
+
+
+def test_phase1_epoch_fn_no_recompile_across_epochs():
+    """One trace serves every epoch: same shapes (tail rounds are padded to
+    the static H), fresh values/keys."""
+    cfg, opt, params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys = (
+        _phase1_case(seed=5)
+    )
+    ep = make_phase1_epoch_fn(cfg, opt, n_workers=2, worker_axis="vmap")
+    before = ep._cache_size()
+    p, o, _ = ep(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)
+    after_first = ep._cache_size()
+    keys2 = jax.random.split(jax.random.PRNGKey(99), 4).reshape(2, 2, 2)
+    ep(p, o, topo, x_all, y_all, idx, lrs, valid, keys2)
+    assert after_first == before + 1
+    assert ep._cache_size() == after_first  # zero recompiles on epoch 2
+
+
+def test_roundloop_tail_rounds_single_compile():
+    """steps %% H != 0 must not recompile the legacy worker round: the tail
+    round is padded to the static H with validity weights."""
+    model, data = make_model_and_data(seed=4)
+    # shard of fashionmnist@0.02 has 400 samples -> 25 steps; h=4 -> tail of 1
+    wc = WASAPConfig(
+        n_workers=3, phase1_epochs=2, phase2_epochs=0, sync_every=4,
+        lr=0.01, zeta=0.2, seed=4, batch_size=16, fused=False,
+    )
+    trainer = WASAPTrainer(model, data, wc)
+    steps = min(ld.steps_per_epoch for ld in trainer.loaders)
+    assert steps % wc.sync_every != 0  # the case under test
+    before = trainer._round._cache_size()
+    trainer.run()
+    assert trainer._round._cache_size() == before + 1
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +303,28 @@ def test_wasap_two_phase_learns(mode):
     final_acc = hist["test_acc"][-1]
     assert final_acc > 0.5, (mode, final_acc)  # chance = 0.1
     # sparsity restored to the target level after SWA merge
+    assert hist["n_params"][-1] == hist["n_params"][0]
+
+
+def test_wasap_shard_map_two_phase_learns():
+    model, data = make_model_and_data()
+    wc = WASAPConfig(
+        n_workers=3, phase1_epochs=3, phase2_epochs=1, sync_every=3,
+        lr=0.01, zeta=0.2, seed=0, batch_size=16, worker_axis="shard_map",
+    )
+    hist = WASAPTrainer(model, data, wc).run()
+    assert hist["test_acc"][-1] > 0.5
+    assert hist["n_params"][-1] == hist["n_params"][0]
+
+
+def test_wasap_legacy_roundloop_learns():
+    model, data = make_model_and_data()
+    wc = WASAPConfig(
+        n_workers=3, phase1_epochs=4, phase2_epochs=2, sync_every=3,
+        lr=0.01, zeta=0.2, seed=0, batch_size=16, fused=False,
+    )
+    hist = WASAPTrainer(model, data, wc).run()
+    assert hist["test_acc"][-1] > 0.5
     assert hist["n_params"][-1] == hist["n_params"][0]
 
 
@@ -130,3 +378,38 @@ def test_async_ps_straggler_does_not_block_progress():
     stats = ps.run()
     # all scheduled updates applied even with a deliberately slow worker
     assert stats["updates"] == cfg.epochs * ps.steps_per_epoch
+
+
+def test_async_ps_full_queue_retries_same_gradient():
+    """A full queue must not discard the computed gradient: the worker
+    retries the push for the SAME gradient instead of advancing to the next
+    batch. With the queue artificially kept full, the worker computes
+    exactly one gradient no matter how long it runs."""
+    import queue as queue_mod
+
+    model, data = make_model_and_data(seed=5)
+    cfg = AsyncPSConfig(n_workers=1, epochs=1, lr=0.01, batch_size=16, seed=5)
+    ps = AsyncParameterServer(model, data, cfg)
+    ps.grad_queue = queue_mod.Queue(maxsize=1)
+    ps.grad_queue.put("sentinel")  # full forever — the PS never drains it
+
+    n_grads = [0]
+    inner = ps._grad_fn
+
+    def counting_grad_fn(*args, **kw):
+        n_grads[0] += 1
+        return inner(*args, **kw)
+
+    ps._grad_fn = counting_grad_fn
+    worker = threading.Thread(target=ps._worker_loop, args=(0,), daemon=True)
+    worker.start()
+    deadline = time.time() + 10.0
+    while time.time() < deadline and ps.stats["queue_full_retries"] < 2:
+        time.sleep(0.05)
+    assert ps.stats["queue_full_retries"] >= 2, "worker never hit the full queue"
+    ps.stop_flag.set()
+    worker.join(timeout=15.0)
+    assert not worker.is_alive()
+    # the one computed gradient was retried, never discarded-and-recomputed
+    assert n_grads[0] == 1
+    assert ps.stats["grads_dropped"] == 1  # accounted at shutdown
