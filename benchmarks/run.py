@@ -35,6 +35,11 @@ HOT_PATH_ROWS = {
         "table3/phase1_epoch/fashionmnist/fused_vmap",
         "table3/phase1_epoch/fashionmnist/fused_shardmap",
     ],
+    "serve": [
+        "serve/lm/engine_us_per_token",
+        "serve/mlp/forward_raw",
+        "serve/mlp/forward_compacted",
+    ],
 }
 REGRESSION_TOLERANCE = 1.25  # fresh > 1.25x baseline => fail
 
@@ -84,7 +89,8 @@ def main() -> None:
     ap.add_argument("--scale", default="ci", choices=("ci", "small", "full"))
     ap.add_argument(
         "--only", default="",
-        help="comma list: table2,table3,table4,table5,table6,gradient_flow,kernels,roofline",
+        help="comma list: table2,table3,table4,table5,table6,gradient_flow,"
+        "kernels,roofline,serve",
     )
     ap.add_argument(
         "--json-dir", default=".",
@@ -107,6 +113,7 @@ def main() -> None:
         gradient_flow,
         kernels_micro,
         roofline,
+        serve_bench,
         table2_sequential,
         table3_parallel,
         table4_extreme,
@@ -123,6 +130,7 @@ def main() -> None:
         ("gradient_flow", lambda: gradient_flow.run(args.scale)),
         ("kernels", lambda: kernels_micro.run()),
         ("roofline", lambda: roofline.run()),
+        ("serve", lambda: serve_bench.run(args.scale)),
     ]
     json_dir = pathlib.Path(args.json_dir)
     json_dir.mkdir(parents=True, exist_ok=True)

@@ -1,0 +1,170 @@
+"""Serving benchmark — the engine's acceptance harness (DESIGN.md §6).
+
+Two sections, both written to ``BENCH_serve.json``:
+
+* **lm** — a smoke-scale sparse-FFN PatternLM served twice over the same
+  Poisson trace: the continuous batcher (``max_slots`` decode slots) vs the
+  naive sequential per-request loop. After a warmup trace compiles every
+  bucket, the measured run must add ZERO compiles (asserted in summary) and
+  the batcher must beat the naive loop's throughput.
+* **mlp** — deployment-time compaction as a latency feature: a trained-size
+  SET-MLP is importance-pruned + dead-neuron-eliminated, and the compacted
+  model must (a) match the pruned-but-uncompacted model's logits (physical
+  elimination is free) and (b) serve at no more latency than the raw model.
+
+Wall-clock rows feed the ``run.py --compare`` regression gate; the CI smoke
+(ci.yml) asserts the structural flags only.
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALES, row
+from repro import configs
+from repro.core.importance import PruningSchedule
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.models.transformer import PatternLM
+from repro.serve import (
+    ContinuousBatcher,
+    EngineConfig,
+    SparseInferenceEngine,
+    eliminate_dead_neurons,
+    importance_prune_mlp,
+    poisson_trace,
+    serve_sequential,
+)
+
+SLOTS = 8
+
+
+def _lm_section(scale):
+    cfg = dataclasses.replace(
+        configs.get_spec("qwen1.5-0.5b").smoke,
+        ffn="sparse", sparse_block=16, sparse_density=0.5, d_ff=64,
+    )
+    n_requests = max(16, int(200 * scale.data_scale))
+    ec = EngineConfig(
+        max_slots=SLOTS, max_len=64,
+        prefill_buckets=(8, 16, 32), prefill_batch=4,
+    )
+    engine = SparseInferenceEngine(PatternLM(cfg, seed=0), engine=ec)
+    naive = SparseInferenceEngine(
+        PatternLM(cfg, seed=0),
+        engine=dataclasses.replace(ec, max_slots=1, prefill_batch=1),
+    )
+
+    def trace(seed):
+        return poisson_trace(
+            n_requests, rate=200.0, vocab=cfg.vocab,
+            prompt_lens=(4, 30), new_tokens=(4, 12), seed=seed,
+        )
+
+    # warmup: compile every prefill bucket + decode + insert once
+    ContinuousBatcher(engine).run(trace(0))
+    serve_sequential(naive, trace(0))
+    warm_compiles = engine.stats["compiles"]
+
+    stats = ContinuousBatcher(engine).run(trace(1))
+    nstats = serve_sequential(naive, trace(1))
+    recompiles = engine.stats["compiles"] - warm_compiles
+    jit_entries = engine.jit_entry_sizes()
+
+    us_tok = stats.wall_seconds * 1e6 / max(1, stats.generated_tokens)
+    us_tok_naive = nstats.wall_seconds * 1e6 / max(1, nstats.generated_tokens)
+    speedup = stats.throughput_tok_s / max(1e-9, nstats.throughput_tok_s)
+    row("serve/lm/engine_us_per_token", us_tok,
+        f"tok_s={stats.throughput_tok_s:.1f};slots={SLOTS};"
+        f"requests={n_requests}")
+    row("serve/lm/naive_us_per_token", us_tok_naive,
+        f"tok_s={nstats.throughput_tok_s:.1f}")
+    row("serve/lm/continuous_batching_speedup", 0.0, f"x{speedup:.2f}")
+    row("serve/lm/latency_p50_ms", 0.0, f"{stats.latency_p50_ms:.1f}")
+    row("serve/lm/latency_p99_ms", 0.0, f"{stats.latency_p99_ms:.1f}")
+    row("serve/lm/recompiles_after_warmup", 0.0, str(recompiles))
+    return {
+        "throughput_tok_s": stats.throughput_tok_s,
+        "naive_tok_s": nstats.throughput_tok_s,
+        "speedup_vs_naive": speedup,
+        "latency_p50_ms": stats.latency_p50_ms,
+        "latency_p95_ms": stats.latency_p95_ms,
+        "latency_p99_ms": stats.latency_p99_ms,
+        "ttft_p50_ms": stats.ttft_p50_ms,
+        "rejected": stats.rejected,
+        "compile_cache_hit_rate": stats.engine["hit_rate"],
+        "recompiles_after_warmup": recompiles,
+        "jit_entries_max": max(jit_entries.values()),
+        "decode_steps": stats.decode_steps,
+        "prefill_calls": stats.prefill_calls,
+    }
+
+
+def _time_classify(engine, x, reps):
+    out = [engine.classify(x) for _ in range(2)]  # warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        engine.classify(x)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6, out[-1]
+
+
+def _mlp_section(scale):
+    hidden = max(256, int(4096 * scale.hidden_scale))
+    cfg = SparseMLPConfig(
+        layer_dims=(784, hidden, hidden, 10), epsilon=64,
+        impl="element", dropout=0.0,
+    )
+    model = SparseMLP(cfg, seed=0)
+    batch = 128
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((batch, 784)).astype(np.float32)
+    ec = EngineConfig(batch_buckets=(batch,))
+
+    raw = SparseInferenceEngine(model, engine=ec, compact=False)
+    pruned, n_pruned = importance_prune_mlp(
+        model, PruningSchedule(tau=0, period=1, percentile=30.0)
+    )
+    compacted, report = eliminate_dead_neurons(pruned)
+    pruned_eng = SparseInferenceEngine(pruned, engine=ec, compact=False)
+    comp_eng = SparseInferenceEngine(compacted, engine=ec, compact=False)
+
+    reps = max(5, scale.epochs)
+    raw_us, _ = _time_classify(raw, x, reps)
+    _, pruned_logits = _time_classify(pruned_eng, x, 1)
+    comp_us, comp_logits = _time_classify(comp_eng, x, reps)
+    # physical elimination must be free: same logits as the pruned model
+    # (bit-equal at single-chunk sizes; chunk-boundary reassociation only
+    # beyond — tests/test_serve.py asserts the bitwise case)
+    exact = bool(
+        np.allclose(pruned_logits, comp_logits, rtol=1e-5, atol=1e-6)
+    )
+    raw_params = raw.model.n_params
+    comp_params = comp_eng.model.n_params
+    row("serve/mlp/forward_raw", raw_us,
+        f"params={raw_params};batch={batch}")
+    row("serve/mlp/forward_compacted", comp_us,
+        f"params={comp_params};pruned_neurons={n_pruned};"
+        f"eliminated={report.eliminated_neurons}")
+    row("serve/mlp/compaction_lossless", 0.0, f"allclose={exact}")
+    return {
+        "raw_us": raw_us,
+        "compacted_us": comp_us,
+        "compacted_vs_raw": comp_us / raw_us,
+        "raw_params": raw_params,
+        "compacted_params": comp_params,
+        "param_shrink": 1.0 - comp_params / raw_params,
+        "pruned_neurons": n_pruned,
+        "eliminated_neurons": report.eliminated_neurons,
+        "dims_after": list(report.dims_after),
+        "elimination_lossless": exact,
+    }
+
+
+def run(scale_name="ci"):
+    scale = SCALES[scale_name]
+    return {"lm": _lm_section(scale), "mlp": _mlp_section(scale)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,67 +1,110 @@
-"""Serving demo: prefill + batched decode with KV caches on a reduced config.
+"""Serving demo on the truly sparse inference engine (DESIGN.md §6).
 
-    PYTHONPATH=src python examples/serve.py --arch gemma2-2b --tokens 16
+Saves a smoke-scale sparse-FFN LM through ``CheckpointManager``, restores it
+into a ``SparseInferenceEngine`` (deployment-time block compaction included),
+and serves a synthetic Poisson trace with continuous batching. Prompts are
+prefilled in a single batched causal forward per bucket — the old
+token-by-token Python replay is gone — and decode advances every active slot
+in one jitted call per token.
+
+    PYTHONPATH=src python examples/serve.py --arch qwen1.5-0.5b --requests 12
 """
 import argparse
-import time
+import dataclasses
+import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.importance import PruningSchedule
+from repro.checkpoint.manager import CheckpointManager
 from repro.models.transformer import PatternLM
+from repro.serve import (
+    ContinuousBatcher,
+    EngineConfig,
+    SparseInferenceEngine,
+    poisson_trace,
+    save_lm_for_serving,
+    serve_sequential,
+)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-2b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=50.0, help="req/s (Poisson)")
+    ap.add_argument("--prune-pct", type=float, default=0.0,
+                    help=">0: importance-prune the sparse FFN at this "
+                    "percentile before serving (Table 6 as a feature)")
+    ap.add_argument("--naive", action="store_true",
+                    help="also run the sequential per-request baseline")
     args = ap.parse_args()
 
     spec = configs.get_spec(args.arch)
-    cfg = spec.smoke
+    cfg = dataclasses.replace(
+        spec.smoke, ffn="sparse", sparse_block=16, sparse_density=0.5,
+        d_ff=max(64, spec.smoke.d_ff // 2),
+    )
     model = PatternLM(cfg, seed=0)
-    topo = model.topo_arrays()
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    ec = EngineConfig(
+        max_slots=args.slots, max_len=96,
+        prefill_buckets=(8, 16, 32), prefill_batch=min(4, args.slots),
     )
-    max_len = args.prompt_len + args.tokens
-
-    # prefill: full forward, then copy K/V into the decode caches by replay
-    t0 = time.perf_counter()
-    caches = model.init_caches(args.batch, max_len, dtype=jnp.dtype(cfg.dtype))
-    logits = None
-    for pos in range(args.prompt_len):  # simple replay prefill (tiny demo)
-        logits, caches, _ = model.forward(
-            model.params, prompts[:, pos:pos + 1], topo=topo,
-            positions=jnp.array([pos]), mode="decode", caches=caches,
+    schedule = (
+        PruningSchedule(tau=0, period=1, percentile=args.prune_pct)
+        if args.prune_pct > 0 else None
+    )
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, async_write=False)
+        save_lm_for_serving(mgr, model, step=0)
+        engine = SparseInferenceEngine.from_checkpoint(
+            ckpt_dir, engine=ec, compaction=schedule,
         )
-    t_prefill = time.perf_counter() - t0
+        if engine.report:
+            r = engine.report
+            print(f"compaction: {r.params_before} -> {r.params_after} live "
+                  f"FFN params ({100 * r.shrink:.1f}% freed, "
+                  f"{r.pruned_neurons} neurons pruned)")
 
-    decode = jax.jit(
-        lambda p, tok, pos, c: model.forward(
-            p, tok, topo=topo, positions=jnp.reshape(pos, (1,)),
-            mode="decode", caches=c,
-        )[:2]
-    )
-    out_tokens = []
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    t0 = time.perf_counter()
-    for s in range(args.tokens):
-        out_tokens.append(np.asarray(tok)[:, 0])
-        logits, caches = decode(model.params, tok, args.prompt_len + s, caches)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    dt = time.perf_counter() - t0
-    gen = np.stack(out_tokens, 1)
-    print(f"arch={args.arch} (reduced) batch={args.batch}")
-    print(f"prefill {args.prompt_len} toks: {t_prefill*1e3:.1f} ms")
-    print(f"decode  {args.tokens} toks: {dt*1e3:.1f} ms "
-          f"({args.tokens*args.batch/dt:.1f} tok/s)")
-    print("sample:", gen[0][:12], "...")
+        def make_trace(seed):
+            return poisson_trace(
+                args.requests, args.rate, vocab=cfg.vocab,
+                prompt_lens=(4, 32), new_tokens=(4, 12), seed=seed,
+            )
+
+        # warmup: compile each bucket + the decode program once
+        ContinuousBatcher(engine).run(make_trace(0))
+        warm_compiles = engine.stats["compiles"]
+
+        batcher = ContinuousBatcher(engine)
+        stats = batcher.run(make_trace(1))
+        print(f"arch={args.arch} (reduced, sparse FFN) slots={args.slots}")
+        print(f"continuous batching: {stats.generated_tokens} tokens in "
+              f"{stats.wall_seconds * 1e3:.0f} ms "
+              f"({stats.throughput_tok_s:.1f} tok/s, "
+              f"{stats.decode_steps} decode steps, "
+              f"{stats.prefill_calls} prefill calls)")
+        print(f"latency p50/p95/p99: {stats.latency_p50_ms:.1f}/"
+              f"{stats.latency_p95_ms:.1f}/{stats.latency_p99_ms:.1f} ms, "
+              f"ttft p50 {stats.ttft_p50_ms:.1f} ms, "
+              f"rejected {stats.rejected}")
+        post = engine.stats
+        print(f"compile cache: {post['compiles']} compiles "
+              f"({post['compiles'] - warm_compiles} after warmup), "
+              f"hit rate {post['hit_rate']:.2f}")
+
+        if args.naive:
+            naive_engine = SparseInferenceEngine.from_checkpoint(
+                ckpt_dir, compaction=schedule,
+                engine=dataclasses.replace(ec, max_slots=1, prefill_batch=1),
+            )
+            serve_sequential(naive_engine, make_trace(0))  # warmup
+            nstats = serve_sequential(naive_engine, make_trace(1))
+            print(f"naive sequential:    {nstats.throughput_tok_s:.1f} tok/s "
+                  f"-> engine speedup "
+                  f"{stats.throughput_tok_s / nstats.throughput_tok_s:.2f}x")
 
 
 if __name__ == "__main__":

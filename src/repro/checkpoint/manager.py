@@ -151,15 +151,28 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: Optional[int] = None) -> Dict:
+        """Manifest only — lets a restorer (e.g. the serving engine) learn the
+        model config/kind before deciding how to build the ``like`` pytree."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        root = self.dir / f"step_{step:09d}"
+        return json.loads((root / "manifest.json").read_text())
+
     def restore(
         self,
         step: Optional[int] = None,
         like: Optional[PyTree] = None,
         shardings: Optional[PyTree] = None,
+        like_extra: Optional[Dict[str, PyTree]] = None,
     ):
         """Restore (params, extra, topologies, manifest). ``like`` gives the
         target pytree structure; ``shardings`` (optional) re-shards each leaf
-        onto the *current* mesh — elastic resume onto a different topology."""
+        onto the *current* mesh — elastic resume onto a different topology.
+        ``like_extra`` maps extra-group name -> like pytree for the groups
+        written via ``save(extra=...)``; groups not named are left on disk."""
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -186,9 +199,12 @@ class CheckpointManager:
             return jax.tree_util.tree_unflatten(treedef, out)
 
         params = load_tree(root / "arrays", like, shardings) if like is not None else None
+        extra = {}
+        for group, group_like in (like_extra or {}).items():
+            extra[group] = load_tree(root / group, group_like)
         topologies = {}
         topo_dir = root / "topology"
         if topo_dir.exists():
             for f in topo_dir.glob("*.npz"):
                 topologies[f.stem] = dict(np.load(f))
-        return params, topologies, manifest
+        return params, extra, topologies, manifest

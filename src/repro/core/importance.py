@@ -24,6 +24,7 @@ import numpy as np
 from repro.core.sparsity import BlockMeta, BlockTopology, ElementTopology
 
 __all__ = [
+    "element_degrees",
     "neuron_importance_element",
     "neuron_importance_block",
     "importance_prune_element",
@@ -65,6 +66,17 @@ class PruningSchedule:
 # ---------------------------------------------------------------------------
 # element granularity
 # ---------------------------------------------------------------------------
+
+
+def element_degrees(topo: ElementTopology) -> Tuple[np.ndarray, np.ndarray]:
+    """(out_degree per input row, in_degree per output column).
+
+    A hidden neuron with in-degree 0 computes ``act(bias)`` (a constant) and
+    one with out-degree 0 feeds nothing downstream — both are what
+    deployment-time compaction (serve/compact.py) physically eliminates."""
+    row_deg = np.bincount(topo.rows, minlength=topo.in_dim)
+    col_deg = np.bincount(topo.cols, minlength=topo.out_dim)
+    return row_deg, col_deg
 
 
 def neuron_importance_element(

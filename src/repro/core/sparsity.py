@@ -403,6 +403,18 @@ SPMM_AUTO_NNZ = 2048
 # on the backward pass too) would exceed this many elements.
 SPMM_AUTO_ELEMS = 512 * 1024
 
+# Forward-only "auto" policy for serving (``kernels.ops.espmm_infer``).
+# Inference never runs a backward pass, so the value_and_grad-calibrated
+# thresholds above are wrong for it: the scatter formulation's *forward*
+# stays ahead of the chunked segment path until far larger problems (the
+# PR-1 forward-only fit measured the crossover near 65k nnz on XLA:CPU —
+# the scatter cliff the training thresholds dodge is a backward artifact).
+# Serving still bounds peak temp memory: beyond SPMM_INFER_ELEMS elements
+# the (batch, nnz) scatter intermediate would exceed the budget, so the
+# chunked segment path takes over regardless of nnz.
+SPMM_INFER_NNZ = 65536
+SPMM_INFER_ELEMS = 4 * 1024 * 1024
+
 
 def spmm_chunk_for(batch: int, nnz: int, chunk: Optional[int] = None) -> int:
     """Chunk width for the chunked element passes.

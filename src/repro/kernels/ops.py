@@ -40,6 +40,8 @@ import numpy as np
 from repro.core.sparsity import (
     SPMM_AUTO_ELEMS,
     SPMM_AUTO_NNZ,
+    SPMM_INFER_ELEMS,
+    SPMM_INFER_NNZ,
     BlockMeta,
     BlockTopoArrays,
     ElemTopoArrays,
@@ -279,3 +281,51 @@ def espmm(
     if impl == "scatter":
         return element_spmm(x, values, topo.rows, topo.cols, out_dim)
     raise ValueError(f"unknown element impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Forward-only (serving) entries
+# ---------------------------------------------------------------------------
+#
+# The serving engine never differentiates, so these entries (a) skip the
+# custom_vjp wrappers entirely — no residual tuple is even traced — and
+# (b) dispatch on *forward-only* calibration (``SPMM_INFER_*``), not the
+# value_and_grad thresholds ``espmm``'s "auto" uses for training.
+
+
+def espmm_infer(
+    x: jax.Array,
+    values: jax.Array,
+    topo: ElemTopoArrays,
+    out_dim: int,
+    *,
+    chunk: int | None = None,
+) -> jax.Array:
+    """Element-sparse ``y = x @ W``, inference dispatch (no VJP machinery).
+
+    Scatter-add while its (batch, nnz) intermediate is affordable and nnz is
+    below the forward-only cliff (~65k on XLA:CPU); the chunked segment-sum
+    path beyond — same O(batch * chunk) temp bound as training, but reached
+    at ~30x larger problems because no backward pass has to be paid for.
+    """
+    nnz = int(values.shape[0])
+    batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+    big = nnz >= SPMM_INFER_NNZ or batch * nnz >= SPMM_INFER_ELEMS
+    if big:
+        return element_spmm_segment(
+            x, values, topo.rows, topo.cols, out_dim, chunk=chunk
+        )
+    return element_spmm(x, values, topo.rows, topo.cols, out_dim)
+
+
+def bsmm_infer(
+    x: jax.Array,
+    values: jax.Array,
+    topo: BlockTopoArrays,
+    meta: BlockMeta,
+) -> jax.Array:
+    """Block-sparse ``y = x @ W`` for serving: the XLA-native gather/einsum
+    path (natively forward-only — no custom_vjp residuals to trace), named
+    separately so engine call sites read as inference and can re-dispatch
+    (e.g. to a Pallas decode kernel) without touching the training path."""
+    return bsmm_xla(x, values, topo, meta)

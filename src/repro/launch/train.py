@@ -102,7 +102,7 @@ def main():
     params = jax.device_put(model.params, param_sh)
     start_step = 0
     if args.resume and ckpt.latest_step() is not None:
-        params, _, manifest = ckpt.restore(like=model.params, shardings=param_sh)
+        params, _, _, manifest = ckpt.restore(like=model.params, shardings=param_sh)
         start_step = manifest["step"]
         print(f"[train] resumed from step {start_step}")
 
@@ -129,7 +129,7 @@ def main():
                 )
                 print(f"[train] {plan.note}; restoring latest checkpoint")
                 ckpt.wait()
-                params, _, manifest = ckpt.restore(
+                params, _, _, manifest = ckpt.restore(
                     like=model.params, shardings=param_sh
                 )
 

@@ -232,7 +232,7 @@ def attention_fwd(
     cfg: AttnConfig,
     *,
     positions: jax.Array,
-    mode: str = "train",           # train | decode
+    mode: str = "train",           # train | prefill | decode
     cache: Optional[Dict] = None,  # {"k": (B,S,KV,D), "v": ..., "len": scalar}
     prefix_len: Optional[int] = None,  # PrefixLM: bidirectional prefix
 ) -> Tuple[jax.Array, Optional[Dict]]:
@@ -291,7 +291,13 @@ def attention_fwd(
 
         out = _online_softmax_chunked(q, ck, cv, mask_fn, cfg, idx)
     else:
-        new_cache = None
+        # prefill (engine-facing): same full causal pass as train, but the
+        # prompt's K/V projections are handed back so the serving engine can
+        # seed per-slot decode caches with ONE batched forward instead of a
+        # token-by-token replay. The (B, S, KV, D) layout is the prompt
+        # prefix of a full decode cache; serve/engine.py copies it into the
+        # slot's max_len-sized cache (ring conversion is the engine's job).
+        new_cache = {"k": kx, "v": vx} if mode == "prefill" else None
         if cfg.causal_skip and prefix_len is None:
             out = _causal_skip_attention(q, kx, vx, cfg, positions[0] if positions.ndim > 1 else positions)
         else:

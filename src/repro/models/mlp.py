@@ -97,6 +97,28 @@ class SparseMLP:
             self.values.append(vals)
             self.biases.append(jnp.zeros((n_out,), dtype))
 
+    @classmethod
+    def from_state(
+        cls,
+        config: SparseMLPConfig,
+        topos: Sequence[object],
+        values: Sequence[jax.Array],
+        biases: Sequence[jax.Array],
+    ) -> "SparseMLP":
+        """Rebuild a model from explicit state — checkpoint restore and the
+        serving engine's deployment-time compaction both construct models
+        whose topologies are NOT the seeded Erdős–Rényi draw, so they cannot
+        go through ``__init__``."""
+        model = cls.__new__(cls)
+        model.config = config
+        model.topos = list(topos)
+        model.values = [jnp.asarray(v) for v in values]
+        model.biases = [jnp.asarray(b) for b in biases]
+        assert len(model.topos) == config.n_layers
+        assert len(model.values) == config.n_layers
+        assert len(model.biases) == config.n_layers
+        return model
+
     # -- views for the pure step functions ---------------------------------
 
     def params(self):
@@ -142,8 +164,13 @@ def mlp_forward(
     *,
     train: bool = False,
     rng: Optional[jax.Array] = None,
+    infer: bool = False,
 ) -> jax.Array:
-    """Pure forward; returns logits."""
+    """Pure forward; returns logits.
+
+    ``infer=True`` is the serving-engine entry: the element path goes through
+    ``kops.espmm_infer`` — forward-only dispatch thresholds, no custom-VJP
+    wrapper traced — instead of the training-calibrated ``espmm``."""
     act = activation_fn(config.activation, alpha=config.alpha)
     h = x
     n_layers = config.n_layers
@@ -152,10 +179,15 @@ def mlp_forward(
         bias = params["biases"][l]
         out_dim = config.layer_dims[l + 1]
         if config.impl == "element":
-            h = kops.espmm(
-                h, vals, topo_arrays[l], out_dim,
-                impl=config.element_impl, chunk=config.spmm_chunk,
-            ) + bias
+            if infer:
+                h = kops.espmm_infer(
+                    h, vals, topo_arrays[l], out_dim, chunk=config.spmm_chunk,
+                ) + bias
+            else:
+                h = kops.espmm(
+                    h, vals, topo_arrays[l], out_dim,
+                    impl=config.element_impl, chunk=config.spmm_chunk,
+                ) + bias
         elif config.impl == "block":
             meta = BlockMeta(
                 config.layer_dims[l], out_dim, config.block_m, config.block_n

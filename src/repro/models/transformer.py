@@ -389,9 +389,16 @@ class PatternLM:
         caches=None,
         prefix_embeds: Optional[jax.Array] = None,
         return_hidden: bool = False,
+        scan_barrier: bool = True,
     ):
         """tokens: (B, S). prefix_embeds: (B, Sp, d) VLM patch embeddings.
-        Returns (hidden_or_logits, new_caches, aux)."""
+        Returns (hidden_or_logits, new_caches, aux).
+
+        Modes: ``train`` (no caches), ``decode`` (single-step with caches),
+        ``prefill`` (engine-facing: full causal forward over the prompt that
+        ALSO returns per-layer K/V caches of prompt length — the serving
+        engine inserts them into max_len decode caches; recurrent blocks
+        return their post-prompt states the same way)."""
         cfg = self.cfg
         h = L.embed(params["embed"], tokens)
         if cfg.embed_scale:
@@ -438,11 +445,13 @@ class PatternLM:
                 if nc is not None:
                     new_slot_cache[slot] = nc
                 aux = aux + aux_b
-            if mode != "train":
+            if mode != "train" and scan_barrier:
                 # keeps XLA from fusing across scan iterations in inference
                 # graphs; omitted under grad — optimization_barrier has no
                 # differentiation rule, and remat already pins the train-mode
-                # iteration boundaries.
+                # iteration boundaries. Callers that vmap the forward (the
+                # serving engine's per-slot decode) pass scan_barrier=False:
+                # the primitive has no batching rule either.
                 h, aux = jax.lax.optimization_barrier((h, aux))
             return (h, aux), new_slot_cache
 
@@ -464,15 +473,16 @@ class PatternLM:
             stack_cache,
             jnp.arange(cfg.n_rep),
         )
+        collect_caches = mode in ("decode", "prefill")
         if cfg.n_rep > 0:
             (h, aux_total), scan_caches = jax.lax.scan(
                 body, (h, aux_total), xs
             )
-            if mode == "decode":
+            if collect_caches:
                 new_caches["stack"] = scan_caches
 
         # --- remainder blocks ---
-        if mode == "decode":
+        if collect_caches:
             new_caches.setdefault("rest", [])
         for i in range(cfg.remainder):
             kind = cfg.pattern[i % P]
@@ -489,7 +499,7 @@ class PatternLM:
                 topo=rest_topo, metas=self.block_metas, prefix_len=prefix_len,
             )
             aux_total = aux_total + aux_b
-            if mode == "decode":
+            if collect_caches:
                 new_caches.setdefault("rest", []).append(nc)
 
         h = _norm(cfg, params["final_norm"], h)

@@ -1,0 +1,51 @@
+"""Truly sparse serving: the inference counterpart of the device-resident
+training substrate (DESIGN.md §6).
+
+* ``serve.compact``  — deployment-time compaction: post-training Importance
+  Pruning (the Table 6 study as a serving feature) plus lossless physical
+  elimination of zero-degree neurons, shrinking the COO/block arrays.
+* ``serve.engine``   — ``SparseInferenceEngine``: checkpoint restore,
+  compaction, frozen topology arrays, and jitted forward-only
+  prefill/decode/classify functions per padding bucket behind a bounded
+  compile cache.
+* ``serve.batcher``  — continuous batching: slot-based decode where finished
+  sequences are evicted and queued requests join in place, bucketed prefill,
+  admission control, and a synthetic Poisson traffic generator.
+"""
+from repro.serve.batcher import (
+    ContinuousBatcher,
+    Request,
+    ServeStats,
+    poisson_trace,
+    serve_sequential,
+)
+from repro.serve.compact import (
+    CompactionReport,
+    compact_block_lm,
+    compact_element_mlp,
+    eliminate_dead_neurons,
+    importance_prune_mlp,
+)
+from repro.serve.engine import (
+    EngineConfig,
+    SparseInferenceEngine,
+    save_lm_for_serving,
+    save_mlp_for_serving,
+)
+
+__all__ = [
+    "CompactionReport",
+    "ContinuousBatcher",
+    "EngineConfig",
+    "Request",
+    "ServeStats",
+    "SparseInferenceEngine",
+    "compact_block_lm",
+    "compact_element_mlp",
+    "eliminate_dead_neurons",
+    "importance_prune_mlp",
+    "poisson_trace",
+    "save_lm_for_serving",
+    "save_mlp_for_serving",
+    "serve_sequential",
+]

@@ -1,0 +1,476 @@
+"""``SparseInferenceEngine`` — the truly sparse serving runtime (DESIGN.md §6).
+
+The engine is the inference counterpart of the device-resident training
+substrate: restore a model from ``CheckpointManager``, run deployment-time
+compaction (``serve.compact``), freeze the topology device arrays ONCE
+(the dual-order COO views for the element path, the stacked block
+coordinates for the LM path — they never change again, so no jitted call
+ever retraces for topology), and serve through jitted **forward-only**
+functions — no VJP is ever traced, so no residuals are saved — behind a
+bounded LRU compile cache keyed by padding bucket.
+
+Two model kinds share the machinery:
+
+* ``SparseMLP`` (element/COO) — ``classify(x)``: request batches padded to
+  batch-size buckets, forward through ``mlp_forward(..., infer=True)``
+  (forward-calibrated espmm dispatch).
+* ``PatternLM`` — ``prefill(prompts, slots)`` / ``decode_step(tokens, pos)``:
+  prompts padded to length buckets, one batched causal forward seeds the
+  per-slot KV caches (no token-by-token replay), and decode runs all slots
+  in one jitted call with **per-slot positions** (the slot axis is a vmap of
+  the single-sequence decode, so ragged sequences never recompile). Padded
+  prompt tails are written into the cache at indices past the true length
+  and are masked by causality until the slot's own decode steps overwrite
+  them — bucket padding costs prefill FLOPs, never correctness.
+
+LM engine scope: attention patterns only (``global``/``local``); local
+layers run with ``decode_window_cache=False`` (full-length caches, windowed
+masking) because per-slot ring buffers with slot-divergent positions are a
+separate kernel problem. Recurrent blocks (mamba/rglru) are rejected —
+their states cannot absorb the padded-tail trick.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.importance import PruningSchedule
+from repro.core.sparsity import BlockMeta, BlockTopology, ElementTopology
+from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
+from repro.models.transformer import ModelConfig, PatternLM
+from repro.serve.compact import (
+    CompactionReport,
+    compact_block_lm,
+    compact_element_mlp,
+)
+
+PyTree = Any
+
+__all__ = [
+    "EngineConfig",
+    "SparseInferenceEngine",
+    "save_lm_for_serving",
+    "save_mlp_for_serving",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving shapes and cache policy. Buckets are the ONLY shapes the
+    engine ever compiles — admission clamps everything else to them."""
+
+    max_slots: int = 8                 # concurrent decode sequences
+    max_len: int = 128                 # per-slot KV capacity
+    prefill_buckets: Tuple[int, ...] = (8, 16, 32, 64)
+    prefill_batch: int = 4             # prefill requests padded per call
+    batch_buckets: Tuple[int, ...] = (1, 8, 32, 128)  # MLP classify
+    compile_cache_max: int = 32
+
+
+class _JitCache:
+    """Bounded LRU of jitted callables with hit/compile accounting.
+
+    jax's own compilation cache is per-callable; bounding the number of
+    callables (one per (kind, bucket)) bounds total compiled code. Eviction
+    drops the callable — a re-request recompiles and counts as a compile,
+    which is exactly what the zero-recompile-after-warmup assertion in the
+    bench watches."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: "collections.OrderedDict[Tuple, Callable]" = (
+            collections.OrderedDict()
+        )
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Tuple, build: Callable[[], Callable]) -> Callable:
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        fn = build()
+        self._d[key] = fn
+        if len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+            self.evictions += 1
+        return fn
+
+    def entry_sizes(self) -> Dict[Tuple, int]:
+        return {k: f._cache_size() for k, f in self._d.items()}
+
+
+def _donate(*argnums: int) -> Tuple[int, ...]:
+    # donation is a no-op (with a warning) on CPU — only request it elsewhere
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+class SparseInferenceEngine:
+    def __init__(
+        self,
+        model,
+        *,
+        engine: EngineConfig = EngineConfig(),
+        compaction: Optional[PruningSchedule] = None,
+        compact: bool = True,
+    ):
+        self.cfg = engine
+        self.report: Optional[CompactionReport] = None
+        self._cache = _JitCache(engine.compile_cache_max)
+        if isinstance(model, SparseMLP):
+            self.kind = "mlp"
+            if compact:
+                model, self.report = compact_element_mlp(model, compaction)
+            self.model = model
+            self._params = jax.tree.map(jnp.asarray, model.params())
+            # frozen once: dual-order COO views never change after this
+            self._topo = model.topo_arrays()
+        elif isinstance(model, PatternLM):
+            self.kind = "lm"
+            bad = [k for k in model.cfg.pattern if k not in ("global", "local")]
+            if bad:
+                raise ValueError(
+                    f"LM engine serves attention patterns only, got {bad}"
+                )
+            if model.cfg.prefix_len:
+                # prefix-LM masks attend bidirectionally inside the prefix:
+                # bucket padding would put garbage pad tokens INSIDE that
+                # window, and decode drops the prefix mask entirely
+                raise ValueError(
+                    "LM engine does not serve prefix-LM configs "
+                    f"(prefix_len={model.cfg.prefix_len})"
+                )
+            if model.cfg.decode_window_cache:
+                # per-slot ring buffers don't survive slot-divergent
+                # positions; full-length caches + windowed masking do
+                model.cfg = dataclasses.replace(
+                    model.cfg, decode_window_cache=False
+                )
+            if compact and compaction is not None and model.topologies:
+                self.report = compact_block_lm(model, compaction)
+            self.model = model
+            self._params = model.params
+            self._topo = model.topo_arrays()  # frozen once
+            self._caches = self._init_slot_caches()
+        else:
+            raise TypeError(f"unsupported model {type(model)!r}")
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_checkpoint(
+        cls,
+        directory,
+        *,
+        step: Optional[int] = None,
+        engine: EngineConfig = EngineConfig(),
+        compaction: Optional[PruningSchedule] = None,
+        compact: bool = True,
+    ) -> "SparseInferenceEngine":
+        """Restore the model a training run saved via ``save_*_for_serving``
+        and wrap it. The manifest's ``serve_kind`` selects the restore path;
+        topology npz files rebuild the host topologies, so the restored
+        model's connectivity is exactly the trained one (not the seed
+        draw)."""
+        mgr = (
+            directory
+            if isinstance(directory, CheckpointManager)
+            else CheckpointManager(str(directory))
+        )
+        manifest = mgr.read_manifest(step)
+        meta = manifest.get("meta", {})
+        kind = meta.get("serve_kind")
+        if kind == "mlp":
+            model = _restore_mlp(mgr, step, meta)
+        elif kind == "lm":
+            model = _restore_lm(mgr, step, meta)
+        else:
+            raise ValueError(
+                f"checkpoint has no serve_kind meta (got {kind!r}); save it "
+                "with serve.engine.save_mlp_for_serving / save_lm_for_serving"
+            )
+        return cls(model, engine=engine, compaction=compaction, compact=compact)
+
+    # -- stats --------------------------------------------------------------
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        c = self._cache
+        total = c.hits + c.misses
+        return {
+            "compiles": c.misses,
+            "cache_hits": c.hits,
+            "cache_evictions": c.evictions,
+            "hit_rate": c.hits / total if total else 0.0,
+            "jit_entries": sum(c.entry_sizes().values()),
+        }
+
+    def jit_entry_sizes(self) -> Dict[Tuple, int]:
+        """Per (kind, bucket) XLA executable counts — every entry should be
+        exactly 1 after warmup (shape-stable serving, zero recompiles)."""
+        return self._cache.entry_sizes()
+
+    # -- MLP serving --------------------------------------------------------
+
+    def classify(self, x: np.ndarray) -> np.ndarray:
+        """Forward a request batch, padded up to the nearest batch bucket.
+        Batches beyond the largest bucket are served in largest-bucket
+        chunks (admission control upstream should prevent that)."""
+        assert self.kind == "mlp"
+        n = x.shape[0]
+        cap = self.cfg.batch_buckets[-1]
+        if n > cap:
+            return np.concatenate(
+                [self.classify(x[s : s + cap]) for s in range(0, n, cap)]
+            )
+        bucket = next(b for b in self.cfg.batch_buckets if b >= n)
+        if n < bucket:
+            x = np.concatenate(
+                [x, np.zeros((bucket - n,) + x.shape[1:], x.dtype)]
+            )
+        fn = self._cache.get(("classify", bucket), self._build_classify)
+        logits = fn(self._params, self._topo, jnp.asarray(x))
+        return np.asarray(logits)[:n]
+
+    def _build_classify(self):
+        config = self.model.config
+
+        @jax.jit
+        def fn(params, topo, xb):
+            return mlp_forward(params, topo, xb, config, infer=True)
+
+        return fn
+
+    # -- LM serving ---------------------------------------------------------
+
+    def _init_slot_caches(self) -> PyTree:
+        """Per-slot decode caches: leaves carry a leading slot axis over the
+        single-sequence (batch=1) cache layout, so decode vmaps the
+        single-sequence program and every slot owns independent positions."""
+        base = self.model.init_caches(
+            1, self.cfg.max_len, dtype=jnp.dtype(self.model.cfg.dtype)
+        )
+        S = self.cfg.max_slots
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (S,) + a.shape).copy(), base
+        )
+
+    def reset_slots(self) -> None:
+        self._caches = self._init_slot_caches()
+
+    def bucket_for(self, prompt_len: int) -> Optional[int]:
+        for b in self.cfg.prefill_buckets:
+            if b >= prompt_len:
+                return b
+        return None
+
+    def prefill(
+        self, prompts: Sequence[np.ndarray], slots: Sequence[int]
+    ) -> np.ndarray:
+        """One batched causal forward over up to ``prefill_batch`` prompts
+        (padded to a shared length bucket), seeding each slot's KV cache and
+        returning the first generated token per prompt. All prompts in a
+        call must fit the same bucket — the batcher groups by bucket."""
+        assert self.kind == "lm"
+        assert 0 < len(prompts) <= self.cfg.prefill_batch
+        lens = [int(p.shape[0]) for p in prompts]
+        bucket = self.bucket_for(max(lens))
+        if bucket is None:
+            raise ValueError(
+                f"prompt length {max(lens)} exceeds the largest prefill "
+                f"bucket {self.cfg.prefill_buckets[-1]}"
+            )
+        B = self.cfg.prefill_batch
+        tokens = np.zeros((B, bucket), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, : lens[i]] = p
+        lens_arr = np.ones((B,), np.int32)
+        lens_arr[: len(prompts)] = lens
+        # padded rows scatter to slot id == max_slots -> dropped by the insert
+        slots_arr = np.full((B,), self.cfg.max_slots, np.int32)
+        slots_arr[: len(prompts)] = slots
+        fn = self._cache.get(
+            ("prefill", bucket), lambda: self._build_prefill(bucket)
+        )
+        next_tok, self._caches = fn(
+            self._params, self._topo, self._caches,
+            jnp.asarray(tokens), jnp.asarray(lens_arr), jnp.asarray(slots_arr),
+        )
+        return np.asarray(next_tok)[: len(prompts)]
+
+    def _build_prefill(self, bucket: int):
+        model = self.model
+        n_rep = model.cfg.n_rep
+
+        def fn(params, topo, big_caches, tokens, lens, slots):
+            logits, pre, _ = model.forward(
+                params, tokens, topo=topo, mode="prefill"
+            )
+            last = jnp.take_along_axis(
+                logits, (lens - 1)[:, None, None], axis=1
+            )[:, 0]
+            next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+
+            # seed slot caches: slot axis leads, inner layout is batch=1
+            def ins_stack(big, p):
+                # p: (n_rep, B, P, ...) -> (B, n_rep, 1, P, ...)
+                moved = jnp.expand_dims(jnp.moveaxis(p, 1, 0), 2)
+                P = moved.shape[3]
+                return big.at[slots, :, :, :P].set(
+                    moved.astype(big.dtype), mode="drop"
+                )
+
+            def ins_rest(big, p):
+                # p: (B, P, ...) -> (B, 1, P, ...)
+                moved = jnp.expand_dims(p, 1)
+                P = moved.shape[2]
+                return big.at[slots, :, :P].set(
+                    moved.astype(big.dtype), mode="drop"
+                )
+
+            new_stack = big_caches["stack"]
+            if n_rep > 0:
+                new_stack = jax.tree.map(
+                    ins_stack, big_caches["stack"], pre["stack"]
+                )
+            new_rest = jax.tree.map(
+                ins_rest, big_caches["rest"], pre.get("rest", [])
+            )
+            return next_tok, {"stack": new_stack, "rest": new_rest}
+
+        return jax.jit(fn, donate_argnums=_donate(2))
+
+    def decode_step(self, tokens: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        """One decode step for ALL slots (shape-stable: inactive slots run
+        too and are ignored host-side). ``tokens``/``pos`` are (max_slots,);
+        each slot attends its own causal prefix at its own position."""
+        assert self.kind == "lm"
+        fn = self._cache.get(("decode",), self._build_decode)
+        next_tok, self._caches = fn(
+            self._params, self._topo, self._caches,
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(pos, jnp.int32),
+        )
+        return np.asarray(next_tok)
+
+    def _build_decode(self):
+        model = self.model
+
+        def fn(params, topo, caches, tokens, pos):
+            def one(c, tok, p):
+                logits, nc, _ = model.forward(
+                    params, tok[None, None], topo=topo, positions=p[None],
+                    mode="decode", caches=c, scan_barrier=False,
+                )
+                return logits[0, -1], nc
+
+            logits, new_caches = jax.vmap(one)(caches, tokens, pos)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+
+        return jax.jit(fn, donate_argnums=_donate(2))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint glue (save at the end of training, restore in the engine)
+# ---------------------------------------------------------------------------
+
+
+def save_mlp_for_serving(
+    mgr: CheckpointManager, model: SparseMLP, step: int = 0, meta=None
+) -> None:
+    """Params + element topologies + config, tagged for engine restore."""
+    assert model.config.impl == "element"
+    topologies = {
+        f"layer{l}": {"rows": t.rows, "cols": t.cols}
+        for l, t in enumerate(model.topos)
+    }
+    mgr.save(
+        step,
+        model.params(),
+        topologies=topologies,
+        meta={
+            "serve_kind": "mlp",
+            "mlp_config": dataclasses.asdict(model.config),
+            **(meta or {}),
+        },
+    )
+    mgr.wait()
+
+
+def _restore_mlp(mgr: CheckpointManager, step, meta) -> SparseMLP:
+    ckpt_cfg = dict(meta["mlp_config"])
+    ckpt_cfg["layer_dims"] = tuple(ckpt_cfg["layer_dims"])
+    config = SparseMLPConfig(**ckpt_cfg)
+    _, _, topo_npz, _ = mgr.restore(step)  # topologies carry the nnz
+    topos, like_vals, like_biases = [], [], []
+    dtype = jnp.dtype(config.dtype)
+    for l in range(config.n_layers):
+        t = topo_npz[f"layer{l}"]
+        topo = ElementTopology(
+            config.layer_dims[l], config.layer_dims[l + 1],
+            t["rows"], t["cols"],
+        )
+        topos.append(topo)
+        like_vals.append(jnp.zeros((topo.nnz,), dtype))
+        like_biases.append(jnp.zeros((config.layer_dims[l + 1],), dtype))
+    like = {"values": tuple(like_vals), "biases": tuple(like_biases)}
+    params, _, _, _ = mgr.restore(step, like=like)
+    return SparseMLP.from_state(
+        config, topos, params["values"], params["biases"]
+    )
+
+
+def save_lm_for_serving(
+    mgr: CheckpointManager, model: PatternLM, step: int = 0, meta=None
+) -> None:
+    """PatternLM params + per-rep block topologies + config + init seed."""
+    topologies = {}
+    for slot, topo_list in model.topologies.items():
+        for r, (t_in, t_out) in enumerate(topo_list):
+            topologies[f"{slot}__r{r}"] = {
+                "rows_in": t_in.rows, "cols_in": t_in.cols,
+                "rows_out": t_out.rows, "cols_out": t_out.cols,
+            }
+    mgr.save(
+        step,
+        model.params,
+        topologies=topologies,
+        meta={
+            "serve_kind": "lm",
+            "model_config": dataclasses.asdict(model.cfg),
+            "seed": model._seed,
+            **(meta or {}),
+        },
+    )
+    mgr.wait()
+
+
+def _restore_lm(mgr: CheckpointManager, step, meta) -> PatternLM:
+    ckpt_cfg = dict(meta["model_config"])
+    ckpt_cfg["pattern"] = tuple(ckpt_cfg["pattern"])
+    cfg = ModelConfig(**ckpt_cfg)
+    # same cfg+seed rebuilds the same pytree *structure* (leaf shapes come
+    # from the files themselves, so evolved-but-same-capacity topologies
+    # restore exactly); then the saved topologies replace the seed draw
+    model = PatternLM(cfg, seed=int(meta.get("seed", 0)))
+    params, _, topo_npz, _ = mgr.restore(step, like=model.params)
+    model.params = params
+    for slot, topo_list in model.topologies.items():
+        new_list = []
+        for r, (t_in, t_out) in enumerate(topo_list):
+            t = topo_npz[f"{slot}__r{r}"]
+            new_list.append(
+                (
+                    BlockTopology(t_in.meta, t["rows_in"], t["cols_in"]),
+                    BlockTopology(t_out.meta, t["rows_out"], t["cols_out"]),
+                )
+            )
+        model.topologies[slot] = new_list
+    return model

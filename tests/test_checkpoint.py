@@ -1,0 +1,153 @@
+"""CheckpointManager: round-trips (incl. the bf16 raw-void view path),
+extra groups, topology restore, retention GC, async error propagation."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as manager_mod
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((4, 3)), dtype),
+        "nested": {
+            "b": jnp.asarray(rng.standard_normal(5), dtype),
+            "step": jnp.asarray(7, jnp.int32),
+        },
+        "stack": [jnp.asarray(rng.standard_normal(2), dtype)],
+    }
+
+
+def _assert_tree_equal(got, want):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert np.asarray(g).dtype == np.asarray(w).dtype
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_roundtrip_f32(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    t = _tree(0)
+    mgr.save(3, t, meta={"note": "x"})
+    params, extra, topos, manifest = mgr.restore(like=jax.tree.map(jnp.zeros_like, t))
+    _assert_tree_equal(params, t)
+    assert extra == {} and topos == {}
+    assert manifest["step"] == 3 and manifest["meta"]["note"] == "x"
+    # manifest records shapes/dtypes per leaf
+    assert manifest["shapes"]["w"] == [[4, 3], "float32"]
+
+
+def test_roundtrip_bf16_raw_void_view(tmp_path):
+    """bf16 leaves survive numpy's raw-void .npy round trip: the loader
+    views the void bytes back through the ``like`` leaf's dtype."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    t = _tree(1, dtype=jnp.bfloat16)
+    mgr.save(1, t)
+    # the on-disk array really is raw void (no bf16 in vanilla numpy)
+    raw = np.load(tmp_path / "step_000000001" / "arrays" / "w.npy")
+    assert raw.dtype.kind == "V"
+    params, _, _, _ = mgr.restore(like=jax.tree.map(jnp.zeros_like, t))
+    _assert_tree_equal(params, t)
+
+
+def test_extra_groups_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    t = _tree(2)
+    opt = {"velocity": jax.tree.map(lambda a: a * 2, t)}
+    mgr.save(5, t, extra=opt)
+    like = jax.tree.map(jnp.zeros_like, t)
+    _, extra, _, _ = mgr.restore(like=like, like_extra={"velocity": like})
+    _assert_tree_equal(extra["velocity"], opt["velocity"])
+
+
+def test_topology_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    topo = {
+        "layer0": {"rows": np.arange(6, dtype=np.int32),
+                   "cols": np.arange(6, dtype=np.int32)[::-1].copy()},
+        "layer1": {"rows": np.zeros(2, np.int32),
+                   "cols": np.ones(2, np.int32)},
+    }
+    mgr.save(2, {"w": jnp.zeros(1)}, topologies=topo)
+    _, _, topos, _ = mgr.restore()
+    assert set(topos) == {"layer0", "layer1"}
+    for name, arrays in topo.items():
+        for k, v in arrays.items():
+            np.testing.assert_array_equal(topos[name][k], v)
+
+
+def test_keep_last_gc_ordering(tmp_path):
+    """GC removes the OLDEST steps only, after a successful write."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, async_write=False)
+    t = {"w": jnp.zeros(2)}
+    for s in (1, 5, 3, 9):  # out-of-order saves still GC by step number
+        mgr.save(s, t)
+    assert mgr.all_steps() == [5, 9]
+    assert mgr.latest_step() == 9
+    # the survivors are intact
+    params, _, _, m = mgr.restore(step=5, like=t)
+    assert m["step"] == 5
+
+
+def test_async_write_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    t = _tree(3)
+    mgr.save(1, t)
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+    params, _, _, _ = mgr.restore(like=jax.tree.map(jnp.zeros_like, t))
+    _assert_tree_equal(params, t)
+
+
+def test_async_error_propagates_via_wait(tmp_path, monkeypatch):
+    """A failure on the writer thread must surface at the next wait() —
+    not vanish with the daemon thread — and then clear."""
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+
+    def boom(*a, **k):
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(manager_mod.np, "save", boom)
+    mgr.save(1, {"w": jnp.zeros(1)})
+    with pytest.raises(OSError, match="disk on fire"):
+        mgr.wait()
+    monkeypatch.undo()
+    # error is consumed: the manager is usable again
+    mgr.wait()
+    mgr.save(2, {"w": jnp.ones(1)})
+    mgr.wait()
+    assert 2 in mgr.all_steps()
+
+
+def test_save_waits_for_previous_write(tmp_path, monkeypatch):
+    """save() joins the in-flight writer first, so a slow async write never
+    races the next snapshot."""
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    gate = threading.Event()
+    real_save = manager_mod.np.save
+
+    def slow_save(path, arr):
+        gate.wait(timeout=5)
+        return real_save(path, arr)
+
+    monkeypatch.setattr(manager_mod.np, "save", slow_save)
+    mgr.save(1, {"w": jnp.zeros(1)})
+    assert mgr._thread.is_alive()
+    gate.set()
+    monkeypatch.undo()
+    mgr.save(2, {"w": jnp.ones(1)})  # implicit wait() on step 1
+    mgr.wait()
+    assert mgr.all_steps() == [1, 2]
+
+
+def test_read_manifest_without_arrays(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(4, {"w": jnp.zeros(3)}, meta={"serve_kind": "mlp"})
+    m = mgr.read_manifest()
+    assert m["step"] == 4 and m["meta"]["serve_kind"] == "mlp"
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "empty")).read_manifest()

@@ -32,7 +32,7 @@ def test_checkpoint_roundtrip(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep_last=2, async_write=False)
     t = tree()
     mgr.save(7, t, topologies={"l0": {"rows": np.array([1, 2])}}, meta={"k": 1})
-    params, topos, manifest = mgr.restore(like=t)
+    params, _, topos, manifest = mgr.restore(like=t)
     np.testing.assert_array_equal(np.asarray(params["a"]), np.asarray(t["a"]))
     assert params["nested"]["b"].dtype == jnp.bfloat16
     np.testing.assert_array_equal(topos["l0"]["rows"], [1, 2])
@@ -56,7 +56,7 @@ def test_checkpoint_async_write_and_wait(tmp_path):
     t = tree()
     mgr.save(2, t)
     mgr.wait()
-    params, _, _ = mgr.restore(step=2, like=t)
+    params, _, _, _ = mgr.restore(step=2, like=t)
     np.testing.assert_array_equal(np.asarray(params["a"]), np.arange(12.0).reshape(3, 4))
 
 

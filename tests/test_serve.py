@@ -1,0 +1,372 @@
+"""Serving subsystem: compaction exactness, engine/batcher correctness,
+compile-cache stability (DESIGN.md §6)."""
+import dataclasses
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.all_relu import activation_fn
+from repro.core.importance import PruningSchedule, element_degrees
+from repro.core.sparsity import ElementTopology
+from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
+from repro.models.transformer import PatternLM
+from repro.serve import (
+    ContinuousBatcher,
+    EngineConfig,
+    SparseInferenceEngine,
+    compact_element_mlp,
+    eliminate_dead_neurons,
+    importance_prune_mlp,
+    poisson_trace,
+    save_lm_for_serving,
+    save_mlp_for_serving,
+    serve_sequential,
+)
+
+MLP_CFG = SparseMLPConfig(
+    layer_dims=(32, 24, 20, 6), epsilon=6, impl="element", dropout=0.0
+)
+LM_CFG = dataclasses.replace(
+    configs.get_spec("qwen1.5-0.5b").smoke,
+    ffn="sparse", sparse_block=16, sparse_density=0.5, d_ff=64,
+)
+
+
+def _mlp_logits(model, x):
+    return np.asarray(
+        mlp_forward(model.params(), model.topo_arrays(), jnp.asarray(x),
+                    model.config)
+    )
+
+
+def _dense_oracle(model, x):
+    """Densified host reference forward."""
+    cfg = model.config
+    act = activation_fn(cfg.activation, alpha=cfg.alpha)
+    h = jnp.asarray(x)
+    for l in range(cfg.n_layers):
+        h = h @ model.topos[l].to_dense(model.values[l]) + model.biases[l]
+        if l < cfg.n_layers - 1:
+            h = act(h, l + 1)
+    return np.asarray(h)
+
+
+def _with_dead_neurons(model):
+    """Kill neurons {3,4} of hidden layer 1 by in-degree (bias zeroed) and
+    neuron 7 by out-degree."""
+    t0 = model.topos[0]
+    keep = ~np.isin(t0.cols, [3, 4])
+    model.topos[0] = ElementTopology(
+        t0.in_dim, t0.out_dim, t0.rows[keep], t0.cols[keep]
+    )
+    model.values[0] = model.values[0][np.flatnonzero(keep)]
+    b = np.asarray(model.biases[0]).copy()
+    b[[3, 4]] = 0.0
+    model.biases[0] = jnp.asarray(b)
+    t1 = model.topos[1]
+    keep = t1.rows != 7
+    model.topos[1] = ElementTopology(
+        t1.in_dim, t1.out_dim, t1.rows[keep], t1.cols[keep]
+    )
+    model.values[1] = model.values[1][np.flatnonzero(keep)]
+    return model
+
+
+# ---------------------------------------------------------------------------
+# compaction (element)
+# ---------------------------------------------------------------------------
+
+
+def test_eliminate_dead_neurons_bit_equivalent():
+    model = _with_dead_neurons(SparseMLP(MLP_CFG, seed=0))
+    x = np.random.default_rng(0).standard_normal((16, 32)).astype(np.float32)
+    before = _mlp_logits(model, x)
+    compacted, report = eliminate_dead_neurons(model)
+    after = _mlp_logits(compacted, x)
+    # physical elimination is free: logits bit-equal on the live network
+    np.testing.assert_array_equal(before, after)
+    # ...and the shrunk model still matches the densified host oracle
+    np.testing.assert_allclose(after, _dense_oracle(compacted, x), atol=1e-5)
+    assert report.eliminated_neurons == 3
+    assert report.dims_after[1] == MLP_CFG.layer_dims[1] - 3
+    assert report.params_after < report.params_before
+
+
+def test_eliminate_cascades_to_fixpoint():
+    # neuron A (layer-1) feeds ONLY neuron B (layer-2); killing B's other
+    # inputs is not needed — kill A's inputs and B must die in a later round
+    # only if its in-degree hits zero; construct directly: layer-2 neuron 0
+    # fed solely by layer-1 neuron 5, which has zero in-degree + zero bias.
+    model = SparseMLP(MLP_CFG, seed=1)
+    t0, t1 = model.topos[0], model.topos[1]
+    keep0 = t0.cols != 5  # layer-1 neuron 5 loses all inputs
+    model.topos[0] = ElementTopology(
+        t0.in_dim, t0.out_dim, t0.rows[keep0], t0.cols[keep0]
+    )
+    model.values[0] = model.values[0][np.flatnonzero(keep0)]
+    b = np.asarray(model.biases[0]).copy()
+    b[5] = 0.0
+    model.biases[0] = jnp.asarray(b)
+    # layer-2 neuron 0 keeps only the edge from neuron 5; bias 0
+    keep1 = (t1.cols != 0) | (t1.rows == 5)
+    model.topos[1] = ElementTopology(
+        t1.in_dim, t1.out_dim, t1.rows[keep1], t1.cols[keep1]
+    )
+    model.values[1] = model.values[1][np.flatnonzero(keep1)]
+    b = np.asarray(model.biases[1]).copy()
+    b[0] = 0.0
+    model.biases[1] = jnp.asarray(b)
+    assert ((t1.rows[keep1] == 5) & (t1.cols[keep1] == 0)).sum() >= 1
+    x = np.random.default_rng(1).standard_normal((8, 32)).astype(np.float32)
+    before = _mlp_logits(model, x)
+    compacted, report = eliminate_dead_neurons(model)
+    np.testing.assert_array_equal(before, _mlp_logits(compacted, x))
+    assert report.rounds >= 2  # the cascade needed a second sweep
+    assert report.dims_after[1] <= MLP_CFG.layer_dims[1] - 1
+    assert report.dims_after[2] <= MLP_CFG.layer_dims[2] - 1
+
+
+def test_compaction_preserves_value_dtype():
+    """bf16 models must come out of compaction at bf16 (the float32 numpy
+    staging is internal) — and elimination stays bitwise-lossless."""
+    cfg = dataclasses.replace(MLP_CFG, dtype="bfloat16")
+    model = _with_dead_neurons(SparseMLP(cfg, seed=6))
+    x = np.random.default_rng(6).standard_normal((4, 32)).astype(np.float32)
+    before = _mlp_logits(model, x)
+    compacted, _ = compact_element_mlp(
+        model, PruningSchedule(tau=0, period=1, percentile=10.0)
+    )
+    assert all(v.dtype == jnp.bfloat16 for v in compacted.values)
+    elim_only, _ = eliminate_dead_neurons(model)
+    assert all(v.dtype == jnp.bfloat16 for v in elim_only.values)
+    np.testing.assert_array_equal(before, _mlp_logits(elim_only, x))
+
+
+def test_lm_engine_rejects_prefix_lm():
+    cfg = dataclasses.replace(LM_CFG, prefix_len=4)
+    with pytest.raises(ValueError, match="prefix"):
+        SparseInferenceEngine(PatternLM(cfg, seed=0))
+
+
+def test_importance_prune_removes_neurons_wholesale():
+    model = SparseMLP(MLP_CFG, seed=2)
+    pruned, n = importance_prune_mlp(
+        model, PruningSchedule(tau=0, period=1, percentile=25.0)
+    )
+    assert n > 0
+    # pruned neurons are fully deleted: no incoming, no outgoing, zero bias
+    _, in_deg0 = element_degrees(pruned.topos[0])
+    out_deg1, _ = element_degrees(pruned.topos[1])
+    gone = np.flatnonzero((in_deg0 == 0) & (out_deg1 == 0))
+    assert gone.size > 0
+    assert np.all(np.asarray(pruned.biases[0])[gone] == 0.0)
+    # and elimination then physically shrinks them away, losslessly
+    compacted, report = compact_element_mlp(
+        model, PruningSchedule(tau=0, period=1, percentile=25.0)
+    )
+    assert report.pruned_neurons == n
+    assert report.eliminated_neurons >= n
+    x = np.random.default_rng(2).standard_normal((4, 32)).astype(np.float32)
+    np.testing.assert_array_equal(
+        _mlp_logits(pruned, x), _mlp_logits(compacted, x)
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine: MLP path
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_engine_checkpoint_roundtrip(tmp_path):
+    model = SparseMLP(MLP_CFG, seed=3)
+    x = np.random.default_rng(3).standard_normal((5, 32)).astype(np.float32)
+    want = _mlp_logits(model, x)
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    save_mlp_for_serving(mgr, model, step=4)
+    eng = SparseInferenceEngine.from_checkpoint(
+        str(tmp_path), engine=EngineConfig(batch_buckets=(8,)), compact=False
+    )
+    np.testing.assert_allclose(eng.classify(x), want, atol=1e-6)
+    # restored connectivity is the saved one, not a fresh seed draw
+    assert np.array_equal(eng.model.topos[0].rows, model.topos[0].rows)
+
+
+def test_mlp_classify_buckets_pad_and_chunk():
+    model = SparseMLP(MLP_CFG, seed=4)
+    eng = SparseInferenceEngine(
+        model, engine=EngineConfig(batch_buckets=(2, 4)), compact=False
+    )
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((9, 32)).astype(np.float32)  # > largest bucket
+    got = eng.classify(x)
+    np.testing.assert_allclose(got, _mlp_logits(model, x), atol=1e-5)
+    # buckets compiled: batch 4 (chunks) + batch 2 pad + batch 1->2 pad
+    sizes = eng.jit_entry_sizes()
+    assert all(v == 1 for v in sizes.values())
+
+
+def test_compile_cache_is_bounded():
+    model = SparseMLP(MLP_CFG, seed=5)
+    eng = SparseInferenceEngine(
+        model,
+        engine=EngineConfig(batch_buckets=(1, 2), compile_cache_max=1),
+        compact=False,
+    )
+    x = np.zeros((1, 32), np.float32)
+    x2 = np.zeros((2, 32), np.float32)
+    eng.classify(x)
+    eng.classify(x2)  # evicts bucket 1
+    eng.classify(x)   # recompiles bucket 1
+    s = eng.stats
+    assert s["cache_evictions"] >= 2
+    assert len(eng.jit_entry_sizes()) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine + batcher: LM path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm_serving():
+    """One shared LM, served by the continuous batcher (4 slots) and by the
+    naive sequential loop (fresh single-slot engine, same checkpoint)."""
+    ec = EngineConfig(
+        max_slots=4, max_len=48, prefill_buckets=(8, 16), prefill_batch=2
+    )
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        save_lm_for_serving(mgr, PatternLM(LM_CFG, seed=0), step=0)
+        engine = SparseInferenceEngine.from_checkpoint(d, engine=ec)
+        naive = SparseInferenceEngine.from_checkpoint(
+            d, engine=dataclasses.replace(ec, max_slots=1, prefill_batch=1)
+        )
+
+    def trace(seed):
+        return poisson_trace(
+            8, rate=500.0, vocab=LM_CFG.vocab,
+            prompt_lens=(3, 14), new_tokens=(1, 6), seed=seed,
+        )
+
+    batched_trace = trace(7)
+    batched = ContinuousBatcher(engine, queue_capacity=16).run(batched_trace)
+    naive_trace = trace(7)
+    naive_stats = serve_sequential(naive, naive_trace)
+    return {
+        "engine": engine,
+        "trace_fn": trace,
+        "batched_trace": batched_trace,
+        "batched_stats": batched,
+        "naive_trace": naive_trace,
+        "naive_stats": naive_stats,
+    }
+
+
+def test_continuous_batching_matches_naive_tokens(lm_serving):
+    """Slot-interleaved decode with ragged positions must be sequence-exact:
+    every request's greedy tokens equal the one-at-a-time reference."""
+    for r_b, r_n in zip(lm_serving["batched_trace"], lm_serving["naive_trace"]):
+        assert r_b.tokens == r_n.tokens, r_b.rid
+        assert len(r_b.tokens) == r_b.max_new_tokens
+
+
+def test_lm_serving_completes_and_measures(lm_serving):
+    s = lm_serving["batched_stats"]
+    assert s.completed == len(lm_serving["batched_trace"])
+    assert s.rejected == 0
+    assert s.generated_tokens == sum(
+        r.max_new_tokens for r in lm_serving["batched_trace"]
+    )
+    assert s.throughput_tok_s > 0
+    assert s.latency_p99_ms >= s.latency_p50_ms > 0
+
+
+def test_zero_recompiles_after_warmup(lm_serving):
+    engine = lm_serving["engine"]
+    compiles = engine.stats["compiles"]
+    ContinuousBatcher(engine, queue_capacity=16).run(
+        lm_serving["trace_fn"](11)
+    )
+    assert engine.stats["compiles"] == compiles, "recompile after warmup"
+    assert all(v == 1 for v in engine.jit_entry_sizes().values())
+
+
+def test_backpressure_and_admission(lm_serving):
+    engine = lm_serving["engine"]
+    b = ContinuousBatcher(engine, queue_capacity=2)
+    vocab = LM_CFG.vocab
+    ok = [
+        b.submit(poisson_trace(1, 1.0, vocab=vocab, seed=s)[0])
+        for s in range(5)
+    ]
+    assert sum(ok) == 2  # queue bound enforced immediately
+    too_long = poisson_trace(1, 1.0, vocab=vocab, seed=0)[0]
+    too_long.prompt = np.zeros((17,), np.int32)  # > largest bucket (16)
+    assert not b.submit(too_long) and "bucket" in too_long.rejected
+    over_budget = poisson_trace(1, 1.0, vocab=vocab, seed=0)[0]
+    over_budget.prompt = np.zeros((10,), np.int32)
+    over_budget.max_new_tokens = 100  # 10 + 100 > max_len 48
+    assert not b.submit(over_budget) and "max_len" in over_budget.rejected
+
+
+def test_lm_checkpoint_roundtrip_forward_equal(tmp_path):
+    model = PatternLM(LM_CFG, seed=1)
+    tokens = jnp.asarray(
+        np.random.default_rng(5).integers(0, LM_CFG.vocab, (2, 10)), jnp.int32
+    )
+    want, _, _ = model.forward(model.params, tokens, topo=model.topo_arrays())
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    save_lm_for_serving(mgr, model, step=1)
+    eng = SparseInferenceEngine.from_checkpoint(
+        str(tmp_path), compact=False,
+        engine=EngineConfig(max_slots=1, max_len=32, prefill_buckets=(16,),
+                            prefill_batch=1),
+    )
+    got, _, _ = eng.model.forward(
+        eng.model.params, tokens, topo=eng.model.topo_arrays()
+    )
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_block_compaction_frees_zeroed_blocks_losslessly():
+    """Zero whole block-columns of the FFN by hand: compaction with a
+    no-op pruning threshold must free them (fewer stacked blocks) without
+    changing the forward."""
+    model = PatternLM(LM_CFG, seed=2)
+    slot = next(iter(model.topologies))
+    win = np.array(model.params["stack"][slot]["ffn"]["win"], np.float32)
+    # per rep, kill a block-column owning >= 2 blocks — column coverage
+    # keeps one (zero-valued) slot, the rest must be freed by compaction
+    for r, (t_in, _) in enumerate(model.topologies[slot]):
+        counts = np.bincount(t_in.cols, minlength=t_in.meta.grid_n)
+        col = int(np.argmax(counts))
+        assert counts[col] >= 2, "raise density: no donor column"
+        win[r, t_in.cols == col] = 0.0
+    dtype = model.params["stack"][slot]["ffn"]["win"].dtype
+    model.params["stack"][slot]["ffn"]["win"] = jnp.asarray(win, dtype)
+    tokens = jnp.asarray(
+        np.random.default_rng(6).integers(0, LM_CFG.vocab, (2, 8)), jnp.int32
+    )
+    before, _, _ = model.forward(model.params, tokens, topo=model.topo_arrays())
+    nb_before = model.params["stack"][slot]["ffn"]["win"].shape[1]
+    eng = SparseInferenceEngine(
+        model,
+        engine=EngineConfig(max_slots=1, max_len=32, prefill_buckets=(8,),
+                            prefill_batch=1),
+        # importance threshold 0.0 prunes nothing (imp < 0 is empty) but
+        # still sweeps zero-valued blocks out of the arrays
+        compaction=PruningSchedule(tau=0, period=1, threshold=0.0),
+    )
+    nb_after = eng.model.params["stack"][slot]["ffn"]["win"].shape[1]
+    assert nb_after < nb_before
+    after, _, _ = eng.model.forward(
+        eng.model.params, tokens, topo=eng.model.topo_arrays()
+    )
+    np.testing.assert_allclose(
+        np.asarray(before), np.asarray(after), atol=1e-6
+    )
+    assert eng.report.params_after == eng.report.params_before
