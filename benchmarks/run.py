@@ -35,6 +35,10 @@ HOT_PATH_ROWS = {
         "table3/phase1_epoch/fashionmnist/fused_vmap",
         "table3/phase1_epoch/fashionmnist/fused_shardmap",
     ],
+    "table4": [
+        "table4/xl_incore_train",
+        "table4/xl_stream_train",
+    ],
     "serve": [
         "serve/lm/engine_us_per_token",
         "serve/mlp/forward_raw",
@@ -124,7 +128,7 @@ def main() -> None:
     sections = [
         ("table2", lambda: table2_sequential.run(args.scale)),
         ("table3", lambda: table3_parallel.run(args.scale)),
-        ("table4", lambda: table4_extreme.run()),
+        ("table4", lambda: table4_extreme.run(args.scale)),
         ("table5", lambda: table5_alpha_sweep.run(args.scale)),
         ("table6", lambda: table6_post_pruning.run(args.scale)),
         ("gradient_flow", lambda: gradient_flow.run(args.scale)),

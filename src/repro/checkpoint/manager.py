@@ -116,6 +116,76 @@ class CheckpointManager:
         else:
             write()
 
+    def save_streamed(
+        self,
+        step: int,
+        stream_groups: Dict[str, Dict[str, tuple]],
+        meta: Optional[Dict] = None,
+    ) -> None:
+        """Incremental save for models larger than host RAM headroom
+        (DESIGN.md §7): each leaf arrives as ``(shape, dtype, chunk_iter)``
+        where the iterator yields consecutive axis-0 slices (the XL state
+        yields shard-capacity slices), written straight into an on-disk
+        ``.npy`` memmap — the writer's working set is one chunk, never a
+        whole leaf, and no host-side snapshot copy is taken.
+
+        Synchronous by design: the chunk iterators read live (possibly
+        memmapped) training state, so deferring them to the background
+        writer thread would race the next step's in-place updates. The same
+        atomic tmp-dir/rename publish and retention GC as :meth:`save`.
+        """
+        self.wait()
+        tmp = self.dir / f".tmp_step_{step:09d}"
+        final = self.dir / f"step_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        shapes: Dict[str, list] = {}
+        for group, leaves in stream_groups.items():
+            (tmp / group).mkdir(exist_ok=True)
+            for name, (shape, dtype, chunks) in leaves.items():
+                out = np.lib.format.open_memmap(
+                    tmp / group / f"{name}.npy", mode="w+",
+                    dtype=np.dtype(dtype), shape=tuple(shape),
+                )
+                pos = 0
+                for c in chunks:
+                    c = np.asarray(c)
+                    out[pos : pos + c.shape[0]] = c
+                    pos += c.shape[0]
+                if pos != shape[0]:
+                    raise ValueError(
+                        f"{group}/{name}: chunks covered {pos} of {shape[0]} rows"
+                    )
+                out.flush()
+                del out
+                shapes[f"{group}__{name}"] = [list(shape), str(np.dtype(dtype))]
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "shapes": shapes,
+            "streamed_groups": sorted(stream_groups),
+            "meta": meta or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def restore_stream(
+        self, step: Optional[int], group: str, name: str
+    ) -> np.ndarray:
+        """Read-only memmap view of one streamed leaf — the restorer copies
+        out of it chunk-by-chunk (``XLModelState.restore``), so restore is
+        as incremental as the save was."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self.dir / f"step_{step:09d}" / group / f"{name}.npy"
+        return np.load(path, mmap_mode="r")
+
     def _guard(self, fn):
         def run():
             try:

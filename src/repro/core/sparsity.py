@@ -482,6 +482,7 @@ def coo_matmul_T(
     n_segments: int,
     *,
     chunk: Optional[int] = None,
+    acc: Optional[jax.Array] = None,
 ) -> jax.Array:
     """``accT[segment_idx[j], :] += srcT[gather_idx[j], :] * values[j]``.
 
@@ -491,12 +492,20 @@ def coo_matmul_T(
     (gather cols_r, segment rows_r) both guarantee it — so every chunk's
     ``segment_sum`` is one sorted linear pass, no scatter. Peak intermediate
     is the (chunk, B) contribution slab; nnz is walked by a ``lax.scan``.
+
+    ``acc`` (optional, (n_segments, B)) is a carry-in accumulator: the result
+    is ``acc`` plus this call's reduction, added chunk-by-chunk in the same
+    left-to-right order the single-call path uses. The out-of-core substrate
+    (``kernels.ops.xl_shard_acc``, DESIGN.md §7) threads one accumulator
+    through a connection-shard stream; when shard boundaries are multiples of
+    ``chunk``, the chunk partition — and therefore the f32 addition order —
+    is identical to one in-core call over the concatenated shards.
     """
     nnz = int(values.shape[0])
     B = srcT.shape[-1]
     dtype = jnp.result_type(srcT.dtype, values.dtype)
     if nnz == 0:
-        return jnp.zeros((n_segments, B), dtype)
+        return acc if acc is not None else jnp.zeros((n_segments, B), dtype)
     chunk = spmm_chunk_for(B, nnz, chunk)
 
     def one_chunk(g, s, v):
@@ -508,7 +517,8 @@ def coo_matmul_T(
 
     n_chunks = -(-nnz // chunk)
     if n_chunks == 1:
-        return one_chunk(gather_idx, segment_idx, values)
+        one = one_chunk(gather_idx, segment_idx, values)
+        return one if acc is None else acc + one
     pad = n_chunks * chunk - nnz
     # padded slots: segment id == n_segments (dropped by segment_sum, and
     # >= every real id so per-chunk sortedness holds) and value 0
@@ -523,12 +533,12 @@ def coo_matmul_T(
         v_p.reshape(n_chunks, chunk),
     )
 
-    def body(acc, sl):
-        return acc + one_chunk(*sl), None
+    def body(a, sl):
+        return a + one_chunk(*sl), None
 
-    acc0 = jnp.zeros((n_segments, B), dtype)
-    acc, _ = jax.lax.scan(body, acc0, slices)
-    return acc
+    acc0 = jnp.zeros((n_segments, B), dtype) if acc is None else acc
+    out, _ = jax.lax.scan(body, acc0, slices)
+    return out
 
 
 def coo_dw(

@@ -329,3 +329,72 @@ def bsmm_infer(
     separately so engine call sites read as inference and can re-dispatch
     (e.g. to a Pallas decode kernel) without touching the training path."""
     return bsmm_xla(x, values, topo, meta)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core per-shard entries (repro.xl, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+#
+# The XL substrate streams a layer's COO topology through the device as
+# fixed-capacity connection shards; these are the only two device programs
+# its forward/backward ever dispatches. Everything about their shapes is
+# static across the whole model — the shard capacity, the chunk width and
+# the d_max-padded (features, batch) activation layout come from the plan
+# (xl/planner.py) — so a full training run compiles each of them exactly
+# once, no matter how many shards, layers or epochs stream through.
+
+# donation lets XLA reuse the accumulator buffer in place; it is a no-op
+# (with a warning) on CPU, so only request it elsewhere — same policy as
+# train/trainer.make_segment_fn.
+_XL_DONATE = (0,) if jax.default_backend() != "cpu" else ()
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_segments", "chunk"), donate_argnums=_XL_DONATE
+)
+def xl_shard_acc(
+    acc: jax.Array,
+    srcT: jax.Array,
+    values: jax.Array,
+    gather_idx: jax.Array,
+    segment_idx: jax.Array,
+    *,
+    n_segments: int,
+    chunk: int,
+) -> jax.Array:
+    """One connection shard's chunked sorted-segment reduction, accumulated
+    into the running ``(n_segments, B)`` buffer:
+
+        acc[segment_idx[j], :] += srcT[gather_idx[j], :] * values[j]
+
+    The ONE streamed matmul program for both directions: forward shards pass
+    the canonical order (gather ``rows``, segment ``cols``); dX shards pass
+    the row-sorted dual order (gather ``cols_r``, segment ``rows_r``) with
+    values host-gathered through ``perm_r``. Shards are canonical-order
+    slices, so ``segment_idx`` is non-decreasing within every shard; padded
+    tail slots carry segment id ``n_segments`` (dropped by ``segment_sum``)
+    and value 0. Because shard capacity is a multiple of ``chunk``, the
+    chunk partition — hence the f32 addition order — matches one in-core
+    ``coo_matmul_T`` over the concatenated shards (DESIGN.md §7).
+    """
+    return coo_matmul_T(
+        srcT, values, gather_idx, segment_idx, n_segments, chunk=chunk, acc=acc
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def xl_shard_dw(
+    xT: jax.Array,
+    dyT: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    chunk: int,
+) -> jax.Array:
+    """Per-shard dW: ``dv[j] = sum_b x[b, rows[j]] * dy[b, cols[j]]`` for one
+    canonical-order shard — each slot's batch contraction is independent, so
+    sharding cannot change its f32 reduction order (bit-equal to the in-core
+    ``coo_dw`` regardless of shard boundaries). Padded tail slots gather
+    clamped garbage; the host writes back only the shard's real extent.
+    """
+    return coo_dw(xT, dyT, rows, cols, chunk=chunk)

@@ -1,4 +1,6 @@
-"""Fault tolerance & elasticity for multi-pod training (DESIGN.md §5).
+"""Fault tolerance & elasticity for multi-pod training (DESIGN.md §7,
+"Checkpointing & fault tolerance at XL scale"; checkpoint-restore mechanics
+are DESIGN.md §5).
 
 Pieces:
   * HeartbeatMonitor — per-worker liveness with deadlines; classifies nodes

@@ -65,6 +65,7 @@ from repro.optim.sgd import MomentumSGD, replace_values_velocity
 __all__ = [
     "TrainerConfig",
     "SequentialTrainer",
+    "XLTrainer",
     "evaluate",
     "make_step_fn",
     "make_eval_fn",
@@ -456,5 +457,120 @@ class SequentialTrainer:
                 print(
                     f"epoch {epoch:4d} loss {self.history['train_loss'][-1]:.4f} "
                     f"acc {acc:.4f} params {model.n_params}"
+                )
+        return self.history
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core XL trainer (repro.xl, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+class XLTrainer:
+    """Out-of-core SET trainer: the paper's Table-4 regime, where the live
+    parameters exceed the device budget.
+
+    Same epoch protocol and history columns as :class:`SequentialTrainer`
+    (same ``ShardedLoader`` order for the same seed, same loss/optimizer
+    semantics as ``launch.steps.make_mlp_step_core``), but every minibatch
+    step runs on the shard-streamed substrate (``repro.xl.StreamExecutor``)
+    under the memory plan's device budget, values/momentum stay host-pinned
+    (memmap above the plan threshold), and SET evolution runs shard-wise
+    (``repro.xl.evolve_model_streamed``) instead of whole-layer.
+
+    Constraints vs the in-core trainer: element impl only, ``dropout == 0``
+    (the streamed backward is hand-derived; a dropout mask cache is the
+    natural extension) and no importance-pruning schedule (shape changes
+    would re-plan; out of scope for the substrate).
+    """
+
+    def __init__(self, model_or_state, data: Dataset, tc: TrainerConfig, plan,
+                 spool_dir: Optional[str] = None):
+        from repro.xl import StreamExecutor, XLModelState
+
+        if isinstance(model_or_state, XLModelState):
+            self.state = model_or_state
+        else:
+            cfg = model_or_state.config
+            if cfg.dropout != 0:
+                raise ValueError("XLTrainer requires dropout == 0")
+            self.state = XLModelState.from_model(
+                model_or_state, plan, spool_dir=spool_dir
+            )
+        if tc.pruning is not None:
+            raise ValueError("XLTrainer does not support importance pruning")
+        if tc.batch_size != plan.batch:
+            raise ValueError(
+                f"plan solved for batch {plan.batch}, trainer uses "
+                f"{tc.batch_size} — re-plan"
+            )
+        self.plan = plan
+        self.data = data
+        self.tc = tc
+        self.executor = StreamExecutor(self.state)
+        self.rng = np.random.default_rng(tc.seed)
+        self.history: Dict[str, List] = {
+            "epoch": [], "train_loss": [], "test_acc": [], "n_params": [],
+            "epoch_seconds": [],
+        }
+
+    @property
+    def n_params(self) -> int:
+        return sum(st.nnz + st.out_dim for st in self.state.layers)
+
+    def evaluate(self, x: np.ndarray, y: np.ndarray) -> float:
+        correct = 0
+        b = self.plan.batch
+        for s in range(0, x.shape[0], b):
+            logits = self.executor.logits(x[s : s + b])
+            correct += int((np.argmax(logits, -1) == y[s : s + b]).sum())
+        return correct / x.shape[0]
+
+    def save_checkpoint(self, manager, step: int) -> None:
+        """Streamed shard-group save — checkpoints of models larger than
+        host RAM headroom write incrementally (CheckpointManager
+        ``save_streamed``)."""
+        self.state.save(manager, step, extra_meta={"plan": self.plan.to_json()})
+
+    def run(self, log_every: int = 0) -> Dict[str, List]:
+        from repro.xl import evolve_model_streamed
+
+        tc = self.tc
+        loader = ShardedLoader(
+            self.data.x_train, self.data.y_train, tc.batch_size, seed=tc.seed
+        )
+        steps = loader.steps_per_epoch
+        if steps == 0:
+            raise ValueError("batch_size larger than the training shard")
+        lr_fn = tc.lr_schedule or (lambda step: tc.lr)
+        gstep = 0
+        for epoch in range(tc.epochs):
+            t0 = time.perf_counter()
+            losses = []
+            for xb, yb in loader.epoch(epoch):
+                losses.append(
+                    self.executor.train_step(
+                        xb, yb, float(lr_fn(gstep)),
+                        momentum=tc.momentum, weight_decay=tc.weight_decay,
+                    )
+                )
+                gstep += 1
+            if epoch < tc.epochs - 1 and tc.evolve:
+                evolve_model_streamed(self.state, tc.zeta, self.rng)
+            dt = time.perf_counter() - t0
+            if (epoch + 1) % tc.eval_every == 0 or epoch == tc.epochs - 1:
+                acc = self.evaluate(self.data.x_test, self.data.y_test)
+            else:
+                acc = float("nan")
+            self.history["epoch"].append(epoch)
+            self.history["train_loss"].append(float(np.mean(losses)))
+            self.history["test_acc"].append(acc)
+            self.history["n_params"].append(self.n_params)
+            self.history["epoch_seconds"].append(dt)
+            if log_every and (epoch + 1) % log_every == 0:
+                print(
+                    f"epoch {epoch:4d} loss {self.history['train_loss'][-1]:.4f} "
+                    f"acc {acc:.4f} params {self.n_params} "
+                    f"peak_dev {self.executor.measured_peak_bytes}"
                 )
         return self.history

@@ -1,0 +1,621 @@
+"""Shard-streamed out-of-core forward/backward (DESIGN.md §7).
+
+The substrate trains element-sparse MLPs whose live parameters (values +
+dual-order topology + momentum) never fit on the device at once:
+
+* **Host-pinned leaves** — per layer, the canonical COO arrays (rows, cols),
+  the row-order permutation ``perm_r``, values and velocity live in host
+  numpy, memmap-backed above the plan's size threshold. The device only
+  ever holds one fixed-capacity *connection shard* of them (plus its
+  double-buffered successor).
+* **Streamed matmuls** — forward and dX are both runs of the ONE jitted
+  per-shard program ``kernels.ops.xl_shard_acc`` over a d_max-padded
+  ``(d_max, batch)`` transposed activation buffer: forward streams the
+  canonical order (gather rows / segment cols), dX streams the row-sorted
+  dual order (gather cols_r / segment rows_r, values host-gathered through
+  ``perm_r``). Shard capacity is a multiple of the chunk width, so the
+  streamed accumulation's chunk partition — and with it the f32 addition
+  order — is identical to the in-core chunked segment-sum.
+* **Double buffering** — shard k+1's host->device transfer is issued before
+  shard k's compute is awaited (JAX dispatch is asynchronous), so transfer
+  and compute overlap.
+* **Host optimizer** — dW is computed per shard (``xl_shard_dw``), pulled to
+  the host and applied immediately as a momentum-SGD update on the shard's
+  value/velocity slice; no whole-layer gradient is ever materialized on
+  either side of the PCIe bus.
+
+Zero recompiles by construction: every device program here has fully static
+shapes derived from the plan (d_max, batch, capacity, chunk), so streaming
+more shards, layers or epochs never grows any jit cache —
+``compile_counts()`` exposes the caches and the tests pin them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import tempfile
+from pathlib import Path
+from typing import Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import (
+    check_element_shards,
+    element_row_order,
+    element_shard_bounds,
+    pad_shard,
+)
+from repro.kernels.ops import xl_shard_acc, xl_shard_dw
+from repro.xl.planner import XLPlan
+
+__all__ = [
+    "XLLayerState",
+    "XLModelState",
+    "StreamExecutor",
+    "host_leaf",
+    "compile_counts",
+]
+
+
+# ---------------------------------------------------------------------------
+# host-pinned leaves
+# ---------------------------------------------------------------------------
+
+
+def host_leaf(
+    arr: np.ndarray,
+    *,
+    threshold_bytes: int,
+    spool_dir: Optional[Path],
+    name: str,
+) -> np.ndarray:
+    """Pin an array host-side: a plain ndarray below the threshold, an
+    anonymous-file memmap above it (so leaves larger than comfortable RSS
+    spill to the page cache; the OS pages shards in as they stream)."""
+    arr = np.ascontiguousarray(arr)
+    if spool_dir is None or arr.nbytes < threshold_bytes:
+        # device arrays surface as read-only numpy views; the optimizer
+        # updates leaves in place, so own a writable copy
+        return arr.copy() if not arr.flags.writeable else arr
+    spool_dir.mkdir(parents=True, exist_ok=True)
+    path = spool_dir / f"{name}.mm"
+    mm = np.memmap(path, dtype=arr.dtype, mode="w+", shape=arr.shape)
+    mm[...] = arr
+    return mm
+
+
+@dataclasses.dataclass
+class XLLayerState:
+    """One layer's host-pinned state. Canonical (col, row) order throughout;
+    ``perm_r`` maps row-order slot -> canonical slot (int64)."""
+
+    in_dim: int
+    out_dim: int
+    rows: np.ndarray      # int32 (nnz,)
+    cols: np.ndarray      # int32 (nnz,)
+    perm_r: np.ndarray    # int64 (nnz,)
+    values: np.ndarray    # f32 (nnz,)
+    velocity: np.ndarray  # f32 (nnz,)
+    bias: np.ndarray      # f32 (out_dim,)
+    bias_vel: np.ndarray  # f32 (out_dim,)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+
+@dataclasses.dataclass
+class XLModelState:
+    """Whole-model host state + the plan that shaped it. ``topo_version``
+    bumps on every topology mutation (SET evolution) so the executor can
+    invalidate any device-cached index shards."""
+
+    layer_dims: Tuple[int, ...]
+    activation: str
+    alpha: float
+    init: str
+    layers: List[XLLayerState]
+    plan: XLPlan
+    spool_dir: Optional[Path] = None
+    topo_version: int = 0
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @classmethod
+    def from_model(
+        cls, model, plan: XLPlan, spool_dir: Optional[str] = None
+    ) -> "XLModelState":
+        """Build host state from an in-core ``SparseMLP`` (element impl) —
+        the shared entry for tests/benchmarks, so the XL run starts from the
+        exact same draw as its in-core oracle. Velocity starts at zero, as
+        ``MomentumSGD.init`` does."""
+        cfg = model.config
+        if cfg.impl != "element":
+            raise ValueError("XL substrate streams the element (COO) path only")
+        spool = Path(spool_dir) if spool_dir is not None else None
+        if spool is None and any(
+            t.nnz * 4 >= plan.memmap_threshold_bytes for t in model.topos
+        ):
+            spool = Path(tempfile.mkdtemp(prefix="xl_spool_"))
+        layers = []
+        for l, topo in enumerate(model.topos):
+            thr = plan.memmap_threshold_bytes
+
+            def leaf(a, nm, dtype):
+                return host_leaf(
+                    np.asarray(a, dtype), threshold_bytes=thr,
+                    spool_dir=spool, name=f"l{l}_{nm}",
+                )
+
+            layers.append(
+                XLLayerState(
+                    in_dim=topo.in_dim,
+                    out_dim=topo.out_dim,
+                    rows=leaf(topo.rows, "rows", np.int32),
+                    cols=leaf(topo.cols, "cols", np.int32),
+                    perm_r=leaf(
+                        element_row_order(topo.rows, topo.cols), "perm_r",
+                        np.int64,
+                    ),
+                    values=leaf(model.values[l], "values", np.float32),
+                    velocity=leaf(
+                        np.zeros(topo.nnz, np.float32), "velocity", np.float32
+                    ),
+                    bias=np.asarray(model.biases[l], np.float32).copy(),
+                    bias_vel=np.zeros(topo.out_dim, np.float32),
+                )
+            )
+        return cls(
+            layer_dims=tuple(cfg.layer_dims),
+            activation=cfg.activation,
+            alpha=cfg.alpha,
+            init=cfg.init,
+            layers=layers,
+            plan=plan,
+            spool_dir=spool,
+        )
+
+    def check_invariants(self) -> None:
+        for st in self.layers:
+            check_element_shards(
+                np.asarray(st.rows), np.asarray(st.cols),
+                np.asarray(st.perm_r), st.in_dim, st.out_dim,
+                self.plan.shard_capacity,
+            )
+
+    # -- streamed checkpointing (CheckpointManager.save_streamed) ----------
+
+    def stream_groups(self):
+        """``{group: {leaf: (shape, dtype, chunk-iterator)}}`` for
+        ``CheckpointManager.save_streamed`` — every iterator yields
+        shard-capacity slices, so the writer's working set is one shard no
+        matter how large the layer."""
+        cap = self.plan.shard_capacity
+
+        def chunks(a):
+            def it():
+                for lo in range(0, a.shape[0], cap):
+                    yield np.asarray(a[lo : lo + cap])
+            return (a.shape, a.dtype, it())
+
+        groups = {}
+        for l, st in enumerate(self.layers):
+            groups[f"xl_layer{l}"] = {
+                "rows": chunks(st.rows),
+                "cols": chunks(st.cols),
+                "perm_r": chunks(st.perm_r),
+                "values": chunks(st.values),
+                "velocity": chunks(st.velocity),
+                "bias": chunks(st.bias),
+                "bias_vel": chunks(st.bias_vel),
+            }
+        return groups
+
+    def save(self, manager, step: int, extra_meta: Optional[dict] = None):
+        meta = {
+            "kind": "xl_model",
+            "layer_dims": list(self.layer_dims),
+            "activation": self.activation,
+            "alpha": self.alpha,
+            "init": self.init,
+            "nnz_per_layer": [st.nnz for st in self.layers],
+            **(extra_meta or {}),
+        }
+        manager.save_streamed(step, self.stream_groups(), meta=meta)
+
+    @classmethod
+    def restore(
+        cls,
+        manager,
+        plan: XLPlan,
+        step: Optional[int] = None,
+        spool_dir: Optional[str] = None,
+    ) -> "XLModelState":
+        """Streamed restore: each leaf is copied shard-by-shard from the
+        checkpoint's on-disk memmap into a fresh host leaf."""
+        manifest = manager.read_manifest(step)
+        meta = manifest["meta"]
+        if meta.get("kind") != "xl_model":
+            raise ValueError(f"checkpoint is not an xl_model: {meta}")
+        spool = Path(spool_dir) if spool_dir is not None else None
+        cap = plan.shard_capacity
+        layer_dims = tuple(meta["layer_dims"])
+        layers = []
+        for l in range(len(layer_dims) - 1):
+            group = f"xl_layer{l}"
+
+            def leaf(nm):
+                src = manager.restore_stream(step, group, nm)
+                out = host_leaf(
+                    np.empty(src.shape, src.dtype),
+                    threshold_bytes=plan.memmap_threshold_bytes,
+                    spool_dir=spool, name=f"l{l}_{nm}",
+                )
+                for lo in range(0, src.shape[0], cap):
+                    out[lo : lo + cap] = src[lo : lo + cap]
+                return out
+
+            layers.append(
+                XLLayerState(
+                    in_dim=layer_dims[l],
+                    out_dim=layer_dims[l + 1],
+                    rows=leaf("rows"), cols=leaf("cols"),
+                    perm_r=leaf("perm_r"), values=leaf("values"),
+                    velocity=leaf("velocity"), bias=leaf("bias"),
+                    bias_vel=leaf("bias_vel"),
+                )
+            )
+        return cls(
+            layer_dims=layer_dims,
+            activation=meta["activation"],
+            alpha=meta["alpha"],
+            init=meta["init"],
+            layers=layers,
+            plan=plan,
+            spool_dir=spool,
+        )
+
+
+# ---------------------------------------------------------------------------
+# small jitted glue programs (shapes static: one compile each per run)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _bias_add(acc, bias_pad):
+    return acc + bias_pad[:, None]
+
+
+@jax.jit
+def _act(z, slope):
+    # All-ReLU family: identity above zero, per-parity slope below. Rows
+    # beyond the layer's real out_dim are exactly zero and stay zero.
+    return jnp.where(z > 0, z, slope * z)
+
+
+@jax.jit
+def _act_bwd(dh, z, slope):
+    return dh * jnp.where(z > 0, jnp.ones((), z.dtype), slope)
+
+
+@jax.jit
+def _bias_grad(dz):
+    return dz.sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes",))
+def _loss_and_dz(zT, labels, *, n_classes: int):
+    """CE loss + d(loss)/d(logits), padded back to the (d_max, B) layout.
+    Mirrors ``models.mlp.cross_entropy_loss`` exactly (f32 log_softmax,
+    mean over the batch)."""
+    logits = zT[:n_classes].T.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    loss = nll.mean()
+    b = logits.shape[0]
+    dlogits = (jnp.exp(logp) - jax.nn.one_hot(labels, n_classes)) / b
+    dz = jnp.zeros_like(zT).at[:n_classes].set(dlogits.T.astype(zT.dtype))
+    return loss, dz
+
+
+def compile_counts() -> dict:
+    """Executable counts of every XL device program — the whole substrate's
+    jit surface. Streaming more shards/layers/epochs must not grow any of
+    these (asserted in tests and the CI smoke)."""
+    return {
+        "xl_shard_acc": xl_shard_acc._cache_size(),
+        "xl_shard_dw": xl_shard_dw._cache_size(),
+        "bias_add": _bias_add._cache_size(),
+        "act": _act._cache_size(),
+        "act_bwd": _act_bwd._cache_size(),
+        "bias_grad": _bias_grad._cache_size(),
+        "loss_and_dz": _loss_and_dz._cache_size(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+
+def _prefetch(it: Iterator):
+    """Double buffering: issue the device_put of item k+1 before yielding
+    item k, so the next shard's transfer overlaps the current shard's
+    (asynchronously dispatched) compute."""
+    it = iter(it)
+    try:
+        cur = next(it)
+    except StopIteration:
+        return
+    for nxt in it:
+        yield cur
+        cur = nxt
+    yield cur
+
+
+class StreamExecutor:
+    """Runs the streamed forward/backward for one :class:`XLModelState`.
+
+    The executor owns no model state — only the plan-derived static shapes,
+    the per-hidden-layer activation slopes and (when the plan marks a layer
+    ``topo_resident``) a device cache of its immutable index shards.
+    """
+
+    def __init__(self, state: XLModelState):
+        self.state = state
+        plan = state.plan
+        self.plan = plan
+        self.d_max = plan.d_max
+        self.B = plan.batch
+        self.C = plan.shard_capacity
+        self.chunk = plan.chunk
+        if state.activation not in ("all_relu", "relu", "leaky_relu"):
+            raise ValueError(
+                f"XL substrate supports piecewise-linear activations with "
+                f"f(0)=0, got {state.activation!r}"
+            )
+        # per hidden layer, the negative-side slope (paper 1-based parity)
+        slopes = []
+        for l in range(state.n_layers - 1):
+            li = l + 1
+            if state.activation == "all_relu":
+                s = -state.alpha if li % 2 == 0 else state.alpha
+            elif state.activation == "relu":
+                s = 0.0
+            else:
+                s = state.alpha
+            slopes.append(jnp.float32(s))
+        self._slopes = slopes
+        self._topo_cache: dict = {}
+        self._topo_cache_version = -1
+        # device-bytes accounting (see measured_peak_bytes)
+        self._measured_peak = 0
+        self._sentinel = np.int32(self.d_max)
+
+    # -- device-bytes accounting -------------------------------------------
+
+    def _note_bytes(self, n_buffers: int, extra: int = 0) -> None:
+        plan = self.plan
+        live = (
+            n_buffers * plan.buffer_bytes
+            + 2 * self.C * (4 + 8)            # double-buffered shard slots
+            + self.C * 4                       # dW output slot
+            + 2 * self.chunk * self.B * 4      # chunk slabs
+            + 3 * sum(self.state.layer_dims[1:]) * 4
+            + self._topo_cache_bytes()
+            + extra
+        )
+        self._measured_peak = max(self._measured_peak, live)
+
+    def _topo_cache_bytes(self) -> int:
+        return sum(
+            sum(int(a.nbytes) for a in shard)
+            for shard in self._topo_cache.values()
+        )
+
+    @property
+    def measured_peak_bytes(self) -> int:
+        """High-water of executor-allocated device bytes, computed from the
+        (fully static) shapes of every live buffer at each phase of the
+        step — an allocation *audit* of what the executor holds, not a
+        runtime allocator probe (CPU jaxlib exposes no device memory
+        stats; on accelerators, cross-check against
+        ``device.memory_stats()``). XLA's transient chunk temps are
+        included via the plan's slab term; the CI smoke compares this
+        number against the budget alongside the planner's own estimate."""
+        return self._measured_peak
+
+    # -- shard streams ------------------------------------------------------
+
+    def _fwd_host_shards(self, l: int):
+        """(bounds, key, values, index-pair-or-None) per canonical shard,
+        padded to capacity — cols (the segment ids) pad with the d_max
+        sentinel; ``None`` indices mean "device-cached under key"."""
+        st = self.state.layers[l]
+        for lo, hi in element_shard_bounds(st.nnz, self.C):
+            key = ("fwd", l, lo)
+            vals = pad_shard(
+                np.asarray(st.values[lo:hi], np.float32), self.C, 0.0
+            )
+            if key in self._topo_cache:
+                yield (lo, hi), key, vals, None
+            else:
+                rows = pad_shard(np.asarray(st.rows[lo:hi]), self.C, 0)
+                cols = pad_shard(
+                    np.asarray(st.cols[lo:hi]), self.C, self._sentinel
+                )
+                yield (lo, hi), key, vals, (rows, cols)
+
+    def _dw_host_shards(self, l: int):
+        """Index-only canonical shards for the dW pass — ``xl_shard_dw``
+        never reads values, so shipping them would be dead transfer volume;
+        the cache key is shared with the forward shards (same index
+        arrays), so topo_resident layers upload nothing at all here."""
+        st = self.state.layers[l]
+        for lo, hi in element_shard_bounds(st.nnz, self.C):
+            key = ("fwd", l, lo)
+            if key in self._topo_cache:
+                yield (lo, hi), key, None, None
+            else:
+                rows = pad_shard(np.asarray(st.rows[lo:hi]), self.C, 0)
+                cols = pad_shard(
+                    np.asarray(st.cols[lo:hi]), self.C, self._sentinel
+                )
+                yield (lo, hi), key, None, (rows, cols)
+
+    def _dx_host_shards(self, l: int):
+        """Row-order dual shards for dX: values gathered through perm_r on
+        the host — rows_r (the segment ids) pad with the sentinel. The
+        device order is (gather=cols_r, segment=rows_r)."""
+        st = self.state.layers[l]
+        for lo, hi in element_shard_bounds(st.nnz, self.C):
+            key = ("dx", l, lo)
+            p = np.asarray(st.perm_r[lo:hi])
+            vals = pad_shard(
+                np.asarray(st.values)[p].astype(np.float32, copy=False),
+                self.C, 0.0,
+            )
+            if key in self._topo_cache:
+                yield (lo, hi), key, vals, None
+            else:
+                rows_r = pad_shard(
+                    np.asarray(st.rows)[p], self.C, self._sentinel
+                )
+                cols_r = pad_shard(np.asarray(st.cols)[p], self.C, 0)
+                yield (lo, hi), key, vals, (cols_r, rows_r)
+
+    def _device_shards(self, host_iter, cache_layer: bool):
+        """device_put each shard one ahead of compute; optionally populate
+        the immutable-index device cache (plan: topo_resident). Yields
+        ``(bounds, values_dev_or_None, (gather_dev, segment_dev))``."""
+        if self._topo_cache_version != self.state.topo_version:
+            self._topo_cache.clear()
+            self._topo_cache_version = self.state.topo_version
+
+        def upload():
+            for bounds, key, vals, idx in host_iter:
+                if idx is None:
+                    idx_dev = self._topo_cache[key]
+                else:
+                    idx_dev = jax.device_put(idx)
+                    if cache_layer:
+                        self._topo_cache[key] = idx_dev
+                vals_dev = None if vals is None else jax.device_put(vals)
+                yield bounds, vals_dev, idx_dev
+
+        return _prefetch(upload())
+
+    def _layer_resident(self, l: int) -> bool:
+        return self.plan.layers[l].topo_resident
+
+    # -- forward ------------------------------------------------------------
+
+    def _pad_input(self, xb: np.ndarray) -> jax.Array:
+        """(B', n_feat) host batch -> (d_max, B) transposed device buffer;
+        ragged eval tails zero-pad the batch axis."""
+        if xb.shape[0] > self.B:
+            raise ValueError(
+                f"batch of {xb.shape[0]} exceeds the plan's batch {self.B}"
+            )
+        xT = np.zeros((self.d_max, self.B), np.float32)
+        xT[: xb.shape[1], : xb.shape[0]] = np.asarray(xb, np.float32).T
+        return jax.device_put(xT)
+
+    def _stream_matmul(self, l: int, srcT, shards) -> jax.Array:
+        acc = jnp.zeros((self.d_max, self.B), jnp.float32)
+        for _, vals, (gather, segment) in shards:
+            acc = xl_shard_acc(
+                acc, srcT, vals, gather, segment,
+                n_segments=self.d_max, chunk=self.chunk,
+            )
+        return acc
+
+    def _bias_pad(self, l: int) -> jax.Array:
+        st = self.state.layers[l]
+        b = np.zeros((self.d_max,), np.float32)
+        b[: st.out_dim] = st.bias
+        return jax.device_put(b)
+
+    def forward(self, xb: np.ndarray, *, keep_preacts: bool):
+        """Streamed forward. Returns (logitsT-as-z buffer, x_dev, [z per
+        layer]); with ``keep_preacts=False`` only the final z survives."""
+        n = self.state.n_layers
+        x_dev = self._pad_input(xb)
+        h = x_dev
+        zs: List[jax.Array] = []
+        for l in range(n):
+            shards = self._device_shards(
+                self._fwd_host_shards(l), self._layer_resident(l)
+            )
+            acc = self._stream_matmul(l, h, shards)
+            z = _bias_add(acc, self._bias_pad(l))
+            if keep_preacts:
+                zs.append(z)
+            if l < n - 1:
+                h = _act(z, self._slopes[l])
+            else:
+                h = z
+        self._note_bytes((len(zs) if keep_preacts else 1) + 3)
+        return h, x_dev, zs
+
+    def logits(self, xb: np.ndarray) -> np.ndarray:
+        """Streamed inference logits for up to ``plan.batch`` rows."""
+        z, _, _ = self.forward(xb, keep_preacts=False)
+        n_out = self.state.layer_dims[-1]
+        return np.asarray(z)[:n_out, : xb.shape[0]].T
+
+    # -- train step ---------------------------------------------------------
+
+    def train_step(self, xb: np.ndarray, yb: np.ndarray, lr: float,
+                   *, momentum: float, weight_decay: float):
+        """One streamed minibatch step: forward, CE loss, streamed backward
+        with immediate per-shard host momentum-SGD updates. Semantically the
+        in-core ``launch.steps.make_mlp_step_core`` (same loss, same update
+        order: all gradients are taken against pre-update parameters)."""
+        st = self.state
+        n = st.n_layers
+        if xb.shape[0] != self.B:
+            raise ValueError(
+                f"train_step needs a full batch of {self.B} rows, got "
+                f"{xb.shape[0]} — the loss/gradient programs are shaped for "
+                f"the plan's batch (ragged batches are eval-only)"
+            )
+        mu, wd = np.float32(momentum), np.float32(weight_decay)
+        lr = np.float32(lr)
+        _, x_dev, zs = self.forward(xb, keep_preacts=True)
+        y_dev = jax.device_put(np.asarray(yb, np.int32))
+        loss, dz = _loss_and_dz(zs[-1], y_dev, n_classes=st.layer_dims[-1])
+        for l in range(n - 1, -1, -1):
+            layer = st.layers[l]
+            # bias update (gradient against pre-update bias, like in-core)
+            db = np.asarray(_bias_grad(dz))[: layer.out_dim]
+            g = db + wd * layer.bias
+            layer.bias_vel[:] = mu * layer.bias_vel - lr * g
+            layer.bias += layer.bias_vel
+            # dX first: it reads the layer's *pre-update* values
+            if l > 0:
+                shards = self._device_shards(
+                    self._dx_host_shards(l), self._layer_resident(l)
+                )
+                dh = self._stream_matmul(l, dz, shards)
+            h_prev = x_dev if l == 0 else _act(zs[l - 1], self._slopes[l - 1])
+            # dW + host update, shard by shard (index-only stream: dW never
+            # reads the values, the host update does that in place)
+            shards = self._device_shards(
+                self._dw_host_shards(l), self._layer_resident(l)
+            )
+            for (lo, hi), _, (rows, cols) in shards:
+                dv = xl_shard_dw(h_prev, dz, rows, cols, chunk=self.chunk)
+                dv_np = np.asarray(dv)[: hi - lo]
+                v = layer.values[lo:hi]
+                gsl = dv_np + wd * v
+                layer.velocity[lo:hi] = mu * layer.velocity[lo:hi] - lr * gsl
+                layer.values[lo:hi] = v + layer.velocity[lo:hi]
+            if l > 0:
+                dz = _act_bwd(dh, zs[l - 1], self._slopes[l - 1])
+        self._note_bytes(n + 5)
+        return float(loss)

@@ -1,0 +1,459 @@
+"""Out-of-core XL substrate (repro.xl, DESIGN.md §7).
+
+Covers the ISSUE-5 contract:
+  * planner solves known budgets (capacity a chunk multiple, peak <= budget,
+    plan artifact JSON round-trip) and raises clearly when infeasible;
+  * shard slicing preserves the canonical/dual-order invariants;
+  * streamed forward is BIT-equal to the in-core custom-VJP path when the
+    chunk widths match (same chunk partition => same f32 addition order),
+    and the streamed backward/update matches the in-core train step within
+    float tolerance;
+  * an XL-trained model under a budget below the in-core footprint follows
+    the in-core loss trajectory on the same seed;
+  * zero recompiles across shards/layers/epochs;
+  * shard-wise evolution matches whole-layer ``evolve_element``
+    distributionally (exact prune count, exact per-sign threshold) and
+    preserves every topology invariant;
+  * streamed checkpoints round-trip through ``CheckpointManager``.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.topology import (
+    check_element_shards,
+    element_row_order,
+    element_shard_bounds,
+    element_shard_key_intervals,
+    prune_indices_by_magnitude,
+)
+from repro.data.synthetic import Dataset, make_classification
+from repro.launch.steps import make_mlp_train_step
+from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
+from repro.optim.sgd import MomentumSGD
+from repro.train.trainer import SequentialTrainer, TrainerConfig, XLTrainer
+from repro.xl import (
+    PlannerError,
+    StreamExecutor,
+    XLModelState,
+    XLPlan,
+    compile_counts,
+    estimate_in_core_bytes,
+    evolve_model_streamed,
+    plan_memory_budget,
+    streamed_sign_thresholds,
+)
+
+DIMS = (40, 64, 48, 5)
+B = 16
+CHUNK = 128
+TIGHT_BUDGET = 60_000  # forces 4 shards on the wide layers at CHUNK=128
+
+
+def make_cfg(**kw):
+    base = dict(
+        layer_dims=DIMS, epsilon=8, activation="all_relu", alpha=0.6,
+        dropout=0.0, impl="element", element_impl="custom", spmm_chunk=CHUNK,
+    )
+    base.update(kw)
+    return SparseMLPConfig(**base)
+
+
+def make_plan(model, budget=TIGHT_BUDGET, **kw):
+    nnz = [t.nnz for t in model.topos]
+    return plan_memory_budget(
+        DIMS, nnz, B, budget_bytes=budget, chunk=CHUNK, min_chunk=32, **kw
+    )
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(1)
+    x, y = make_classification(
+        200, DIMS[0], n_informative=8, n_redundant=8, n_classes=DIMS[-1],
+        rng=rng,
+    )
+    return Dataset(
+        "t", x[:160].astype(np.float32), y[:160],
+        x[160:].astype(np.float32), y[160:], DIMS[-1],
+    )
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+def test_planner_solves_known_budget():
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m)
+    assert plan.shard_capacity % plan.chunk == 0
+    assert plan.shard_capacity >= plan.chunk
+    assert plan.peak_device_bytes <= plan.budget_bytes
+    nnz = [t.nnz for t in m.topos]
+    for lp in plan.layers:
+        assert lp.n_shards == len(
+            element_shard_bounds(nnz[lp.index], plan.shard_capacity)
+        )
+    # tight budget must actually force streaming on the wide layers
+    assert max(lp.n_shards for lp in plan.layers) > 1
+
+
+def test_planner_generous_budget_caches_topology():
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m, budget=2_000_000)
+    assert all(lp.topo_resident for lp in plan.layers)
+    assert plan.peak_device_bytes <= plan.budget_bytes
+
+
+def test_planner_chunk_descent_under_pressure():
+    m = SparseMLP(make_cfg(), seed=0)
+    generous = make_plan(m, budget=2_000_000)
+    tight = make_plan(m, budget=45_000)
+    assert tight.chunk <= generous.chunk
+    assert tight.peak_device_bytes <= 45_000
+
+
+def test_planner_infeasible_is_a_clear_error():
+    m = SparseMLP(make_cfg(), seed=0)
+    with pytest.raises(PlannerError, match="infeasible budget"):
+        make_plan(m, budget=1_000)
+
+
+def test_plan_artifact_json_round_trip(tmp_path):
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m)
+    p = tmp_path / "plan.json"
+    plan.save(p)
+    assert XLPlan.load(p) == plan
+
+
+def test_in_core_estimate_exceeds_tight_budget():
+    m = SparseMLP(make_cfg(), seed=0)
+    nnz = [t.nnz for t in m.topos]
+    assert estimate_in_core_bytes(DIMS, nnz, B) > TIGHT_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# shard slicing invariants
+# ---------------------------------------------------------------------------
+
+
+def test_shard_bounds_partition():
+    bounds = element_shard_bounds(1000, 256)
+    assert bounds[0][0] == 0 and bounds[-1][1] == 1000
+    assert all(b[1] - b[0] <= 256 for b in bounds)
+    assert all(a[1] == b[0] for a, b in zip(bounds, bounds[1:]))
+    with pytest.raises(ValueError):
+        element_shard_bounds(0, 256)
+
+
+def test_shard_slices_preserve_dual_order_invariants():
+    m = SparseMLP(make_cfg(), seed=0)
+    for topo in m.topos:
+        perm_r = element_row_order(topo.rows, topo.cols)
+        check_element_shards(
+            topo.rows, topo.cols, perm_r, topo.in_dim, topo.out_dim, 256
+        )
+
+
+def test_shard_key_intervals_tile_and_own_their_keys():
+    m = SparseMLP(make_cfg(), seed=0)
+    topo = m.topos[0]
+    cap = 200
+    edges = element_shard_key_intervals(
+        topo.rows, topo.cols, topo.in_dim, topo.out_dim, cap
+    )
+    keys = topo.cols.astype(np.int64) * topo.in_dim + topo.rows
+    bounds = element_shard_bounds(topo.nnz, cap)
+    assert edges[0] == 0
+    assert edges[-1] == topo.in_dim * topo.out_dim
+    for s, (lo, hi) in enumerate(bounds):
+        assert (keys[lo:hi] >= edges[s]).all()
+        assert (keys[lo:hi] < edges[s + 1]).all()
+
+
+# ---------------------------------------------------------------------------
+# streamed numerics vs the in-core oracle
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_forward_bit_equal_to_in_core():
+    cfg = make_cfg()
+    m = SparseMLP(cfg, seed=0)
+    plan = make_plan(m)
+    ex = StreamExecutor(XLModelState.from_model(m, plan))
+    x = np.random.default_rng(0).standard_normal((B, DIMS[0])).astype(np.float32)
+    got = ex.logits(x)
+    ref = np.asarray(
+        mlp_forward(m.params(), m.topo_arrays(), jnp.asarray(x), cfg, train=False)
+    )
+    # same chunk width => same chunk partition => same f32 addition order
+    assert np.array_equal(got, ref)
+
+
+def test_streamed_step_matches_in_core_step():
+    cfg = make_cfg()
+    m = SparseMLP(cfg, seed=0)
+    plan = make_plan(m)
+    st = XLModelState.from_model(m, plan)
+    ex = StreamExecutor(st)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((B, DIMS[0])).astype(np.float32)
+    y = rng.integers(0, DIMS[-1], B).astype(np.int32)
+
+    opt = MomentumSGD(momentum=0.9, weight_decay=2e-4)
+    params, opt_state = m.params(), None
+    opt_state = opt.init(params)
+    step = make_mlp_train_step(cfg, opt)
+    p2, s2, loss_ref = step(
+        params, opt_state, m.topo_arrays(), jnp.asarray(x), jnp.asarray(y),
+        jnp.float32(0.01), jax.random.PRNGKey(0),
+    )
+    loss_xl = ex.train_step(x, y, 0.01, momentum=0.9, weight_decay=2e-4)
+    assert loss_xl == pytest.approx(float(loss_ref), abs=1e-6)
+    for l in range(len(DIMS) - 1):
+        np.testing.assert_allclose(
+            np.asarray(st.layers[l].values), np.asarray(p2["values"][l]),
+            atol=1e-7,
+        )
+        np.testing.assert_allclose(
+            st.layers[l].bias, np.asarray(p2["biases"][l]), atol=1e-7
+        )
+        np.testing.assert_allclose(
+            np.asarray(st.layers[l].velocity),
+            np.asarray(s2.velocity["values"][l]), atol=1e-7,
+        )
+
+
+def test_xl_trainer_tracks_in_core_trajectory(data):
+    cfg = make_cfg()
+    tc = TrainerConfig(
+        epochs=3, batch_size=B, lr=0.01, zeta=0.3, seed=0, evolve=False,
+        eval_every=1,
+    )
+    h_ref = SequentialTrainer(SparseMLP(cfg, seed=0), data, tc).run()
+    m = SparseMLP(cfg, seed=0)
+    plan = make_plan(m)
+    # the point of the exercise: the device budget is below the in-core
+    # footprint of this model, yet the trajectory is the same
+    assert plan.budget_bytes < estimate_in_core_bytes(
+        DIMS, [t.nnz for t in m.topos], B
+    )
+    tr = XLTrainer(m, data, tc, plan)
+    h_xl = tr.run()
+    np.testing.assert_allclose(
+        h_xl["train_loss"], h_ref["train_loss"], rtol=1e-4
+    )
+    assert h_xl["test_acc"] == h_ref["test_acc"]
+    assert tr.executor.measured_peak_bytes <= plan.budget_bytes
+
+
+def test_zero_recompiles_across_shards_layers_epochs(data):
+    cfg = make_cfg()
+    m = SparseMLP(cfg, seed=0)
+    plan = make_plan(m)
+    assert plan.n_shards_total > len(DIMS) - 1  # genuinely multi-shard
+    tc = TrainerConfig(
+        epochs=1, batch_size=B, lr=0.01, zeta=0.3, seed=0, evolve=True,
+        eval_every=1,
+    )
+    tr = XLTrainer(m, data, tc, plan)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((B, DIMS[0])).astype(np.float32)
+    y = rng.integers(0, DIMS[-1], B).astype(np.int32)
+    # warm every program once (fwd + bwd over all layers/shards)
+    tr.executor.train_step(x, y, 0.01, momentum=0.9, weight_decay=2e-4)
+    warm = compile_counts()
+    assert warm["xl_shard_acc"] == 1  # ONE program for fwd AND dX
+    assert warm["xl_shard_dw"] == 1
+    tr.run()  # full epoch + evolution + eval
+    assert compile_counts() == warm
+
+
+# ---------------------------------------------------------------------------
+# shard-wise evolution
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_threshold_is_exact_quantile():
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m)
+    st = XLModelState.from_model(m, plan)
+    zeta = 0.3
+    for layer in st.layers:
+        v = np.asarray(layer.values, np.float32)
+        thr_pos, thr_neg, _ = streamed_sign_thresholds(
+            layer.values, plan.shard_capacity, zeta
+        )
+        pos = np.sort(v[v > 0])
+        neg = np.sort(-v[v < 0])
+        k_pos, k_neg = int(zeta * pos.size), int(zeta * neg.size)
+        if k_pos:
+            assert thr_pos.cutoff == pytest.approx(pos[k_pos - 1], rel=0)
+        if k_neg:
+            assert thr_neg.cutoff == pytest.approx(neg[k_neg - 1], rel=0)
+
+
+def test_shardwise_evolution_matches_whole_layer_distributionally():
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m)
+    st = XLModelState.from_model(m, plan)
+    values_before = [np.asarray(l.values).copy() for l in st.layers]
+    stats = evolve_model_streamed(st, 0.3, np.random.default_rng(0))
+    for l, layer in enumerate(st.layers):
+        # same prune count as the whole-layer paper criterion
+        whole = prune_indices_by_magnitude(values_before[l], 0.3)
+        assert stats[l]["n_pruned"] == whole.size
+        assert stats[l]["n_grown"] == stats[l]["n_pruned"]
+        # capacity is conserved per layer
+        assert layer.nnz == values_before[l].shape[0]
+
+
+def test_shardwise_evolution_preserves_invariants_and_momentum():
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m)
+    st = XLModelState.from_model(m, plan)
+    for layer in st.layers:
+        layer.velocity[:] = 0.25  # sentinel: survivors keep it, regrown reset
+    before = [
+        (np.asarray(l.rows).copy(), np.asarray(l.cols).copy(),
+         np.asarray(l.values).copy())
+        for l in st.layers
+    ]
+    evolve_model_streamed(st, 0.3, np.random.default_rng(0))
+    st.check_invariants()  # canonical + dual order + uniqueness, per shard
+    for (rows0, cols0, vals0), layer in zip(before, st.layers):
+        old = dict(
+            zip(
+                (rows0.astype(np.int64) * layer.out_dim + cols0).tolist(),
+                vals0.tolist(),
+            )
+        )
+        rows = np.asarray(layer.rows)
+        cols = np.asarray(layer.cols)
+        vel = np.asarray(layer.velocity)
+        vals = np.asarray(layer.values)
+        flat = rows.astype(np.int64) * layer.out_dim + cols
+        survived = np.array([f in old for f in flat.tolist()])
+        same_value = np.array(
+            [old.get(f) == v for f, v in zip(flat.tolist(), vals.tolist())]
+        )
+        kept = survived & same_value
+        assert (vel[kept] == 0.25).all(), "survivor momentum lost"
+        assert (vel[~kept] == 0.0).all(), "regrown momentum not reset"
+
+
+def test_evolution_topo_version_invalidates_device_cache(data):
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m, budget=2_000_000)  # resident topo caching on
+    st = XLModelState.from_model(m, plan)
+    ex = StreamExecutor(st)
+    x = np.random.default_rng(0).standard_normal((B, DIMS[0])).astype(np.float32)
+    ex.logits(x)
+    assert ex._topo_cache  # populated
+    evolve_model_streamed(st, 0.3, np.random.default_rng(0))
+    got = ex.logits(x)
+    cfg = make_cfg(spmm_chunk=plan.chunk)
+    # rebuild an in-core model from the evolved host state: the cache must
+    # have refreshed, so streamed logits match the evolved topology exactly
+    from repro.core.sparsity import ElementTopology
+
+    topos = [
+        ElementTopology(l.in_dim, l.out_dim, np.asarray(l.rows), np.asarray(l.cols))
+        for l in st.layers
+    ]
+    m2 = SparseMLP.from_state(
+        cfg, topos, [np.asarray(l.values) for l in st.layers],
+        [l.bias for l in st.layers],
+    )
+    ref = np.asarray(
+        mlp_forward(m2.params(), m2.topo_arrays(), jnp.asarray(x), cfg, train=False)
+    )
+    assert np.array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# streamed checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_checkpoint_round_trip(tmp_path):
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m)
+    st = XLModelState.from_model(m, plan)
+    st.layers[0].velocity[:] = 0.5
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    st.save(mgr, 7)
+    manifest = mgr.read_manifest(7)
+    assert manifest["meta"]["kind"] == "xl_model"
+    assert manifest["streamed_groups"] == sorted(
+        f"xl_layer{l}" for l in range(len(DIMS) - 1)
+    )
+    st2 = XLModelState.restore(mgr, plan, 7)
+    for a, b in zip(st.layers, st2.layers):
+        for f in ("rows", "cols", "perm_r", "values", "velocity", "bias",
+                  "bias_vel"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+            )
+    # and the restored state trains
+    ex = StreamExecutor(st2)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((B, DIMS[0])).astype(np.float32)
+    y = rng.integers(0, DIMS[-1], B).astype(np.int32)
+    ex.train_step(x, y, 0.01, momentum=0.9, weight_decay=2e-4)
+
+
+def test_streamed_checkpoint_chunk_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    bad = {"g": {"leaf": ((10,), np.float32, iter([np.zeros(4, np.float32)]))}}
+    with pytest.raises(ValueError, match="covered 4 of 10"):
+        mgr.save_streamed(1, bad)
+
+
+def test_memmap_spooled_state_trains_and_evolves(tmp_path):
+    m = SparseMLP(make_cfg(), seed=0)
+    plan = make_plan(m, memmap_threshold_bytes=64)
+    st = XLModelState.from_model(m, plan, spool_dir=str(tmp_path))
+    assert all(isinstance(l.values, np.memmap) for l in st.layers)
+    ex = StreamExecutor(st)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((B, DIMS[0])).astype(np.float32)
+    y = rng.integers(0, DIMS[-1], B).astype(np.int32)
+    l0 = ex.train_step(x, y, 0.01, momentum=0.9, weight_decay=2e-4)
+    evolve_model_streamed(st, 0.3, np.random.default_rng(0))
+    st.check_invariants()
+    l1 = ex.train_step(x, y, 0.01, momentum=0.9, weight_decay=2e-4)
+    assert np.isfinite(l0) and np.isfinite(l1)
+
+
+# ---------------------------------------------------------------------------
+# streaming extreme dataset
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_extreme_dataset_is_deterministic_and_bounded():
+    from repro.data.datasets import StreamingExtremeDataset
+
+    ds = StreamingExtremeDataset(
+        n_features=256, batch_size=8, n_informative=8, n_redundant=16, seed=3
+    )
+    x1, y1 = ds.batch(5)
+    x2, y2 = ds.batch(5)
+    np.testing.assert_array_equal(x1, x2)  # replayable after restart
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (8, 256) and x1.dtype == np.float32
+    assert set(np.unique(y1)) <= {0, 1}
+    # distinct indices give distinct draws; epochs tile the index space
+    x3, _ = ds.batch(6)
+    assert not np.array_equal(x1, x3)
+    epoch0 = [i for _, i in zip(ds.epoch(0, 3), range(3))]
+    assert len(list(ds.epoch(1, 3))) == 3
+    xt, yt = ds.test_set(2)
+    assert xt.shape == (16, 256) and yt.shape == (16,)
+    # the reserved test range never collides with training indices
+    x_first, _ = ds.batch(0)
+    assert not np.array_equal(xt[:8], x_first)
