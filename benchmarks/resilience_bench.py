@@ -1,0 +1,192 @@
+"""Resilience benchmark (ISSUE 6 / DESIGN.md §8): what fault tolerance costs.
+
+Measures, on the deterministic supervisor SET-MLP run:
+
+  * checkpoint overhead — wall clock of the supervised run (one full resume
+    snapshot per epoch boundary, sync writes) vs the bare run;
+  * a single save / restore of the full resume state;
+  * steps lost per kill — the kill step is drawn from a seeded FaultPlan;
+    loss is bounded by the save cadence (here: one epoch);
+  * recovery — wall clock of the resumed run (restore + replay to the end),
+    and the flag that its trajectory bit-matches the uninterrupted control;
+  * corruption fallback — the newest checkpoint is bit-flipped, the resume
+    quarantines it and falls back to the previous boundary, still bit-exact.
+
+Rows land in BENCH_resilience.json; `run.py --compare` gates the two
+wall-clock rows, CI asserts the structural flags.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+EPOCHS = {"ci": 3, "small": 6, "full": 12}
+
+
+def _trajectory(history):
+    return [
+        np.asarray(history[k], float)
+        for k in ("epoch", "train_loss", "test_acc", "n_params")
+    ]
+
+
+def _same(a, b):
+    return all(
+        np.array_equal(x, y, equal_nan=True) for x, y in zip(a, b)
+    )
+
+
+def run(scale: str = "ci"):
+    import tempfile
+    from pathlib import Path
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.data.synthetic import Dataset, make_classification
+    from repro.models.mlp import SparseMLP, SparseMLPConfig
+    from repro.runtime.faultinject import FaultPlan, flip_bytes
+    from repro.runtime.supervisor import SupervisorConfig, run_supervised
+    from repro.train.trainer import SequentialTrainer, TrainerConfig
+
+    epochs = EPOCHS.get(scale, 3)
+    rng = np.random.default_rng(0)
+    x, y = make_classification(
+        640, 32, n_informative=8, n_redundant=8, n_classes=5, rng=rng
+    )
+    data = Dataset(
+        "resilience", x[:512].astype(np.float32), y[:512],
+        x[512:].astype(np.float32), y[512:], 5,
+    )
+    batch = 64
+    steps_per_epoch = 512 // batch
+
+    def make_trainer(fused=True):
+        cfg = SparseMLPConfig(layer_dims=(32, 64, 64, 5), epsilon=8, dropout=0.2)
+        tc = TrainerConfig(
+            epochs=epochs, batch_size=batch, evolve=True, seed=3,
+            fused_epochs=fused,
+        )
+        return SequentialTrainer(SparseMLP(cfg, seed=3), data, tc)
+
+    tmp = Path(tempfile.mkdtemp(prefix="resilience_bench_"))
+
+    # warm the jit caches so the bare-vs-supervised comparison measures
+    # steady-state epochs, not compilation
+    make_trainer().run()
+
+    # -- checkpoint overhead -------------------------------------------------
+    t0 = time.perf_counter()
+    bare_hist = make_trainer().run()
+    bare_s = time.perf_counter() - t0
+
+    ref_dir = tmp / "ref"
+    t0 = time.perf_counter()
+    ref = run_supervised(
+        make_trainer(), SupervisorConfig(checkpoint_dir=str(ref_dir))
+    )
+    supervised_s = time.perf_counter() - t0
+    overhead = supervised_s / bare_s - 1.0
+    assert _same(_trajectory(ref["history"]), _trajectory(bare_hist)), (
+        "supervision changed the trajectory"
+    )
+    row("resilience/train_nockpt", bare_s / epochs * 1e6, "us/epoch bare")
+    row(
+        "resilience/train_ckpt_every_epoch", supervised_s / epochs * 1e6,
+        f"us/epoch supervised overhead={overhead * 100:.1f}%",
+    )
+
+    manager = ref["manager"]
+    tr = make_trainer()
+    t0 = time.perf_counter()
+    tr.restore_checkpoint(manager)
+    restore_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tr.save_checkpoint(manager)
+    manager.wait()
+    save_s = time.perf_counter() - t0
+    row("resilience/ckpt_save", save_s * 1e6, "full resume snapshot, sync")
+    row("resilience/ckpt_restore", restore_s * 1e6, "verified restore")
+
+    # -- kill at a seeded step, resume, compare ------------------------------
+    # per-batch mode here: the fused fault hook only fires at epoch starts,
+    # per-batch fires every minibatch, so the seeded kill lands exactly
+    # mid-epoch and steps-lost is the genuine boundary distance
+    total_steps = epochs * steps_per_epoch
+    plan = FaultPlan.from_seed(0, total_steps=total_steps)
+    kill_at = plan.kill_at_step
+
+    ref_pb = run_supervised(
+        make_trainer(fused=False),
+        SupervisorConfig(checkpoint_dir=str(tmp / "ref_pb")),
+    )
+
+    class Boom(Exception):
+        pass
+
+    def boom(gstep):
+        if gstep >= kill_at:
+            raise Boom
+
+    run_dir = tmp / "killed"
+    killed = make_trainer(fused=False)
+    killed.fault_hook = boom
+    try:
+        run_supervised(killed, SupervisorConfig(checkpoint_dir=str(run_dir)))
+        raise AssertionError(f"kill at step {kill_at} never fired")
+    except Boom:
+        pass
+    boundary = CheckpointManager(str(run_dir)).latest_valid_step() or 0
+    # work redone on resume: last epoch boundary .. kill step, bounded by
+    # the save cadence (one epoch)
+    steps_lost = kill_at - boundary
+
+    t0 = time.perf_counter()
+    resumed = run_supervised(
+        make_trainer(fused=False), SupervisorConfig(checkpoint_dir=str(run_dir))
+    )
+    recovery_s = time.perf_counter() - t0
+    bit_exact = _same(
+        _trajectory(resumed["history"]), _trajectory(ref_pb["history"])
+    )
+    row(
+        "resilience/recovery_total", recovery_s * 1e6,
+        f"restore + replay to completion after kill@{kill_at}",
+    )
+    row("resilience/kill_resume_bit_exact", 0.0, str(bit_exact))
+
+    # -- corruption fallback -------------------------------------------------
+    newest = CheckpointManager(str(run_dir)).latest_valid_step()
+    flip_bytes(run_dir, newest)
+    fallback = run_supervised(
+        make_trainer(fused=False), SupervisorConfig(checkpoint_dir=str(run_dir))
+    )
+    corruption_ok = (
+        fallback["resumed_from_step"] is not None
+        and fallback["resumed_from_step"] < newest
+        and _same(
+            _trajectory(fallback["history"]), _trajectory(ref_pb["history"])
+        )
+    )
+    row("resilience/corruption_fallback_ok", 0.0, str(corruption_ok))
+
+    return {
+        "epochs": epochs,
+        "steps_per_epoch": steps_per_epoch,
+        "save_every_epochs": 1,
+        "bare_run_seconds": bare_s,
+        "supervised_run_seconds": supervised_s,
+        "ckpt_overhead_frac": overhead,
+        "ckpt_save_seconds": save_s,
+        "ckpt_restore_seconds": restore_s,
+        "kill_at_step": int(kill_at),
+        "resumed_from_step": int(boundary),
+        "steps_lost_per_kill": int(steps_lost),
+        "max_steps_lost_bound": steps_per_epoch,  # cadence * steps/epoch
+        "recovery_wall_seconds": recovery_s,
+        "kill_resume_bit_exact": bool(bit_exact),
+        "corruption_fallback_ok": bool(corruption_ok),
+    }
+
+
+if __name__ == "__main__":
+    print(run())

@@ -44,6 +44,10 @@ HOT_PATH_ROWS = {
         "serve/mlp/forward_raw",
         "serve/mlp/forward_compacted",
     ],
+    "resilience": [
+        "resilience/train_ckpt_every_epoch",
+        "resilience/recovery_total",
+    ],
 }
 REGRESSION_TOLERANCE = 1.25  # fresh > 1.25x baseline => fail
 
@@ -94,7 +98,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default="",
         help="comma list: table2,table3,table4,table5,table6,gradient_flow,"
-        "kernels,roofline,serve",
+        "kernels,roofline,serve,resilience",
     )
     ap.add_argument(
         "--json-dir", default=".",
@@ -116,6 +120,7 @@ def main() -> None:
         common,
         gradient_flow,
         kernels_micro,
+        resilience_bench,
         roofline,
         serve_bench,
         table2_sequential,
@@ -135,6 +140,7 @@ def main() -> None:
         ("kernels", lambda: kernels_micro.run()),
         ("roofline", lambda: roofline.run()),
         ("serve", lambda: serve_bench.run(args.scale)),
+        ("resilience", lambda: resilience_bench.run(args.scale)),
     ]
     json_dir = pathlib.Path(args.json_dir)
     json_dir.mkdir(parents=True, exist_ok=True)

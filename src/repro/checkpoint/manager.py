@@ -17,6 +17,13 @@ Design for 1000+ nodes (DESIGN.md §5):
     sparse model restores the exact connectivity, not just values.
   * retention: keep_last N checkpoints garbage-collected after a successful
     write, never before (crash-safety).
+  * integrity (DESIGN.md §8): the manifest records a crc32 + byte count per
+    file (both the ``save`` and ``save_streamed`` paths); ``verify_step``
+    re-reads and rejects torn/bit-flipped/partial checkpoints,
+    ``latest_valid_step`` scans backward past them (quarantining bad step
+    dirs so they are never picked again), restore verifies by default and
+    raises :class:`CheckpointCorruptError` naming the step dir and leaf,
+    and ``__post_init__`` sweeps tmp dirs orphaned by crashed writers.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import json
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
@@ -33,7 +41,50 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointCorruptError"]
+
+_CRC_CHUNK = 4 << 20  # stream file checksums in 4 MiB slices
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint failed integrity verification (or a leaf failed to load).
+
+    Carries the offending step directory and, when known, the leaf file —
+    so a failed restore says *which* checkpoint and *which* array, not a raw
+    numpy/OS traceback.
+    """
+
+    def __init__(self, step_dir, leaf: Optional[str] = None, reason: str = ""):
+        self.step_dir = str(step_dir)
+        self.leaf = leaf
+        self.reason = reason
+        where = f"{self.step_dir}" + (f" leaf {leaf!r}" if leaf else "")
+        super().__init__(f"corrupt checkpoint at {where}: {reason}")
+
+
+def _crc32_file(path: Path) -> tuple:
+    """(crc32, n_bytes) of a file, streamed so huge leaves never load whole."""
+    crc, n = 0, 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(_CRC_CHUNK)
+            if not chunk:
+                break
+            crc = zlib.crc32(chunk, crc)
+            n += len(chunk)
+    return crc, n
+
+
+def _file_table(root: Path) -> Dict[str, Dict[str, int]]:
+    """Relpath -> {crc32, bytes} for every file under ``root`` except the
+    manifest (which is written after, and cannot checksum itself)."""
+    out = {}
+    for p in sorted(root.rglob("*")):
+        if not p.is_file() or p.name == "manifest.json":
+            continue
+        crc, n = _crc32_file(p)
+        out[str(p.relative_to(root))] = {"crc32": crc, "bytes": n}
+    return out
 
 
 def _flatten_with_names(tree: PyTree):
@@ -59,6 +110,10 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # a writer that died mid-save (SIGKILL/preemption) leaves a tmp dir
+        # behind; it was never published so it holds no recoverable state
+        for tmp in self.dir.glob(".tmp_step_*"):
+            shutil.rmtree(tmp, ignore_errors=True)
 
     # -- save ---------------------------------------------------------------
 
@@ -102,6 +157,7 @@ class CheckpointManager:
                 "step": step,
                 "time": time.time(),
                 "shapes": shapes,
+                "files": _file_table(tmp),
                 "meta": meta or {},
             }
             (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
@@ -165,6 +221,7 @@ class CheckpointManager:
             "time": time.time(),
             "shapes": shapes,
             "streamed_groups": sorted(stream_groups),
+            "files": _file_table(tmp),
             "meta": meta or {},
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
@@ -183,8 +240,14 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        path = self.dir / f"step_{step:09d}" / group / f"{name}.npy"
-        return np.load(path, mmap_mode="r")
+        root = self.dir / f"step_{step:09d}"
+        path = root / group / f"{name}.npy"
+        try:
+            return np.load(path, mmap_mode="r")
+        except Exception as e:  # noqa: BLE001
+            raise CheckpointCorruptError(
+                root, leaf=f"{group}/{name}.npy", reason=str(e)
+            ) from e
 
     def _guard(self, fn):
         def run():
@@ -221,6 +284,74 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    # -- integrity -----------------------------------------------------------
+
+    def verify_step(self, step: int) -> Optional[str]:
+        """None if the checkpoint is intact, else a human-readable reason.
+
+        Checks: the manifest exists and parses; every file it recorded still
+        exists with the recorded byte count and crc32. Checkpoints written
+        before checksums existed (no ``files`` table) fall back to an
+        existence check over the ``shapes`` table.
+        """
+        root = self.dir / f"step_{step:09d}"
+        mpath = root / "manifest.json"
+        if not mpath.exists():
+            return "manifest.json missing"
+        try:
+            manifest = json.loads(mpath.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            return f"manifest.json unreadable: {e}"
+        files = manifest.get("files")
+        if files is None:  # pre-checksum checkpoint: existence only
+            streamed = manifest.get("streamed_groups")
+            for name in manifest.get("shapes", {}):
+                rel = (
+                    name.replace("__", "/", 1) + ".npy"
+                    if streamed
+                    else f"arrays/{name}.npy"
+                )
+                if not (root / rel).exists():
+                    return f"leaf {rel} missing"
+            return None
+        for rel, want in files.items():
+            p = root / rel
+            if not p.exists():
+                return f"leaf {rel} missing"
+            crc, n = _crc32_file(p)
+            if n != want["bytes"]:
+                return f"leaf {rel} truncated: {n} of {want['bytes']} bytes"
+            if crc != want["crc32"]:
+                return f"leaf {rel} checksum mismatch"
+        return None
+
+    def quarantine(self, step: int, reason: str = "") -> Path:
+        """Move a bad step dir out of the ``step_*`` namespace so retention
+        GC, ``latest_step`` and future scans never consider it again; the
+        data is preserved for post-mortem rather than deleted."""
+        qdir = self.dir / "quarantine"
+        qdir.mkdir(exist_ok=True)
+        src = self.dir / f"step_{step:09d}"
+        dst = qdir / f"step_{step:09d}"
+        if dst.exists():
+            shutil.rmtree(dst)
+        src.rename(dst)
+        (dst / "QUARANTINE_REASON.txt").write_text(reason + "\n")
+        return dst
+
+    def latest_valid_step(self, quarantine: bool = True) -> Optional[int]:
+        """Newest step that passes :meth:`verify_step`, scanning backward
+        past corrupt/partial checkpoints (quarantining them by default).
+        This is the restore entry a crash-recovery loop should use."""
+        self.wait()
+        for step in reversed(self.all_steps()):
+            reason = self.verify_step(step)
+            if reason is None:
+                return step
+            if quarantine:
+                self.quarantine(step, reason)
+        return None
+
     def read_manifest(self, step: Optional[int] = None) -> Dict:
         """Manifest only — lets a restorer (e.g. the serving engine) learn the
         model config/kind before deciding how to build the ``like`` pytree."""
@@ -237,18 +368,42 @@ class CheckpointManager:
         like: Optional[PyTree] = None,
         shardings: Optional[PyTree] = None,
         like_extra: Optional[Dict[str, PyTree]] = None,
+        verify: bool = True,
     ):
         """Restore (params, extra, topologies, manifest). ``like`` gives the
         target pytree structure; ``shardings`` (optional) re-shards each leaf
         onto the *current* mesh — elastic resume onto a different topology.
         ``like_extra`` maps extra-group name -> like pytree for the groups
-        written via ``save(extra=...)``; groups not named are left on disk."""
+        written via ``save(extra=...)``; groups not named are left on disk.
+
+        ``verify`` (default) runs :meth:`verify_step` first, so a torn or
+        bit-flipped checkpoint fails as :class:`CheckpointCorruptError`
+        naming the step dir — not as a raw numpy error deep in a leaf load.
+        """
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         root = self.dir / f"step_{step:09d}"
-        manifest = json.loads((root / "manifest.json").read_text())
+        if verify:
+            reason = self.verify_step(step)
+            if reason is not None:
+                raise CheckpointCorruptError(root, reason=reason)
+        try:
+            manifest = json.loads((root / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptError(
+                root, leaf="manifest.json", reason=str(e)
+            ) from e
+
+        def load_leaf(sub: Path, name: str):
+            path = sub / f"{name}.npy"
+            try:
+                return np.load(path)
+            except Exception as e:  # noqa: BLE001 — numpy raises a zoo here
+                raise CheckpointCorruptError(
+                    root, leaf=str(path.relative_to(root)), reason=str(e)
+                ) from e
 
         def load_tree(sub: Path, like_tree: PyTree, shard_tree=None):
             leaves, treedef = _flatten_with_names(like_tree)
@@ -259,7 +414,7 @@ class CheckpointManager:
             out = []
             like_map = dict(leaves)
             for name, leaf in leaves:
-                arr = np.load(sub / f"{name}.npy")
+                arr = load_leaf(sub, name)
                 if arr.dtype.kind == "V" and name in like_map:
                     # bf16 & friends round-trip through numpy as raw void
                     arr = arr.view(np.asarray(like_map[name]).dtype)
@@ -276,5 +431,10 @@ class CheckpointManager:
         topo_dir = root / "topology"
         if topo_dir.exists():
             for f in topo_dir.glob("*.npz"):
-                topologies[f.stem] = dict(np.load(f))
+                try:
+                    topologies[f.stem] = dict(np.load(f))
+                except Exception as e:  # noqa: BLE001
+                    raise CheckpointCorruptError(
+                        root, leaf=f"topology/{f.name}", reason=str(e)
+                    ) from e
         return params, extra, topologies, manifest

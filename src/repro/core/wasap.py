@@ -43,6 +43,7 @@ the measured baseline for ``benchmarks/table3_parallel.py``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 import warnings
 from typing import Dict, List, Tuple
@@ -65,6 +66,7 @@ from repro.launch.mesh import make_worker_mesh
 from repro.launch.steps import make_mlp_step_core, scan_masked_segment
 from repro.models.mlp import SparseMLP, SparseMLPConfig
 from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
+from repro.runtime.fault_tolerance import retry_step
 from repro.train.trainer import evaluate, make_segment_fn, make_step_fn
 
 __all__ = [
@@ -139,6 +141,7 @@ def make_phase1_epoch_fn(
     average_momentum: bool = True,
     worker_axis: str = "vmap",
     mesh=None,
+    weighted: bool = False,
 ):
     """Build the jitted phase-1 epoch: one device call scanning sync rounds.
 
@@ -154,6 +157,13 @@ def make_phase1_epoch_fn(
 
     Returns ``(params, opt_state, loss_sums)`` with ``loss_sums`` the (R,)
     per-round sums of valid per-step losses.
+
+    ``weighted=True`` appends a tenth argument ``worker_w`` — (K,) validity
+    weights over the worker axis, renormalized inside the average — so an
+    evicted/dead worker contributes zero while the round completes with the
+    survivors (the elastic WASAP round, DESIGN.md §8). With uniform weights
+    the result is bit-identical to the unweighted build only up to float
+    reassociation, so the unweighted path stays the default.
 
     ``worker_axis="vmap"`` stacks the K workers on one device;
     ``"shard_map"`` maps the same program over the 'data' axis of ``mesh``
@@ -182,7 +192,10 @@ def make_phase1_epoch_fn(
         )
         return params, opt_state, losses.sum()
 
-    def epoch_program(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys):
+    def epoch_program(
+        params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys,
+        worker_w=None,
+    ):
         def round_body(carry, inp):
             params, opt_state = carry
             idx_r, lrs_r, valid_r, keys_r = inp
@@ -201,9 +214,9 @@ def make_phase1_epoch_fn(
                     lambda a: jax.lax.all_gather(a, "data", axis=0, tiled=True),
                     (sp, so, lsum),
                 )
-            new_params = _cast_like(_average_pytree(sp), params)
+            new_params = _cast_like(_average_pytree(sp, worker_w), params)
             new_opt = (
-                _cast_like(_average_pytree(so), opt_state)
+                _cast_like(_average_pytree(so, worker_w), opt_state)
                 if average_momentum
                 else _take_worker0(so)
             )
@@ -214,17 +227,27 @@ def make_phase1_epoch_fn(
         )
         return params, opt_state, loss_sums
 
-    fn = epoch_program
+    if not weighted:
+        # keep the historical 9-arg signature (and its exact averaging
+        # program) when no elastic weights are in play
+        program = functools.partial(epoch_program, worker_w=None)
+    else:
+        program = epoch_program
+
+    fn = program
     if worker_axis == "shard_map":
+        in_specs = [
+            P(), P(), P(), P(), P(),          # params/opt/topo/x/y replicated
+            P(None, "data"),                  # idx   (R, K, H, B) on axis 1
+            P(), P(),                         # lrs/valid replicated
+            P(None, "data"),                  # keys  (R, K, 2)   on axis 1
+        ]
+        if weighted:
+            in_specs.append(P())              # worker_w (K,) replicated
         fn = shard_map(
-            epoch_program,
+            program,
             mesh=mesh,
-            in_specs=(
-                P(), P(), P(), P(), P(),          # params/opt/topo/x/y replicated
-                P(None, "data"),                  # idx   (R, K, H, B) on axis 1
-                P(), P(),                         # lrs/valid replicated
-                P(None, "data"),                  # keys  (R, K, 2)   on axis 1
-            ),
+            in_specs=tuple(in_specs),
             out_specs=(P(), P(), P()),
             check_rep=False,  # all_gather + mean makes every output replicated
         )
@@ -357,8 +380,9 @@ class WASAPTrainer:
                 )
         self._fused = wc.fused and self._device_ok
         self._h = 1 if wc.mode == "wassp" else wc.sync_every
+        self._mesh = None
         if self._fused:
-            mesh = (
+            self._mesh = (
                 make_worker_mesh(wc.n_workers)
                 if wc.worker_axis == "shard_map"
                 else None
@@ -368,7 +392,7 @@ class WASAPTrainer:
                 n_workers=wc.n_workers,
                 average_momentum=wc.average_momentum,
                 worker_axis=wc.worker_axis,
-                mesh=mesh,
+                mesh=self._mesh,
             )
             self._segment = make_segment_fn(cfg, self.opt)
         else:
@@ -385,6 +409,25 @@ class WASAPTrainer:
             "n_params": [], "epoch_seconds": [],
         }
         self._device_data = None  # lazy: one upload shared by both phases
+        # -- resume / elastic surface (DESIGN.md §8), fused path -------------
+        self.start_epoch = 0            # absolute epoch run() continues from
+        self.epoch_next = 0
+        self.fault_hook = None          # hook(gstep) before each epoch call
+        self.epoch_end_hook = None      # hook(trainer, epoch) at boundaries
+        self.step_retries = 0
+        self.retry_backoff_s = 0.0
+        # heartbeat-driven elasticity: attach a fault_tolerance.
+        # HeartbeatMonitor over worker ids "w0".."w{K-1}" (plus an optional
+        # beat_filter(worker_id, epoch) -> bool, e.g. faultinject.
+        # StragglerInjector.beats) and phase-1 rounds run with renormalized
+        # validity weights: evicted/dead workers contribute zero.
+        self.monitor = None
+        self.beat_filter = None
+        self.elastic_log: List[Dict] = []
+        self._phase = 1                 # 1 | 2 — which phase run() enters
+        self._p1_state = None           # (params, opt_state, topo) boundary
+        self._p2_workers = None         # phase-2 replicas at a boundary
+        self._epoch_fn_weighted = None  # built lazily when a monitor attaches
 
     def _data_on_device(self):
         if self._device_data is None:
@@ -409,7 +452,9 @@ class WASAPTrainer:
 
     def run(self) -> Dict[str, list]:
         if self._fused:
-            self._run_phase1_fused()
+            if self._phase == 1:
+                self._run_phase1_fused()
+                self._phase = 2
             worker_states = self._run_phase2_fused()
         else:
             self._run_phase1_roundloop()
@@ -436,12 +481,19 @@ class WASAPTrainer:
         rounds = -(-steps // h)
         padded = rounds * h
         x_all, y_all = self._data_on_device()
-        params = model.params()
-        opt_state = self.opt.init(params)
-        topo = model.topo_arrays()
-        gstep = 0
-        for epoch in range(wc.phase1_epochs):
+        if self._p1_state is not None:  # resumed at an epoch boundary
+            params, opt_state, topo = self._p1_state
+        else:
+            params = model.params()
+            opt_state = self.opt.init(params)
+            topo = model.topo_arrays()
+        start = min(self.start_epoch, wc.phase1_epochs)
+        gstep = start * steps
+        for epoch in range(start, wc.phase1_epochs):
             t0 = time.perf_counter()
+            weights = (
+                self._worker_weights(epoch) if self.monitor is not None else None
+            )
             idx = np.zeros((rounds, k, h, bsz), np.int32)
             for wk, ld in enumerate(self.loaders):
                 order = np.zeros((padded, bsz), np.int32)
@@ -457,11 +509,31 @@ class WASAPTrainer:
             lrs[:steps] = [self._lr(gstep + i, epoch) for i in range(steps)]
             self.key, sub = jax.random.split(self.key)
             keys = jax.random.split(sub, rounds * k).reshape(rounds, k, 2)
-            params, opt_state, loss_sums = self._epoch_fn(
+            epoch_args = (
                 params, opt_state, topo, x_all, y_all,
                 jnp.asarray(idx), jnp.asarray(lrs.reshape(rounds, h)),
                 jnp.asarray(valid.reshape(rounds, h)), keys,
             )
+
+            def run_epoch():
+                # hook first: a kill/transient fires before the pure device
+                # call, so retry_step re-enters with identical inputs
+                if self.fault_hook is not None:
+                    self.fault_hook(gstep)
+                if weights is None:
+                    return self._epoch_fn(*epoch_args)
+                return self._weighted_epoch_fn()(
+                    *epoch_args, jnp.asarray(weights)
+                )
+
+            if self.step_retries:
+                params, opt_state, loss_sums = retry_step(
+                    run_epoch,
+                    retries=self.step_retries,
+                    backoff_s=self.retry_backoff_s,
+                )
+            else:
+                params, opt_state, loss_sums = run_epoch()
             gstep += steps
             # master topology evolution on the averaged model; momentum is
             # re-aligned (RetainValidUpdates semantics for the velocity)
@@ -479,8 +551,13 @@ class WASAPTrainer:
                 params=params, topo_arrays=topo,
             )
             self._log(epoch, 1, train_loss, dt, acc)
+            self._p1_state = (params, opt_state, topo)
+            self.epoch_next = epoch + 1
+            if self.epoch_end_hook is not None:
+                self.epoch_end_hook(self, epoch)
         model.set_params(params)
         self._sync_topos_to_host(topo)
+        self.epoch_next = wc.phase1_epochs
 
     def _run_phase1_roundloop(self) -> None:
         """Seed-era phase 1: per-round Python dispatch, host replication,
@@ -546,19 +623,26 @@ class WASAPTrainer:
         cfg = model.config
         k, bsz = wc.n_workers, wc.batch_size
         x_all, y_all = self._data_on_device()
-        base = model.params()
-        workers = []
-        for wk in range(k):
-            self.key, sub = jax.random.split(self.key)
-            workers.append({
-                # per-worker copies: segments donate their buffers off-CPU
-                "params": jax.tree.map(jnp.array, base),
-                "opt": self.opt.init(base),
-                "topo": model.topo_arrays(),
-                "key": sub,
-            })
-        for epoch in range(wc.phase1_epochs, wc.phase1_epochs + wc.phase2_epochs):
+        if self._p2_workers is not None:  # resumed at an epoch boundary
+            workers = self._p2_workers
+        else:
+            base = model.params()
+            workers = []
+            for wk in range(k):
+                self.key, sub = jax.random.split(self.key)
+                workers.append({
+                    # per-worker copies: segments donate their buffers off-CPU
+                    "params": jax.tree.map(jnp.array, base),
+                    "opt": self.opt.init(base),
+                    "topo": model.topo_arrays(),
+                    "key": sub,
+                })
+        steps_per_epoch = min(ld.steps_per_epoch for ld in self.loaders)
+        start = max(self.start_epoch, wc.phase1_epochs)
+        for epoch in range(start, wc.phase1_epochs + wc.phase2_epochs):
             t0 = time.perf_counter()
+            if self.fault_hook is not None:
+                self.fault_hook(epoch * steps_per_epoch)
             losses = []
             for wk in range(k):
                 w = workers[wk]
@@ -589,6 +673,10 @@ class WASAPTrainer:
             dt = time.perf_counter() - t0
             loss = float(np.mean([np.asarray(l).mean() for l in losses]))
             self._log(epoch, 2, loss, dt, float("nan"))
+            self._p2_workers = workers
+            self.epoch_next = epoch + 1
+            if self.epoch_end_hook is not None:
+                self.epoch_end_hook(self, epoch)
         out = []
         for w in workers:
             topos = [
@@ -678,6 +766,208 @@ class WASAPTrainer:
             model.biases[l] = jnp.mean(
                 jnp.stack([ws[2][l] for ws in worker_states]), axis=0
             )
+
+    # -- elasticity (DESIGN.md §8) -------------------------------------------
+
+    def _weighted_epoch_fn(self):
+        """Weighted-average variant of the phase-1 epoch, built (and jitted)
+        only when a heartbeat monitor is attached — the unweighted program
+        keeps its exact float reduction order otherwise."""
+        if self._epoch_fn_weighted is None:
+            self._epoch_fn_weighted = make_phase1_epoch_fn(
+                self.model.config, self.opt,
+                n_workers=self.wc.n_workers,
+                average_momentum=self.wc.average_momentum,
+                worker_axis=self.wc.worker_axis,
+                mesh=self._mesh,
+                weighted=True,
+            )
+        return self._epoch_fn_weighted
+
+    def _worker_weights(self, epoch: int) -> np.ndarray:
+        """One heartbeat interval per epoch: deliver the beats that arrived
+        (``beat_filter`` suppresses an injected straggler's), tick the
+        monitor, and weight the round's average 1/0 by liveness. The weights
+        are renormalized inside ``_average_pytree``, so the round completes
+        elastically over the survivors — the evicted worker's shard still
+        trains (its replica exists on device) but contributes nothing."""
+        k = self.wc.n_workers
+        mon = self.monitor
+        for wk in range(k):
+            wid = f"w{wk}"
+            if wid in mon.evicted:
+                continue
+            if self.beat_filter is None or self.beat_filter(wid, epoch):
+                mon.beat(wid)
+        status = mon.tick()
+        weights = np.asarray(
+            [
+                1.0
+                if status.get(f"w{wk}", "healthy") in ("healthy", "straggling")
+                else 0.0
+                for wk in range(k)
+            ],
+            np.float32,
+        )
+        if weights.sum() == 0:
+            raise RuntimeError(
+                "every WASAP worker is dead/evicted — the round cannot "
+                "complete elastically"
+            )
+        self.elastic_log.append(
+            {
+                "epoch": epoch,
+                "status": {f"w{wk}": status.get(f"w{wk}") for wk in range(k)},
+                "weights": weights.tolist(),
+            }
+        )
+        return weights
+
+    # -- resume (DESIGN.md §8) ------------------------------------------------
+
+    def save_checkpoint(self, manager) -> None:
+        """Phase-aware epoch-boundary snapshot for the fused path. Phase 1
+        saves the averaged master (params + velocity + topology); phase 2
+        additionally saves every worker replica (params/velocity/topology/
+        PRNG key) as extra groups, since the replicas have diverged. Both
+        carry the trainer's PRNG streams and history, so a restore replays
+        the remaining epochs bit-exactly."""
+        if not self._fused:
+            raise RuntimeError(
+                "WASAP checkpointing covers the fused path; the seed-era "
+                "round loop is a measured baseline, not a production path"
+            )
+        cfg = self.model.config
+        resume = {
+            "kind": "wasap",
+            "phase": self._phase,
+            "epoch_next": int(self.epoch_next),
+            "jax_key": np.asarray(self.key).tolist(),
+            "numpy_rng": self.rng.bit_generator.state,
+            "history": self.history,
+        }
+
+        def topo_entry(topo_l):
+            return {
+                "rows": np.asarray(topo_l.rows),
+                "cols": np.asarray(topo_l.cols),
+            }
+
+        if self._phase == 1 and self._p1_state is not None:
+            params, opt_state, topo = self._p1_state
+            resume["opt_step"] = int(opt_state.step)
+            manager.save(
+                self.epoch_next,
+                params,
+                extra={"velocity": opt_state.velocity},
+                topologies={
+                    f"layer{l}": topo_entry(topo[l])
+                    for l in range(cfg.n_layers)
+                },
+                meta={"resume": resume},
+            )
+            return
+        # phase 2 (or the phase boundary itself): master + worker replicas
+        topologies = {
+            f"layer{l}": topo_entry(self.model.topos[l])
+            for l in range(cfg.n_layers)
+        }
+        extra = {}
+        worker_keys, worker_opt_steps = [], []
+        for wk, w in enumerate(self._p2_workers or []):
+            extra[f"w{wk}_params"] = w["params"]
+            extra[f"w{wk}_velocity"] = w["opt"].velocity
+            worker_keys.append(np.asarray(w["key"]).tolist())
+            worker_opt_steps.append(int(w["opt"].step))
+            for l in range(cfg.n_layers):
+                topologies[f"w{wk}_layer{l}"] = topo_entry(w["topo"][l])
+        resume["phase"] = 2
+        resume["n_saved_workers"] = len(worker_keys)
+        resume["worker_keys"] = worker_keys
+        resume["worker_opt_steps"] = worker_opt_steps
+        manager.save(
+            self.epoch_next,
+            self.model.params(),
+            extra=extra,
+            topologies=topologies,
+            meta={"resume": resume},
+        )
+
+    def restore_checkpoint(self, manager, step=None) -> int:
+        """Rewind to a saved epoch boundary (newest *valid* checkpoint by
+        default — corrupt ones are quarantined by the scan); ``run()`` then
+        continues from the saved phase and epoch."""
+        from repro.train.trainer import _params_like
+
+        if step is None:
+            step = manager.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoints under {manager.dir}")
+        manifest = manager.read_manifest(step)
+        res = manifest["meta"]["resume"]
+        cfg = self.model.config
+        k = self.wc.n_workers
+        like = _params_like(manifest["shapes"], cfg.n_layers)
+
+        def layer_topo(l, entry) -> ElementTopology:
+            return ElementTopology(
+                cfg.layer_dims[l], cfg.layer_dims[l + 1],
+                entry["rows"], entry["cols"],
+            )
+
+        if res["phase"] == 1:
+            params, extra, topologies, _ = manager.restore(
+                step, like=like, like_extra={"velocity": like}
+            )
+            topo = tuple(
+                layer_topo(l, topologies[f"layer{l}"]).device_arrays()
+                for l in range(cfg.n_layers)
+            )
+            self._p1_state = (
+                jax.tree.map(jnp.asarray, params),
+                SGDState(
+                    velocity=jax.tree.map(jnp.asarray, extra["velocity"]),
+                    step=jnp.asarray(res["opt_step"], jnp.int32),
+                ),
+                topo,
+            )
+            self._phase = 1
+        else:
+            n_saved = int(res.get("n_saved_workers", k))
+            like_extra = {}
+            for wk in range(n_saved):
+                like_extra[f"w{wk}_params"] = like
+                like_extra[f"w{wk}_velocity"] = like
+            params, extra, topologies, _ = manager.restore(
+                step, like=like, like_extra=like_extra
+            )
+            for l in range(cfg.n_layers):
+                self.model.topos[l] = layer_topo(l, topologies[f"layer{l}"])
+            self.model.set_params(jax.tree.map(jnp.asarray, params))
+            workers = []
+            for wk in range(n_saved):
+                workers.append({
+                    "params": jax.tree.map(jnp.asarray, extra[f"w{wk}_params"]),
+                    "opt": SGDState(
+                        velocity=jax.tree.map(
+                            jnp.asarray, extra[f"w{wk}_velocity"]
+                        ),
+                        step=jnp.asarray(res["worker_opt_steps"][wk], jnp.int32),
+                    ),
+                    "topo": tuple(
+                        layer_topo(l, topologies[f"w{wk}_layer{l}"])
+                        .device_arrays()
+                        for l in range(cfg.n_layers)
+                    ),
+                    "key": jnp.asarray(res["worker_keys"][wk], jnp.uint32),
+                })
+            self._p2_workers = workers if workers else None
+            self._phase = 2
+        self.key = jnp.asarray(res["jax_key"], jnp.uint32)
+        self.rng.bit_generator.state = res["numpy_rng"]
+        self.start_epoch = self.epoch_next = int(res["epoch_next"])
+        self.history = {k2: list(v) for k2, v in res["history"].items()}
+        return step
 
     # -- helpers --------------------------------------------------------------
 

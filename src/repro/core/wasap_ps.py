@@ -86,6 +86,12 @@ class AsyncParameterServer:
             "queue_full_retries": 0,
             "grads_dropped": 0,
         }
+        # per-epoch snapshots of the counters above (cumulative), surfaced in
+        # run()'s return under "history" so drops/retries are attributable to
+        # an epoch instead of only a final total
+        self.history: Dict[str, List[int]] = {
+            "epoch": [], **{k: [] for k in self.stats}
+        }
 
         self._grad_fn = self._make_grad_fn()
         self.steps_per_epoch = (
@@ -191,12 +197,19 @@ class AsyncParameterServer:
             )
             self.applied_updates += 1
             if (
-                cfg.evolve
-                and self.applied_updates % self.steps_per_epoch == 0
+                self.applied_updates % self.steps_per_epoch == 0
                 and self.applied_updates < total_updates
             ):
-                self._evolve()
+                if cfg.evolve:
+                    self._evolve()
+                self._snapshot_stats(self.applied_updates // self.steps_per_epoch)
         self.stop_flag.set()
+
+    def _snapshot_stats(self, epoch: int) -> None:
+        with self.lock:
+            self.history["epoch"].append(epoch)
+            for k, v in self.stats.items():
+                self.history[k].append(int(v))
 
     # -- worker loop -----------------------------------------------------------
 
@@ -242,10 +255,14 @@ class AsyncParameterServer:
                         with self.lock:
                             self.stats["queue_full_retries"] += 1
                 if not pushed:
-                    # shutdown raced the retry: the gradient is dropped, but
-                    # accounted for instead of vanishing silently
+                    # shutdown raced the retry. A gradient the completed run
+                    # never needed is surplus pipelined work, not a loss —
+                    # only a gradient the run still required counts as
+                    # dropped, so a clean shutdown reports zero drops.
+                    total = self.cfg.epochs * self.steps_per_epoch
                     with self.lock:
-                        self.stats["grads_dropped"] += 1
+                        if self.applied_updates < total:
+                            self.stats["grads_dropped"] += 1
                     return
             epoch += 1
 
@@ -265,8 +282,12 @@ class AsyncParameterServer:
         self.stop_flag.set()
         for w in workers:
             w.join(timeout=10.0)
+        # final snapshot AFTER workers exit, so drops charged during the
+        # shutdown race are attributed to the last epoch rather than lost
+        self._snapshot_stats(self.cfg.epochs)
         return {
             "seconds": time.perf_counter() - t0,
             **self.stats,
             "topo_version": self.topo_version,
+            "history": self.history,
         }

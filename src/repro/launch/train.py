@@ -12,11 +12,18 @@ plane is exercised end-to-end:
 
   * resume-from-latest checkpoint (exact data-order replay via epoch seeds)
   * async sharded checkpointing every --save-every steps
-  * heartbeat monitor + straggler policy hooks around every step
-  * elastic re-plan: on (simulated) device loss the mesh is rebuilt via
-    plan_elastic_mesh and arrays re-shard on restore
-  * WASAP two-phase schedule for the paper's sparse-FFN variant (topology
-    evolution at epoch boundaries happens host-side between jitted segments)
+  * heartbeat monitor + straggler policy around every step: each step is one
+    monitoring interval (`tick()`); when a host's beats stop arriving it is
+    classified dead, charged misses, and eventually evicted
+  * elastic re-plan: on device loss (evictions shrinking the healthy host
+    count, or the --simulate-failure-at switch) the mesh is re-planned via
+    plan_elastic_mesh and params reload from the latest checkpoint that
+    passes integrity verification (`latest_valid_step`)
+  * transient step faults recover through `retry_step`
+
+The loop body lives in `run_training(DriverConfig)` so tests can drive it
+with injected clocks, suppressed heartbeats (`beat_filter`) and step faults
+(`fault_hook`, e.g. `faultinject.TransientFaultInjector`) — DESIGN.md §8.
 """
 import os
 
@@ -26,6 +33,7 @@ if "XLA_FLAGS" not in os.environ:  # real pods set their own device topology
 import argparse
 import dataclasses
 import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +54,38 @@ from repro.runtime.fault_tolerance import (
     retry_step,
 )
 
+__all__ = ["DriverConfig", "run_training", "main"]
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    arch: str = "qwen1.5-0.5b"
+    steps: int = 20
+    seq: int = 64
+    per_replica_batch: int = 2
+    mesh_data: int = 2
+    mesh_model: int = 1
+    reduced: bool = True
+    lr: float = 1e-3
+    save_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    resume: bool = False
+    simulate_failure_at: int = -1
+    step_retries: int = 2
+    # hosts tracked by the heartbeat monitor; defaults to mesh_data. Tests
+    # set it independently so eviction/elastic logic runs on a 1-device mesh.
+    n_hosts: Optional[int] = None
+    policy: StragglerPolicy = dataclasses.field(default_factory=StragglerPolicy)
+    # --- test/fault-injection hooks (DESIGN.md §8) --------------------------
+    # beat_filter(host_id, step) -> bool: False suppresses that host's beat
+    # this step (an injected straggler / dead host)
+    beat_filter: Optional[Callable[[str, int], bool]] = None
+    # fault_hook(step): raise to inject a transient step fault (recovered by
+    # retry_step) — e.g. faultinject.TransientFaultInjector
+    fault_hook: Optional[Callable[[int], None]] = None
+    clock: Callable[[], float] = time.monotonic
+    verbose: bool = True
+
 
 def synthetic_batch(rng, batch, seq, vocab, prefix=None, d_model=0):
     out = {
@@ -57,6 +97,144 @@ def synthetic_batch(rng, batch, seq, vocab, prefix=None, d_model=0):
             rng.standard_normal((batch, prefix, d_model)), jnp.float32
         )
     return out
+
+
+def run_training(dc: DriverConfig) -> Dict[str, object]:
+    """Run the elastic training loop; returns a history dict with per-step
+    losses, heartbeat/eviction status, elastic replans and recovery events."""
+    log = print if dc.verbose else (lambda *a, **k: None)
+
+    spec = configs.get_spec(dc.arch)
+    cfg = spec.smoke if dc.reduced else spec.config
+    if isinstance(cfg, WhisperConfig):
+        raise SystemExit("use examples/whisper_train.py for the enc-dec driver")
+    model = PatternLM(cfg, seed=0)
+    topo = model.topo_arrays()
+
+    mesh = jax.make_mesh((dc.mesh_data, dc.mesh_model), ("data", "model"))
+    rules = default_rules(
+        mesh, n_experts=cfg.n_experts,
+        batch_size=dc.per_replica_batch * dc.mesh_data,
+    )
+    param_sh = shape_aware_shardings(rules, model.specs, model.params)
+    step_fn, opt = steps_mod.make_train_step(model, lr=dc.lr)
+    opt_state = opt.init(model.params)
+    opt_sh = SGDState(velocity=param_sh, step=rules.sharding(None))
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(param_sh, opt_sh, None, None),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )
+
+    ckpt = CheckpointManager(dc.ckpt_dir, keep_last=3)
+    params = jax.device_put(model.params, param_sh)
+    start_step = 0
+    if dc.resume and ckpt.latest_valid_step() is not None:
+        params, _, _, manifest = ckpt.restore(
+            step=ckpt.latest_valid_step(), like=model.params, shardings=param_sh
+        )
+        start_step = manifest["step"]
+        log(f"[train] resumed from step {start_step}")
+
+    n_hosts = dc.n_hosts if dc.n_hosts is not None else dc.mesh_data
+    hosts = [f"host{i}" for i in range(n_hosts)]
+    monitor = HeartbeatMonitor(hosts, dc.policy, clock=dc.clock)
+    devices_per_host = max(1, jax.device_count() // n_hosts)
+    rng = np.random.default_rng(1234 + start_step)  # replayable stream
+    batch_size = dc.per_replica_batch * dc.mesh_data
+
+    history: Dict[str, List] = {
+        "loss": [], "healthy": [], "status": [],
+        "replans": [], "recoveries": [], "resumed_from": start_step,
+    }
+
+    def replan_and_restore(reason: str):
+        """Device loss: shrink the mesh plan to the healthy hosts and reload
+        from the newest checkpoint that passes verification."""
+        healthy = max(1, monitor.healthy_count) * devices_per_host
+        plan = plan_elastic_mesh(
+            healthy, model_axis=dc.mesh_model,
+            per_replica_batch=dc.per_replica_batch, min_data=1,
+        )
+        log(f"[train] {reason}: {plan.note}; restoring latest valid checkpoint")
+        ckpt.wait()
+        restored = None
+        step = ckpt.latest_valid_step()
+        if step is not None:
+            p, _, _, manifest = ckpt.restore(
+                step=step, like=model.params, shardings=param_sh
+            )
+            restored = manifest["step"]
+        else:
+            p = None  # no durable state yet: keep in-memory params
+        history["replans"].append(
+            {"reason": reason, "plan": plan.note, "restored_step": restored}
+        )
+        return p
+
+    t0 = time.perf_counter()
+    known_evicted: set = set()
+    with mesh, logical_axis_rules(rules):
+        for step in range(start_step, dc.steps):
+            batch = synthetic_batch(
+                rng, batch_size, dc.seq, cfg.vocab,
+                prefix=cfg.prefix_len if spec.family == "vlm" else 0,
+                d_model=cfg.d_model,
+            )
+            if step == dc.simulate_failure_at:
+                p = replan_and_restore("simulated device loss")
+                if p is not None:
+                    params = p
+
+            def do_step():
+                if dc.fault_hook is not None:
+                    dc.fault_hook(step)
+                return jitted(params, opt_state, batch, topo)
+
+            def on_failure(attempt, err):
+                history["recoveries"].append(
+                    {"step": step, "attempt": attempt, "error": repr(err)}
+                )
+
+            params, opt_state, metrics = retry_step(
+                do_step, retries=dc.step_retries,
+                backoff_s=0.0, on_failure=on_failure,
+            )
+
+            # one heartbeat interval per step: live hosts beat (unless an
+            # injected fault suppresses them), then the window advances
+            for w in hosts:
+                if w in monitor.evicted:
+                    continue
+                if dc.beat_filter is None or dc.beat_filter(w, step):
+                    monitor.beat(w)
+            status = monitor.tick()
+            n_healthy = monitor.healthy_count
+            history["status"].append(status)
+            history["healthy"].append(n_healthy)
+            history["loss"].append(float(metrics["loss"]))
+            newly_evicted = monitor.evicted - known_evicted
+            if newly_evicted and n_healthy:
+                known_evicted |= newly_evicted
+                p = replan_and_restore(
+                    f"evicted {sorted(newly_evicted)}"
+                )
+                if p is not None:
+                    params = p
+
+            if (step + 1) % dc.save_every == 0 or step + 1 == dc.steps:
+                ckpt.save(step + 1, params, meta={"arch": dc.arch})
+            if step % 5 == 0:
+                log(
+                    f"[train] step {step} loss={float(metrics['loss']):.4f} "
+                    f"healthy={n_healthy}/{n_hosts} "
+                    f"({time.perf_counter() - t0:.1f}s)"
+                )
+    ckpt.wait()
+    log(f"[train] done: {dc.steps - start_step} steps, "
+        f"final loss {history['loss'][-1]:.4f}")
+    return history
 
 
 def main():
@@ -74,82 +252,16 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--simulate-failure-at", type=int, default=-1)
     args = ap.parse_args()
-
-    spec = configs.get_spec(args.arch)
-    cfg = spec.smoke if args.reduced else spec.config
-    if isinstance(cfg, WhisperConfig):
-        raise SystemExit("use examples/whisper_train.py for the enc-dec driver")
-    model = PatternLM(cfg, seed=0)
-    topo = model.topo_arrays()
-
-    mesh = jax.make_mesh((args.mesh_data, args.mesh_model), ("data", "model"))
-    rules = default_rules(
-        mesh, n_experts=cfg.n_experts,
-        batch_size=args.per_replica_batch * args.mesh_data,
+    run_training(
+        DriverConfig(
+            arch=args.arch, steps=args.steps, seq=args.seq,
+            per_replica_batch=args.per_replica_batch,
+            mesh_data=args.mesh_data, mesh_model=args.mesh_model,
+            reduced=args.reduced, lr=args.lr, save_every=args.save_every,
+            ckpt_dir=args.ckpt_dir, resume=args.resume,
+            simulate_failure_at=args.simulate_failure_at,
+        )
     )
-    param_sh = shape_aware_shardings(rules, model.specs, model.params)
-    step_fn, opt = steps_mod.make_train_step(model, lr=args.lr)
-    opt_state = opt.init(model.params)
-    opt_sh = SGDState(velocity=param_sh, step=rules.sharding(None))
-    jitted = jax.jit(
-        step_fn,
-        in_shardings=(param_sh, opt_sh, None, None),
-        out_shardings=(param_sh, opt_sh, None),
-        donate_argnums=(0, 1),
-    )
-
-    ckpt = CheckpointManager(args.ckpt_dir, keep_last=3)
-    params = jax.device_put(model.params, param_sh)
-    start_step = 0
-    if args.resume and ckpt.latest_step() is not None:
-        params, _, _, manifest = ckpt.restore(like=model.params, shardings=param_sh)
-        start_step = manifest["step"]
-        print(f"[train] resumed from step {start_step}")
-
-    monitor = HeartbeatMonitor(
-        [f"host{i}" for i in range(args.mesh_data)], StragglerPolicy()
-    )
-    rng = np.random.default_rng(1234 + start_step)  # replayable stream
-    batch_size = args.per_replica_batch * args.mesh_data
-
-    t0 = time.perf_counter()
-    with mesh, logical_axis_rules(rules):
-        for step in range(start_step, args.steps):
-            batch = synthetic_batch(
-                rng, batch_size, args.seq, cfg.vocab,
-                prefix=cfg.prefix_len if spec.family == "vlm" else 0,
-                d_model=cfg.d_model,
-            )
-            if step == args.simulate_failure_at:
-                print("[train] simulating device loss -> elastic re-plan")
-                plan = plan_elastic_mesh(
-                    jax.device_count() // 2,
-                    model_axis=args.mesh_model,
-                    per_replica_batch=args.per_replica_batch,
-                )
-                print(f"[train] {plan.note}; restoring latest checkpoint")
-                ckpt.wait()
-                params, _, _, manifest = ckpt.restore(
-                    like=model.params, shardings=param_sh
-                )
-
-            def do_step():
-                return jitted(params, opt_state, batch, topo)
-
-            params, opt_state, metrics = retry_step(do_step, retries=2)
-            for w in monitor.last_beat:
-                monitor.beat(w)
-            if (step + 1) % args.save_every == 0 or step + 1 == args.steps:
-                ckpt.save(step + 1, params, meta={"arch": args.arch})
-            if step % 5 == 0:
-                print(
-                    f"[train] step {step} loss={float(metrics['loss']):.4f} "
-                    f"healthy={monitor.healthy_count}/{args.mesh_data} "
-                    f"({time.perf_counter() - t0:.1f}s)"
-                )
-    ckpt.wait()
-    print(f"[train] done: {args.steps - start_step} steps, "
-          f"final loss {float(metrics['loss']):.4f}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,12 @@
-"""Fault tolerance & elasticity for multi-pod training (DESIGN.md §7,
-"Checkpointing & fault tolerance at XL scale"; checkpoint-restore mechanics
-are DESIGN.md §5).
+"""Fault tolerance & elasticity for multi-pod training (failure model,
+recovery protocol and trajectory-equivalence argument: DESIGN.md §8,
+"Failure model & recovery"; checkpoint-restore mechanics are DESIGN.md §5).
 
 Pieces:
-  * HeartbeatMonitor — per-worker liveness with deadlines; classifies nodes
-    as healthy / straggling / dead from heartbeat age (driver-side; in a real
-    deployment heartbeats arrive over the coordination service).
+  * HeartbeatMonitor — per-worker liveness with deadlines; `classify()` is a
+    pure read of heartbeat ages, `tick()` advances the miss window and
+    performs evictions (driver-side; in a real deployment heartbeats arrive
+    over the coordination service).
   * StragglerPolicy — WASAP-inspired mitigation: a straggler's contribution
     is *stale but valid* (RetainValidUpdates) rather than blocking the sync
     point; beyond `evict_after` missed beats the worker is evicted and the
@@ -18,6 +19,9 @@ Pieces:
   * retry_step — transient-failure wrapper (preemption/ICI flap): retries a
     step function with exponential backoff, reloading from the latest
     checkpoint on persistent failure.
+
+Fault injection for these paths lives in `runtime/faultinject.py`; the
+crash-resume loop that consumes them is `runtime/supervisor.py`.
 """
 from __future__ import annotations
 
@@ -58,6 +62,9 @@ class HeartbeatMonitor:
         self.misses[worker_id] = 0
 
     def classify(self) -> Dict[str, str]:
+        """Pure read: worker -> healthy/straggling/dead/evicted from current
+        heartbeat ages. Safe to poll at any frequency — state only advances
+        via `beat()` and `tick()`."""
         now = self.clock()
         out = {}
         for w, t in self.last_beat.items():
@@ -66,17 +73,30 @@ class HeartbeatMonitor:
                 continue
             age = now - t
             if age > self.policy.hard_deadline_s:
-                self.misses[w] += 1
-                self.last_beat[w] = now  # restart the window
-                if self.misses[w] >= self.policy.evict_after:
-                    self.evicted.add(w)
-                    out[w] = "evicted"
-                else:
-                    out[w] = "dead"
+                out[w] = "dead"
             elif age > self.policy.soft_deadline_s:
                 out[w] = "straggling"
             else:
                 out[w] = "healthy"
+        return out
+
+    def tick(self) -> Dict[str, str]:
+        """One monitoring interval: charge a miss to every worker past the
+        hard deadline, restart its window, evict at `evict_after` consecutive
+        misses. Returns the classification as of this tick ("dead" for a
+        worker whose miss was just charged, "evicted" once the count trips).
+        Call once per poll cycle; `classify()` between ticks never inflates
+        miss counts."""
+        now = self.clock()
+        out = self.classify()
+        for w, status in out.items():
+            if status != "dead":
+                continue
+            self.misses[w] += 1
+            self.last_beat[w] = now  # restart the window
+            if self.misses[w] >= self.policy.evict_after:
+                self.evicted.add(w)
+                out[w] = "evicted"
         return out
 
     @property

@@ -1,0 +1,226 @@
+"""Crash-recovery run loop for the resumable trainers (DESIGN.md §8).
+
+``run_supervised(trainer, config)`` wraps any trainer exposing the resume
+surface (``SequentialTrainer``, ``XLTrainer``; WASAP via its own phase-wise
+checkpointing) with the recovery protocol:
+
+  1. **Restore** — if the checkpoint dir holds any step dirs, rewind the
+     trainer to the newest checkpoint that passes integrity verification
+     (``CheckpointManager.latest_valid_step`` — corrupt/partial ones are
+     quarantined, the scan falls back past them).
+  2. **Checkpoint on cadence** — every ``save_every_epochs`` epoch
+     boundaries (and always at the final epoch), the trainer's full resume
+     state is snapshotted; the write is atomic, so a kill mid-save leaves
+     only a tmp dir the next manager init sweeps.
+  3. **Retry transients** — steps run under ``fault_tolerance.retry_step``
+     (``step_retries`` attempts with backoff) so a transient failure costs a
+     retry, not the run.
+  4. **Report progress** — ``progress_file`` (atomic tmp+rename) carries
+     "gstep epoch" for an external watcher; ``faultinject.wait_and_kill``
+     polls it to SIGKILL the process at a deterministic step.
+
+Trajectory equivalence (the §8 contract): because a checkpoint carries every
+source of randomness (data-order seed + epoch counter, jax key, numpy
+bit-generator state) plus params/velocity/topology, a kill at any step
+resumes from the last epoch boundary and replays the identical trajectory —
+bit-exact on the in-core paths, and the streamed XL path round-trips float32
+exactly too. Work lost per kill is bounded by the checkpoint cadence.
+
+The module is runnable (``python -m repro.runtime.supervisor``) as a small
+deterministic SET-MLP training driver: the subprocess target for the
+resilience tests, the CI smoke job and the recovery benchmark. It seeds its
+own synthetic dataset, so two invocations with the same flags train the
+same run — one uninterrupted, one killed and resumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["SupervisorConfig", "run_supervised", "write_progress"]
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    checkpoint_dir: str
+    save_every_epochs: int = 1
+    keep_last: int = 3
+    async_write: bool = False      # sync writes: a published step is durable
+    step_retries: int = 2
+    retry_backoff_s: float = 0.0
+    progress_file: Optional[str] = None
+
+
+def write_progress(path: Optional[str], gstep: int, epoch: int) -> None:
+    """Atomic "gstep epoch" progress record — readable mid-kill."""
+    if path is None:
+        return
+    p = Path(path)
+    tmp = p.with_suffix(p.suffix + ".tmp")
+    tmp.write_text(f"{gstep} {epoch}\n")
+    os.replace(tmp, p)
+
+
+def run_supervised(trainer, config: SupervisorConfig) -> Dict:
+    """Run a resumable trainer under the recovery protocol. Returns
+    ``{"history", "resumed_from_step", "manager"}``; call it again on a fresh
+    trainer after a crash and it continues from the last valid checkpoint."""
+    manager = CheckpointManager(
+        config.checkpoint_dir,
+        keep_last=config.keep_last,
+        async_write=config.async_write,
+    )
+    resumed_from: Optional[int] = None
+    if manager.all_steps():
+        try:
+            resumed_from = trainer.restore_checkpoint(manager)
+        except FileNotFoundError:
+            pass  # every existing checkpoint was corrupt: cold start
+    trainer.step_retries = config.step_retries
+    trainer.retry_backoff_s = config.retry_backoff_s
+
+    user_fault_hook = trainer.fault_hook
+    user_epoch_hook = trainer.epoch_end_hook
+
+    def on_step(gstep):
+        # progress first: the watcher must see the step even if the
+        # injected fault kills us right after
+        write_progress(config.progress_file, gstep, trainer.epoch_next)
+        if user_fault_hook is not None:
+            user_fault_hook(gstep)
+
+    def on_epoch_end(tr, epoch):
+        last = epoch == tr.tc.epochs - 1
+        if (epoch + 1) % config.save_every_epochs == 0 or last:
+            tr.save_checkpoint(manager)
+        write_progress(config.progress_file, tr.gstep, tr.epoch_next)
+        if user_epoch_hook is not None:
+            user_epoch_hook(tr, epoch)
+
+    trainer.fault_hook = on_step
+    trainer.epoch_end_hook = on_epoch_end
+    try:
+        history = trainer.run()
+    finally:
+        trainer.fault_hook = user_fault_hook
+        trainer.epoch_end_hook = user_epoch_hook
+    manager.wait()
+    return {
+        "history": history,
+        "resumed_from_step": resumed_from,
+        "manager": manager,
+    }
+
+
+# ---------------------------------------------------------------------------
+# subprocess driver — resilience tests / CI smoke / recovery benchmark
+# ---------------------------------------------------------------------------
+
+
+def _build_trainer(args):
+    import numpy as np
+
+    from repro.data.synthetic import Dataset, make_classification
+    from repro.models.mlp import SparseMLP, SparseMLPConfig
+    from repro.train.trainer import SequentialTrainer, TrainerConfig
+
+    rng = np.random.default_rng(args.data_seed)
+    x, y = make_classification(
+        args.n_train + args.n_test, args.n_features,
+        n_informative=8, n_redundant=8, n_classes=args.n_classes, rng=rng,
+    )
+    data = Dataset(
+        "supervised-smoke",
+        x[: args.n_train].astype(np.float32), y[: args.n_train],
+        x[args.n_train :].astype(np.float32), y[args.n_train :],
+        args.n_classes,
+    )
+    cfg = SparseMLPConfig(
+        layer_dims=(args.n_features, 64, 64, args.n_classes),
+        epsilon=8, dropout=0.2,
+    )
+    tc = TrainerConfig(
+        epochs=args.epochs, batch_size=args.batch_size, evolve=True,
+        seed=args.seed, fused_epochs=not args.per_batch,
+    )
+    return SequentialTrainer(SparseMLP(cfg, seed=args.seed), data, tc)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Supervised (crash-recoverable) SET-MLP training run"
+    )
+    ap.add_argument("--ckpt", required=True, help="checkpoint directory")
+    ap.add_argument("--out", help="write final history JSON here")
+    ap.add_argument("--progress-file", default=None)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--data-seed", type=int, default=0)
+    ap.add_argument("--n-train", type=int, default=512)
+    ap.add_argument("--n-test", type=int, default=128)
+    ap.add_argument("--n-features", type=int, default=32)
+    ap.add_argument("--n-classes", type=int, default=5)
+    ap.add_argument("--save-every-epochs", type=int, default=1)
+    ap.add_argument(
+        "--per-batch", action="store_true",
+        help="per-batch stepping (fault hook fires every minibatch, so a "
+        "kill lands genuinely mid-epoch)",
+    )
+    ap.add_argument(
+        "--kill-at-step", type=int, default=None,
+        help="self-SIGKILL when the global step counter reaches this value",
+    )
+    ap.add_argument(
+        "--transient-at-step", type=int, action="append", default=None,
+        help="inject a transient step failure (recovered by retry_step)",
+    )
+    args = ap.parse_args(argv)
+
+    trainer = _build_trainer(args)
+
+    hooks = []
+    if args.kill_at_step is not None:
+        from repro.runtime.faultinject import KillSwitch
+
+        hooks.append(KillSwitch(args.kill_at_step))
+    injector = None
+    if args.transient_at_step:
+        from repro.runtime.faultinject import TransientFaultInjector
+
+        injector = TransientFaultInjector(args.transient_at_step)
+        hooks.append(injector)
+    if hooks:
+        def fault_hook(gstep):
+            for h in hooks:
+                h(gstep)
+
+        trainer.fault_hook = fault_hook
+
+    result = run_supervised(
+        trainer,
+        SupervisorConfig(
+            checkpoint_dir=args.ckpt,
+            save_every_epochs=args.save_every_epochs,
+            progress_file=args.progress_file,
+        ),
+    )
+    if args.out:
+        payload = {
+            "history": result["history"],
+            "resumed_from_step": result["resumed_from_step"],
+            "transients_raised": injector.raised if injector else 0,
+        }
+        Path(args.out).write_text(json.dumps(payload))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -60,7 +60,8 @@ from repro.data.loader import ShardedLoader
 from repro.data.synthetic import Dataset
 from repro.launch.steps import make_mlp_step_core, make_mlp_train_step, scan_segment
 from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
-from repro.optim.sgd import MomentumSGD, replace_values_velocity
+from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
+from repro.runtime.fault_tolerance import retry_step
 
 __all__ = [
     "TrainerConfig",
@@ -151,6 +152,21 @@ def evaluate(
     return correct / x.shape[0]
 
 
+def _params_like(shapes: Dict, n_layers: int):
+    """Zero pytree in the trainer's params structure with the *checkpoint's*
+    leaf shapes — topology evolution means the live model's shapes need not
+    match the saved ones, so restore targets come from the manifest."""
+
+    def leaf(name):
+        shape, dtype = shapes[name]
+        return np.zeros(tuple(shape), np.dtype(dtype))
+
+    return {
+        "values": tuple(leaf(f"values__{l}") for l in range(n_layers)),
+        "biases": tuple(leaf(f"biases__{l}") for l in range(n_layers)),
+    }
+
+
 class SequentialTrainer:
     """Paper §2.2 protocol (1 worker). History mirrors Table 2 columns."""
 
@@ -169,6 +185,16 @@ class SequentialTrainer:
             "epoch_seconds": [],
         }
         self.start_params = model.n_params
+        # -- resume / fault-tolerance surface (DESIGN.md §8) ----------------
+        # counters advance as the run progresses; restore_checkpoint rewinds
+        # them to an epoch boundary and run() continues from there.
+        self.start_epoch = 0          # first epoch run() will execute
+        self.epoch_next = 0           # next epoch at the last boundary
+        self.gstep = 0                # global minibatch counter
+        self.fault_hook: Optional[Callable[[int], None]] = None
+        self.epoch_end_hook: Optional[Callable] = None  # hook(trainer, epoch)
+        self.step_retries = 0         # retry_step wrap when > 0
+        self.retry_backoff_s = 0.0
 
     # -- host-side topology mutations --------------------------------------
 
@@ -314,6 +340,85 @@ class SequentialTrainer:
             )
         return False
 
+    # -- resume (DESIGN.md §8) ----------------------------------------------
+
+    def save_checkpoint(self, manager) -> None:
+        """Epoch-boundary snapshot carrying the *full* resume state: params,
+        velocity, topology, epoch/step counters, both PRNG streams and the
+        history so far. Restoring it and running the remaining epochs yields
+        the same trajectory as the uninterrupted run, bit-exactly — every
+        source of randomness (data order, dropout/evolution keys, regrowth
+        draws) is derived from state saved here."""
+        model, cfg = self.model, self.model.config
+        topologies = None
+        if cfg.impl in ("element", "block"):
+            topologies = {
+                f"layer{l}": {
+                    "rows": np.asarray(model.topos[l].rows),
+                    "cols": np.asarray(model.topos[l].cols),
+                }
+                for l in range(cfg.n_layers)
+            }
+        meta = {
+            "kind": "sequential",
+            "resume": {
+                "epoch_next": int(self.epoch_next),
+                "gstep": int(self.gstep),
+                "jax_key": np.asarray(self.key).tolist(),
+                "numpy_rng": self.rng.bit_generator.state,
+                "opt_step": int(self.opt_state.step),
+                "history": self.history,
+                "seed": self.tc.seed,
+            },
+        }
+        manager.save(
+            self.gstep,
+            model.params(),
+            extra={"velocity": self.opt_state.velocity},
+            topologies=topologies,
+            meta=meta,
+        )
+
+    def restore_checkpoint(self, manager, step: Optional[int] = None) -> int:
+        """Rewind the trainer to a saved epoch boundary; defaults to the
+        newest checkpoint that passes integrity verification (corrupt ones
+        are quarantined by the scan). Returns the restored step."""
+        if step is None:
+            step = manager.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoints under {manager.dir}")
+        manifest = manager.read_manifest(step)
+        res = manifest["meta"]["resume"]
+        cfg = self.model.config
+        like = _params_like(manifest["shapes"], cfg.n_layers)
+        params, extra, topologies, _ = manager.restore(
+            step, like=like, like_extra={"velocity": like}
+        )
+        # topology first: the restored value shapes follow the saved topology
+        # (SET keeps nnz constant but importance pruning shrinks it)
+        if cfg.impl in ("element", "block"):
+            for l in range(cfg.n_layers):
+                t = topologies[f"layer{l}"]
+                n_in, n_out = cfg.layer_dims[l], cfg.layer_dims[l + 1]
+                if cfg.impl == "element":
+                    self.model.topos[l] = ElementTopology(
+                        n_in, n_out, t["rows"], t["cols"]
+                    )
+                else:
+                    bm = BlockMeta(n_in, n_out, cfg.block_m, cfg.block_n)
+                    self.model.topos[l] = BlockTopology(bm, t["rows"], t["cols"])
+        self.model.set_params(jax.tree.map(jnp.asarray, params))
+        self.opt_state = SGDState(
+            velocity=jax.tree.map(jnp.asarray, extra["velocity"]),
+            step=jnp.asarray(res["opt_step"], jnp.int32),
+        )
+        self.key = jnp.asarray(res["jax_key"], jnp.uint32)
+        self.rng.bit_generator.state = res["numpy_rng"]
+        self.start_epoch = self.epoch_next = int(res["epoch_next"])
+        self.gstep = int(res["gstep"])
+        self.history = {k: list(v) for k, v in res["history"].items()}
+        return step
+
     # -- main loop -----------------------------------------------------------
 
     def run(self, log_every: int = 0) -> Dict[str, List]:
@@ -344,8 +449,8 @@ class SequentialTrainer:
             and self._supports_device_evolution()
         )
         topo_dirty = False  # device topology has diverged from model.topos
-        gstep = 0
-        for epoch in range(tc.epochs):
+        gstep = self.gstep
+        for epoch in range(self.start_epoch, tc.epochs):
             t0 = time.perf_counter()
             perm = jnp.asarray(
                 loader.epoch_order(epoch).astype(np.int32).reshape(
@@ -355,9 +460,25 @@ class SequentialTrainer:
             lrs = jnp.asarray(
                 [float(lr_fn(gstep + i)) for i in range(steps)], jnp.float32
             )
-            params, opt_state, self.key, losses = self._segment(
-                params, opt_state, topo, x_all, y_all, perm, lrs, self.key
-            )
+
+            def run_segment():
+                # the fault hook (kill switch / transient injector) fires
+                # before the device call, so a retry re-enters cleanly —
+                # the segment itself is pure in its inputs
+                if self.fault_hook is not None:
+                    self.fault_hook(gstep)
+                return self._segment(
+                    params, opt_state, topo, x_all, y_all, perm, lrs, self.key
+                )
+
+            if self.step_retries:
+                params, opt_state, self.key, losses = retry_step(
+                    run_segment,
+                    retries=self.step_retries,
+                    backoff_s=self.retry_backoff_s,
+                )
+            else:
+                params, opt_state, self.key, losses = run_segment()
             gstep += steps
             model.set_params(params)
             self.opt_state = opt_state
@@ -408,6 +529,15 @@ class SequentialTrainer:
                     f"epoch {epoch:4d} loss {self.history['train_loss'][-1]:.4f} "
                     f"acc {acc:.4f} params {model.n_params}"
                 )
+            self.gstep = gstep
+            self.epoch_next = epoch + 1
+            if self.epoch_end_hook is not None:
+                # checkpointing reads the host mirror — pay the sync only
+                # when a hook (i.e. the supervisor) is attached
+                if topo_dirty:
+                    self._sync_topology_to_host(topo)
+                    topo_dirty = False
+                self.epoch_end_hook(self, epoch)
         if topo_dirty:
             self._sync_topology_to_host(topo)
         return self.history
@@ -418,23 +548,39 @@ class SequentialTrainer:
             self.data.x_train, self.data.y_train, tc.batch_size, seed=tc.seed
         )
         lr_fn = tc.lr_schedule or (lambda step: tc.lr)
-        gstep = 0
-        for epoch in range(tc.epochs):
+        gstep = self.gstep
+        for epoch in range(self.start_epoch, tc.epochs):
             t0 = time.perf_counter()
             params = model.params()
             topo = model.topo_arrays()
             losses = []
             for xb, yb in loader.epoch(epoch):
                 self.key, sub = jax.random.split(self.key)
-                params, self.opt_state, loss = self._step(
-                    params,
-                    self.opt_state,
-                    topo,
-                    jnp.asarray(xb),
-                    jnp.asarray(yb),
-                    jnp.asarray(lr_fn(gstep), jnp.float32),
-                    sub,
-                )
+
+                def do_step():
+                    # hook first: a kill/transient fires before the pure
+                    # jitted step, so retry_step re-enters with identical
+                    # inputs (sub is split once, outside)
+                    if self.fault_hook is not None:
+                        self.fault_hook(gstep)
+                    return self._step(
+                        params,
+                        self.opt_state,
+                        topo,
+                        jnp.asarray(xb),
+                        jnp.asarray(yb),
+                        jnp.asarray(lr_fn(gstep), jnp.float32),
+                        sub,
+                    )
+
+                if self.step_retries:
+                    params, self.opt_state, loss = retry_step(
+                        do_step,
+                        retries=self.step_retries,
+                        backoff_s=self.retry_backoff_s,
+                    )
+                else:
+                    params, self.opt_state, loss = do_step()
                 losses.append(loss)
                 gstep += 1
             model.set_params(params)
@@ -458,6 +604,10 @@ class SequentialTrainer:
                     f"epoch {epoch:4d} loss {self.history['train_loss'][-1]:.4f} "
                     f"acc {acc:.4f} params {model.n_params}"
                 )
+            self.gstep = gstep
+            self.epoch_next = epoch + 1
+            if self.epoch_end_hook is not None:
+                self.epoch_end_hook(self, epoch)
         return self.history
 
 
@@ -513,6 +663,15 @@ class XLTrainer:
             "epoch": [], "train_loss": [], "test_acc": [], "n_params": [],
             "epoch_seconds": [],
         }
+        # resume / fault-tolerance surface — same contract as
+        # SequentialTrainer (DESIGN.md §8); streamed state instead of pytrees
+        self.start_epoch = 0
+        self.epoch_next = 0
+        self.gstep = 0
+        self.fault_hook: Optional[Callable[[int], None]] = None
+        self.epoch_end_hook: Optional[Callable] = None
+        self.step_retries = 0
+        self.retry_backoff_s = 0.0
 
     @property
     def n_params(self) -> int:
@@ -526,11 +685,79 @@ class XLTrainer:
             correct += int((np.argmax(logits, -1) == y[s : s + b]).sum())
         return correct / x.shape[0]
 
-    def save_checkpoint(self, manager, step: int) -> None:
+    def save_checkpoint(self, manager, step: Optional[int] = None) -> None:
         """Streamed shard-group save — checkpoints of models larger than
         host RAM headroom write incrementally (CheckpointManager
-        ``save_streamed``)."""
-        self.state.save(manager, step, extra_meta={"plan": self.plan.to_json()})
+        ``save_streamed``). Carries the trainer's resume state so
+        :meth:`from_checkpoint` continues the run (DESIGN.md §8)."""
+        self.state.save(
+            manager,
+            self.gstep if step is None else step,
+            extra_meta={
+                "plan": self.plan.to_json(),
+                "resume": {
+                    "epoch_next": int(self.epoch_next),
+                    "gstep": int(self.gstep),
+                    "numpy_rng": self.rng.bit_generator.state,
+                    "history": self.history,
+                    "seed": self.tc.seed,
+                },
+            },
+        )
+
+    def restore_checkpoint(
+        self, manager, step: Optional[int] = None, spool_dir: Optional[str] = None
+    ) -> int:
+        """Rewind to a saved epoch boundary: streamed-restore the host state
+        in place (fresh StreamExecutor) and rewind the counters so ``run()``
+        continues the interrupted trajectory. Defaults to the newest *valid*
+        checkpoint (corrupt ones are quarantined by the backward scan).
+        Same contract as ``SequentialTrainer.restore_checkpoint``."""
+        from repro.xl import StreamExecutor, XLModelState
+
+        if step is None:
+            step = manager.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoints under {manager.dir}")
+        self.state = XLModelState.restore(
+            manager, self.plan, step, spool_dir=spool_dir
+        )
+        self.executor = StreamExecutor(self.state)
+        res = manager.read_manifest(step)["meta"].get("resume")
+        if res:
+            self.start_epoch = self.epoch_next = int(res["epoch_next"])
+            self.gstep = int(res["gstep"])
+            self.rng.bit_generator.state = res["numpy_rng"]
+            self.history = {k: list(v) for k, v in res["history"].items()}
+        return step
+
+    @classmethod
+    def from_checkpoint(
+        cls,
+        manager,
+        data: Dataset,
+        tc: TrainerConfig,
+        plan,
+        step: Optional[int] = None,
+        spool_dir: Optional[str] = None,
+    ) -> "XLTrainer":
+        """Build a fresh trainer directly from a checkpoint (no in-core
+        model required — the streamed state is the source of truth)."""
+        from repro.xl import XLModelState
+
+        if step is None:
+            step = manager.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoints under {manager.dir}")
+        state = XLModelState.restore(manager, plan, step, spool_dir=spool_dir)
+        trainer = cls(state, data, tc, plan)
+        res = manager.read_manifest(step)["meta"].get("resume")
+        if res:
+            trainer.start_epoch = trainer.epoch_next = int(res["epoch_next"])
+            trainer.gstep = int(res["gstep"])
+            trainer.rng.bit_generator.state = res["numpy_rng"]
+            trainer.history = {k: list(v) for k, v in res["history"].items()}
+        return trainer
 
     def run(self, log_every: int = 0) -> Dict[str, List]:
         from repro.xl import evolve_model_streamed
@@ -543,17 +770,32 @@ class XLTrainer:
         if steps == 0:
             raise ValueError("batch_size larger than the training shard")
         lr_fn = tc.lr_schedule or (lambda step: tc.lr)
-        gstep = 0
-        for epoch in range(tc.epochs):
+        gstep = self.gstep
+        for epoch in range(self.start_epoch, tc.epochs):
             t0 = time.perf_counter()
             losses = []
             for xb, yb in loader.epoch(epoch):
-                losses.append(
-                    self.executor.train_step(
+
+                def do_step():
+                    # hook fires before the streamed step mutates host state,
+                    # so a transient raised here retries cleanly
+                    if self.fault_hook is not None:
+                        self.fault_hook(gstep)
+                    return self.executor.train_step(
                         xb, yb, float(lr_fn(gstep)),
                         momentum=tc.momentum, weight_decay=tc.weight_decay,
                     )
-                )
+
+                if self.step_retries:
+                    losses.append(
+                        retry_step(
+                            do_step,
+                            retries=self.step_retries,
+                            backoff_s=self.retry_backoff_s,
+                        )
+                    )
+                else:
+                    losses.append(do_step())
                 gstep += 1
             if epoch < tc.epochs - 1 and tc.evolve:
                 evolve_model_streamed(self.state, tc.zeta, self.rng)
@@ -573,4 +815,8 @@ class XLTrainer:
                     f"acc {acc:.4f} params {self.n_params} "
                     f"peak_dev {self.executor.measured_peak_bytes}"
                 )
+            self.gstep = gstep
+            self.epoch_next = epoch + 1
+            if self.epoch_end_hook is not None:
+                self.epoch_end_hook(self, epoch)
         return self.history

@@ -75,9 +75,15 @@ def test_heartbeat_classification_and_eviction():
     assert mon.classify() == {"a": "healthy", "b": "straggling"}
     clock[0] = 200.0   # b misses hard deadline (1st)
     mon.beat("a")
-    assert mon.classify()["b"] == "dead"
+    # classify() is pure: polling it repeatedly never charges misses
+    for _ in range(5):
+        assert mon.classify()["b"] == "dead"
+    assert mon.misses["b"] == 0
+    assert mon.tick()["b"] == "dead"          # miss charged on the tick
+    assert mon.misses["b"] == 1
     clock[0] = 400.0   # 2nd hard miss -> evicted
     mon.beat("a")
+    assert mon.tick()["b"] == "evicted"
     assert mon.classify()["b"] == "evicted"
     assert mon.healthy_count == 1
 

@@ -136,3 +136,86 @@ def test_sharded_train_step_on_host_mesh(mesh):
         params = jax.device_put(model.params, param_sh)
         params, opt_state, metrics = jitted(params, opt_state, batch, topo)
     assert np.isfinite(float(metrics["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# elastic training loop (launch/train.py run_training) under fault injection
+# ---------------------------------------------------------------------------
+
+
+def _driver_config(tmp_path, **kw):
+    from repro.launch.train import DriverConfig
+
+    base = dict(
+        steps=8, seq=16, per_replica_batch=2, mesh_data=1, mesh_model=1,
+        save_every=2, ckpt_dir=str(tmp_path), verbose=False,
+    )
+    base.update(kw)
+    return DriverConfig(**base)
+
+
+def test_run_training_elastic_eviction_replans_and_restores(tmp_path):
+    """Suppressed heartbeats -> straggling -> dead (miss charged) -> evicted
+    -> plan_elastic_mesh replan + restore from the latest valid checkpoint,
+    while a transient step fault is absorbed by retry_step. The whole loop
+    runs on the 1-device mesh (n_hosts decouples the monitor from it)."""
+    from repro.launch.train import run_training
+    from repro.runtime.fault_tolerance import StragglerPolicy
+    from repro.runtime.faultinject import TransientFaultInjector
+
+    clock = [0.0]
+    injector = TransientFaultInjector([4])
+
+    def fault_hook(step):
+        clock[0] = step * 10.0  # one 10s heartbeat interval per step
+        injector(step)
+
+    dc = _driver_config(
+        tmp_path,
+        n_hosts=2,
+        policy=StragglerPolicy(
+            soft_deadline_s=5.0, hard_deadline_s=15.0, evict_after=2
+        ),
+        clock=lambda: clock[0],
+        # host1 stops beating from step 2 on: ages 10s/interval, so it is
+        # straggling at step 2, dead (miss 1) at 3, dead (miss 2) at 5
+        beat_filter=lambda host, step: not (host == "host1" and step >= 2),
+        fault_hook=fault_hook,
+    )
+    hist = run_training(dc)
+
+    assert len(hist["loss"]) == dc.steps
+    assert all(np.isfinite(l) for l in hist["loss"])
+    # the injected transient fault was raised once and retried through
+    assert injector.raised == 1
+    assert [r["step"] for r in hist["recoveries"]] == [4]
+    # host1's trajectory: straggling -> dead -> evicted, never blocking
+    assert hist["status"][2]["host1"] == "straggling"
+    assert hist["status"][3]["host1"] == "dead"
+    assert hist["status"][5]["host1"] == "evicted"
+    assert hist["healthy"][5] == 1
+    # eviction triggered exactly one elastic replan (not one per later step)
+    assert len(hist["replans"]) == 1
+    replan = hist["replans"][0]
+    assert "host1" in replan["reason"]
+    assert "elastic" in replan["plan"]
+    # recovery restored the newest checkpoint published before the eviction
+    assert replan["restored_step"] == 4
+
+
+def test_run_training_resume_skips_corrupt_checkpoint(tmp_path):
+    """--resume restores from latest_valid_step: a bit-flipped newest
+    checkpoint fails verification and the driver falls back to the
+    previous valid one."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.launch.train import run_training
+    from repro.runtime.faultinject import flip_bytes
+
+    run_training(_driver_config(tmp_path, steps=4))
+    assert CheckpointManager(str(tmp_path)).all_steps() == [2, 4]
+    flip_bytes(str(tmp_path), 4)
+
+    hist = run_training(_driver_config(tmp_path, steps=6, resume=True))
+    assert hist["resumed_from"] == 2          # step 4 quarantined
+    assert len(hist["loss"]) == 6 - 2
+    assert CheckpointManager(str(tmp_path)).latest_valid_step() == 6

@@ -1,0 +1,461 @@
+"""Preemption-safe training (DESIGN.md §8): fault injection, checkpoint
+integrity, and kill/resume trajectory equivalence.
+
+The acceptance bar of ISSUE 6: kill-at-step-k + resume reproduces the
+uninterrupted run's trajectory bit-exactly on the in-core paths and within
+1e-6 on the streamed XL path; every corruption mode is detected, quarantined,
+and recovery falls back to the last valid checkpoint.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointCorruptError, CheckpointManager
+from repro.data.synthetic import Dataset, make_classification
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.runtime import faultinject as fi
+from repro.runtime.supervisor import SupervisorConfig, run_supervised
+from repro.train.trainer import SequentialTrainer, TrainerConfig, XLTrainer
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# deterministic-history keys (epoch_seconds is wall clock, never compared)
+TRAJ = ("epoch", "train_loss", "test_acc", "n_params")
+
+
+class Boom(Exception):
+    """Injected unrecoverable mid-run failure (stands in for SIGKILL where
+    the test needs to stay in-process)."""
+
+
+def boom_at(k):
+    def hook(gstep):
+        if gstep >= k:
+            raise Boom(f"injected failure at gstep {gstep}")
+
+    return hook
+
+
+def assert_same_trajectory(h_a, h_b, keys=TRAJ, atol=0.0):
+    for key in keys:
+        a, b = np.asarray(h_a[key], float), np.asarray(h_b[key], float)
+        if atol:
+            np.testing.assert_allclose(a, b, atol=atol, err_msg=key)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=key)
+
+
+def small_dataset(n_features=20, n_classes=4, n=200, seed=0):
+    rng = np.random.default_rng(seed)
+    x, y = make_classification(
+        n, n_features, n_informative=8, n_redundant=4, n_classes=n_classes,
+        rng=rng,
+    )
+    return Dataset(
+        "resilience", x[:160].astype(np.float32), y[:160],
+        x[160:].astype(np.float32), y[160:], n_classes,
+    )
+
+
+def seq_trainer(data, fused, epochs=3, seed=3):
+    cfg = SparseMLPConfig(
+        layer_dims=(data.x_train.shape[1], 32, 32, data.n_classes),
+        epsilon=8, dropout=0.2,
+    )
+    tc = TrainerConfig(
+        epochs=epochs, batch_size=16, evolve=True, seed=seed,
+        fused_epochs=fused,
+    )
+    return SequentialTrainer(SparseMLP(cfg, seed=seed), data, tc)
+
+
+# ---------------------------------------------------------------------------
+# corruption modes: detected, quarantined, recovery falls back
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones((8,))}
+
+
+@pytest.mark.parametrize(
+    "mode", ["truncate_leaf", "flip_bytes", "delete_manifest"]
+)
+def test_corruption_detected_quarantined_and_skipped(tmp_path, mode):
+    mgr = CheckpointManager(str(tmp_path), keep_last=5, async_write=False)
+    t = _tree()
+    mgr.save(1, t, meta={"ok": True})
+    mgr.save(2, t, meta={"ok": True})
+    hit = fi.corrupt(mode, tmp_path, 2)
+    assert hit
+    # detected ...
+    assert mgr.verify_step(2) is not None
+    assert mgr.verify_step(1) is None
+    # ... the backward scan falls back past it and quarantines the bad dir
+    assert mgr.latest_valid_step() == 1
+    assert not (tmp_path / "step_000000002").exists()
+    qdir = tmp_path / "quarantine" / "step_000000002"
+    assert qdir.is_dir()
+    assert (qdir / "QUARANTINE_REASON.txt").read_text().strip()
+    # recovery restores the surviving checkpoint
+    params, _, _, manifest = mgr.restore(step=1, like=t)
+    np.testing.assert_array_equal(np.asarray(params["w"]), np.asarray(t["w"]))
+    assert manifest["step"] == 1
+
+
+@pytest.mark.parametrize("mode", ["truncate_leaf", "flip_bytes"])
+def test_corrupt_restore_raises_named_error(tmp_path, mode):
+    """Restoring a damaged checkpoint surfaces CheckpointCorruptError naming
+    the step dir — not a raw numpy/OS traceback (satellite b)."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    t = _tree()
+    mgr.save(3, t)
+    fi.corrupt(mode, tmp_path, 3)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        mgr.restore(step=3, like=t)
+    assert "step_000000003" in str(ei.value)
+
+
+def test_orphaned_tmp_dir_swept_on_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, _tree())
+    tmp_name = fi.orphan_tmp(tmp_path, 2)
+    assert (tmp_path / tmp_name).exists()
+    mgr2 = CheckpointManager(str(tmp_path), async_write=False)
+    assert not (tmp_path / tmp_name).exists()
+    assert mgr2.latest_valid_step() == 1  # published state untouched
+
+
+def test_fault_plan_seeded_and_serializable():
+    plan = fi.FaultPlan.from_seed(
+        11, total_steps=40, ckpt_steps=[10, 20],
+        corruption_modes=["flip_bytes", "delete_manifest"],
+    )
+    assert plan == fi.FaultPlan.from_seed(
+        11, total_steps=40, ckpt_steps=[10, 20],
+        corruption_modes=["flip_bytes", "delete_manifest"],
+    )
+    assert fi.FaultPlan.from_json(plan.to_json()) == plan
+    assert 1 <= plan.kill_at_step < 40
+    assert all(m in fi.CORRUPTION_MODES for m, _ in plan.corruptions)
+
+
+# ---------------------------------------------------------------------------
+# in-core kill/resume: bit-exact trajectory equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data():
+    return small_dataset()
+
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "per_batch"])
+def test_sequential_kill_resume_bit_exact(tmp_path, data, fused):
+    sup = lambda d, retries=0: SupervisorConfig(
+        checkpoint_dir=str(d), save_every_epochs=1, step_retries=retries
+    )
+    # uninterrupted reference (also under the supervisor: checkpoint saves
+    # must not perturb the trajectory)
+    ref = run_supervised(seq_trainer(data, fused), sup(tmp_path / "ref"))
+
+    # killed run: dies mid-epoch-1 (per-batch) / at the epoch-1 segment
+    # (the fused hook fires once per epoch segment, at its starting gstep)
+    steps = 160 // 16
+    tr = seq_trainer(data, fused)
+    tr.fault_hook = boom_at(steps if fused else steps + 3)
+    with pytest.raises(Boom):
+        run_supervised(tr, sup(tmp_path / "run"))
+    mgr = CheckpointManager(str(tmp_path / "run"))
+    assert mgr.latest_valid_step() == steps  # epoch-0 boundary survived
+
+    # resume on a FRESH trainer (the process that died knows nothing)
+    res = run_supervised(seq_trainer(data, fused), sup(tmp_path / "run"))
+    assert res["resumed_from_step"] == steps
+    assert_same_trajectory(res["history"], ref["history"])
+
+
+def test_sequential_transient_fault_recovers_bit_exact(tmp_path, data):
+    ref = run_supervised(
+        seq_trainer(data, True),
+        SupervisorConfig(checkpoint_dir=str(tmp_path / "ref")),
+    )
+    injector = fi.TransientFaultInjector([10])  # epoch-1 segment
+    tr = seq_trainer(data, True)
+    tr.fault_hook = injector
+    res = run_supervised(
+        tr,
+        SupervisorConfig(checkpoint_dir=str(tmp_path / "run"), step_retries=2),
+    )
+    assert injector.raised == 1          # the fault fired and was retried
+    assert res["resumed_from_step"] is None
+    assert_same_trajectory(res["history"], ref["history"])
+
+
+def test_resume_skips_corrupt_newest_checkpoint(tmp_path, data):
+    """A kill mid-save tears the newest checkpoint: resume must quarantine it
+    and continue from the previous valid one — still bit-exact, just with
+    one more epoch to replay."""
+    ref = run_supervised(
+        seq_trainer(data, True),
+        SupervisorConfig(checkpoint_dir=str(tmp_path / "ref")),
+    )
+    steps = 160 // 16
+    tr = seq_trainer(data, True)
+    tr.fault_hook = boom_at(2 * steps)  # dies at the epoch-2 segment
+    with pytest.raises(Boom):
+        run_supervised(
+            tr, SupervisorConfig(checkpoint_dir=str(tmp_path / "run"))
+        )
+    fi.flip_bytes(tmp_path / "run", 2 * steps)  # newest boundary is torn
+
+    res = run_supervised(
+        seq_trainer(data, True),
+        SupervisorConfig(checkpoint_dir=str(tmp_path / "run")),
+    )
+    assert res["resumed_from_step"] == steps  # fell back one boundary
+    assert (tmp_path / "run" / "quarantine").is_dir()
+    assert_same_trajectory(res["history"], ref["history"])
+
+
+# ---------------------------------------------------------------------------
+# subprocess SIGKILL (the real thing) via the supervisor CLI
+# ---------------------------------------------------------------------------
+
+
+def _supervisor_cmd(ckpt, out, **flags):
+    cmd = [
+        sys.executable, "-m", "repro.runtime.supervisor",
+        "--ckpt", str(ckpt), "--out", str(out),
+        "--epochs", "2", "--batch-size", "32", "--n-train", "256",
+        "--n-test", "64", "--per-batch",
+    ]
+    for k, v in flags.items():
+        cmd += [f"--{k.replace('_', '-')}", str(v)]
+    return cmd
+
+
+def _run(cmd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(cmd, env=env, capture_output=True, text=True)
+
+
+def test_subprocess_sigkill_resume_matches_uninterrupted(tmp_path):
+    """SIGKILL a real training subprocess mid-epoch (no atexit, no cleanup),
+    rerun it against the same checkpoint dir, and the final trajectory equals
+    the never-killed control run's — the CI resilience smoke in test form."""
+    ref = _run(_supervisor_cmd(tmp_path / "ref_ck", tmp_path / "ref.json"))
+    assert ref.returncode == 0, ref.stderr
+    ref_hist = json.loads((tmp_path / "ref.json").read_text())["history"]
+
+    # 256/32 = 8 steps/epoch; step 11 is mid-epoch-1
+    killed = _run(
+        _supervisor_cmd(tmp_path / "ck", tmp_path / "out.json", kill_at_step=11)
+    )
+    assert killed.returncode == -signal.SIGKILL or killed.returncode == 137, (
+        killed.returncode, killed.stderr,
+    )
+    assert not (tmp_path / "out.json").exists()  # died before finishing
+
+    resumed = _run(_supervisor_cmd(tmp_path / "ck", tmp_path / "out.json"))
+    assert resumed.returncode == 0, resumed.stderr
+    payload = json.loads((tmp_path / "out.json").read_text())
+    assert payload["resumed_from_step"] == 8  # epoch-0 boundary
+    for key in TRAJ:
+        assert payload["history"][key] == ref_hist[key], key
+
+
+def test_wait_and_kill_external_driver(tmp_path):
+    """The driver-side kill: poll the child's progress file, SIGKILL it from
+    outside once the target step is reached."""
+    progress = tmp_path / "progress"
+    child = textwrap.dedent(
+        """
+        import os, sys, time
+        path = sys.argv[1]
+        for step in range(10_000):
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(f"{step} 0\\n")
+            os.replace(tmp, path)
+            time.sleep(0.01)
+        """
+    )
+    proc = subprocess.Popen([sys.executable, "-c", child, str(progress)])
+    try:
+        seen = fi.wait_and_kill(proc, str(progress), at_step=5, timeout_s=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert seen >= 5
+    assert proc.returncode == -signal.SIGKILL
+
+
+# ---------------------------------------------------------------------------
+# streamed XL path: kill/resume within 1e-6
+# ---------------------------------------------------------------------------
+
+
+def test_xl_kill_resume_trajectory(tmp_path):
+    from repro.xl import plan_memory_budget
+
+    dims = (40, 64, 48, 5)
+    rng = np.random.default_rng(1)
+    x, y = make_classification(
+        200, dims[0], n_informative=8, n_redundant=8, n_classes=dims[-1],
+        rng=rng,
+    )
+    data = Dataset(
+        "xl", x[:160].astype(np.float32), y[:160],
+        x[160:].astype(np.float32), y[160:], dims[-1],
+    )
+
+    def make_trainer():
+        cfg = SparseMLPConfig(
+            layer_dims=dims, epsilon=8, activation="all_relu", alpha=0.6,
+            dropout=0.0, impl="element", element_impl="custom", spmm_chunk=128,
+        )
+        model = SparseMLP(cfg, seed=0)
+        nnz = [t.nnz for t in model.topos]
+        plan = plan_memory_budget(
+            dims, nnz, 16, budget_bytes=60_000, chunk=128, min_chunk=32
+        )
+        tc = TrainerConfig(
+            epochs=3, batch_size=16, lr=0.01, zeta=0.3, seed=0, evolve=True
+        )
+        return XLTrainer(model, data, tc, plan)
+
+    ref = run_supervised(
+        make_trainer(), SupervisorConfig(checkpoint_dir=str(tmp_path / "ref"))
+    )
+
+    tr = make_trainer()
+    tr.fault_hook = boom_at(14)  # 160/16 = 10 steps/epoch -> mid-epoch-1
+    with pytest.raises(Boom):
+        run_supervised(
+            tr, SupervisorConfig(checkpoint_dir=str(tmp_path / "run"))
+        )
+    res = run_supervised(
+        make_trainer(), SupervisorConfig(checkpoint_dir=str(tmp_path / "run"))
+    )
+    assert res["resumed_from_step"] == 10
+    assert_same_trajectory(
+        res["history"], ref["history"], keys=("train_loss",), atol=1e-6
+    )
+    assert_same_trajectory(
+        res["history"], ref["history"], keys=("epoch", "test_acc", "n_params")
+    )
+
+
+# ---------------------------------------------------------------------------
+# WASAP: phase-aware resume + elastic heartbeat rounds
+# ---------------------------------------------------------------------------
+
+
+def _wasap_parts(seed=4):
+    from repro.core.wasap import WASAPConfig, WASAPTrainer
+
+    dims = (24, 32, 32, 4)
+    rng = np.random.default_rng(seed)
+    x, y = make_classification(
+        320, dims[0], n_informative=8, n_redundant=4, n_classes=dims[-1],
+        rng=rng,
+    )
+    data = Dataset(
+        "wasap", x[:256].astype(np.float32), y[:256],
+        x[256:].astype(np.float32), y[256:], dims[-1],
+    )
+
+    def make_trainer():
+        cfg = SparseMLPConfig(
+            layer_dims=dims, epsilon=8, activation="all_relu", alpha=0.6,
+            dropout=0.0, impl="element",
+        )
+        wc = WASAPConfig(
+            n_workers=2, phase1_epochs=2, phase2_epochs=2, sync_every=2,
+            lr=0.02, zeta=0.3, seed=seed, batch_size=16,
+        )
+        return WASAPTrainer(SparseMLP(cfg, seed=seed), data, wc)
+
+    return make_trainer
+
+
+@pytest.mark.parametrize(
+    "kill_call", [1, 3], ids=["phase1_epoch1", "phase2_epoch3"]
+)
+def test_wasap_kill_resume_bit_exact(tmp_path, kill_call):
+    """Die at the start of a phase-1 or phase-2 epoch; a fresh trainer
+    restores the phase-aware checkpoint (master state in phase 1, master +
+    diverged worker replicas in phase 2) and finishes bit-exactly."""
+    make_trainer = _wasap_parts()
+    ref_tr = make_trainer()
+    ref_hist = ref_tr.run()
+
+    mgr = CheckpointManager(str(tmp_path), keep_last=5, async_write=False)
+    tr = make_trainer()
+    tr.epoch_end_hook = lambda t, epoch: t.save_checkpoint(mgr)
+    calls = [0]
+
+    def die_at_nth_epoch(gstep):
+        if calls[0] == kill_call:
+            raise Boom(f"epoch call {calls[0]}")
+        calls[0] += 1
+
+    tr.fault_hook = die_at_nth_epoch
+    with pytest.raises(Boom):
+        tr.run()
+    assert mgr.latest_valid_step() == kill_call  # boundary before the kill
+
+    tr2 = make_trainer()
+    assert tr2.restore_checkpoint(mgr) == kill_call
+    hist = tr2.run()
+    assert hist["phase"] == ref_hist["phase"]
+    for key in ("epoch", "train_loss", "test_acc", "n_params"):
+        # array_equal: the final-row train_loss is NaN by design
+        np.testing.assert_array_equal(
+            np.asarray(hist[key], float), np.asarray(ref_hist[key], float),
+            err_msg=key,
+        )
+    for a, b in zip(ref_tr.model.params()["values"], tr2.model.params()["values"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_wasap_elastic_round_completes_with_evicted_worker(tmp_path):
+    """Heartbeat-driven elasticity: w1's beats stop, it is classified dead,
+    charged misses and evicted; the phase-1 averaging rounds renormalize over
+    the survivor, the run completes, and the elastic log records it."""
+    from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerPolicy
+
+    make_trainer = _wasap_parts()
+    tr = make_trainer()
+    clock = [0.0]
+    tr.monitor = HeartbeatMonitor(
+        ["w0", "w1"],
+        StragglerPolicy(soft_deadline_s=50, hard_deadline_s=100, evict_after=2),
+        clock=lambda: clock[0],
+    )
+
+    def beat_filter(wid, epoch):
+        if wid == "w0":  # advance the clock once per epoch, via w0's beat
+            clock[0] = (epoch + 1) * 150.0
+        return wid != "w1"  # w1's heartbeat never arrives
+
+    tr.beat_filter = beat_filter
+    hist = tr.run()
+
+    assert "w1" in tr.monitor.evicted
+    assert len(tr.elastic_log) == tr.wc.phase1_epochs
+    # w1 contributed nothing once dead: weights renormalize over w0
+    assert tr.elastic_log[-1]["weights"] == [1.0, 0.0]
+    assert tr.elastic_log[-1]["status"]["w1"] in ("dead", "evicted")
+    assert np.isfinite(hist["test_acc"][-1])
+    assert hist["test_acc"][-1] > 0.2  # not degenerate despite the eviction

@@ -413,3 +413,30 @@ def test_async_ps_full_queue_retries_same_gradient():
     # the one computed gradient was retried, never discarded-and-recomputed
     assert n_grads[0] == 1
     assert ps.stats["grads_dropped"] == 1  # accounted at shutdown
+
+
+def test_async_ps_clean_shutdown_drops_nothing():
+    """With no fault injected, a run to completion loses no work: every
+    scheduled update is applied, no gradient is dropped, and (with a frozen
+    topology) no stale entries are filtered. The counters are also surfaced
+    as per-epoch history so a nonzero value is attributable to an epoch."""
+    model, data = make_model_and_data(seed=7)
+    cfg = AsyncPSConfig(
+        n_workers=2, epochs=2, lr=0.01, batch_size=16, seed=7, evolve=False,
+    )
+    ps = AsyncParameterServer(model, data, cfg)
+    stats = ps.run()
+    assert stats["updates"] == cfg.epochs * ps.steps_per_epoch
+    assert stats["grads_dropped"] == 0
+    assert stats["stale_entries_dropped"] == 0
+    hist = stats["history"]
+    for key in (
+        "epoch", "updates", "queue_full_retries",
+        "grads_dropped", "stale_entries_dropped",
+    ):
+        assert key in hist
+    # final snapshot (taken after workers exit) matches the totals
+    assert hist["epoch"][-1] == cfg.epochs
+    assert hist["updates"][-1] == stats["updates"]
+    assert hist["grads_dropped"][-1] == 0
+    assert hist["stale_entries_dropped"][-1] == 0
