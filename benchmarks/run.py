@@ -11,6 +11,7 @@ compare against a baseline produced on the same machine, not across hosts.
 """
 import argparse
 import json
+import math
 import pathlib
 import re
 import sys
@@ -43,6 +44,7 @@ HOT_PATH_ROWS = {
         "serve/lm/engine_us_per_token",
         "serve/mlp/forward_raw",
         "serve/mlp/forward_compacted",
+        "serve/overload/us_per_goodput_token_sat",
     ],
     "resilience": [
         "resilience/train_ckpt_every_epoch",
@@ -73,11 +75,21 @@ def compare_against_baseline(baseline_path: str, payloads: dict) -> int:
     gated = HOT_PATH_ROWS.get(section, [])
     regressions = 0
     for name in gated:
-        if name not in base or base[name] <= 0:
-            continue  # new row (or flag row) — nothing to gate against yet
+        if (name not in base
+                or not math.isfinite(base[name]) or base[name] <= 0):
+            # new row, flag row, or a structurally-failed baseline (NaN) —
+            # nothing sound to gate against yet
+            continue
         if name not in fresh:
             print(f"REGRESSION {name}: row disappeared from fresh run",
                   file=sys.stderr)
+            regressions += 1
+            continue
+        if not math.isfinite(fresh[name]):
+            # NaN is the "run collapsed / no data" contract (zero tokens,
+            # zero completions) — structurally failed, never a pass
+            print(f"REGRESSION {name}: fresh value is non-finite "
+                  f"({fresh[name]})", file=sys.stderr)
             regressions += 1
             continue
         ratio = fresh[name] / base[name]

@@ -1,6 +1,6 @@
-"""Serving benchmark — the engine's acceptance harness (DESIGN.md §6).
+"""Serving benchmark — the engine's acceptance harness (DESIGN.md §6, §9).
 
-Two sections, both written to ``BENCH_serve.json``:
+Three sections, all written to ``BENCH_serve.json``:
 
 * **lm** — a smoke-scale sparse-FFN PatternLM served twice over the same
   Poisson trace: the continuous batcher (``max_slots`` decode slots) vs the
@@ -11,11 +11,20 @@ Two sections, both written to ``BENCH_serve.json``:
   SET-MLP is importance-pruned + dead-neuron-eliminated, and the compacted
   model must (a) match the pruned-but-uncompacted model's logits (physical
   elimination is free) and (b) serve at no more latency than the raw model.
+* **overload** — the §9 gateway driven through a load sweep past saturation
+  (0.5x / 1x / 2x of the measured capacity: latency-vs-QPS and goodput
+  curves) plus a chaos point — the 2x trace re-run with injected transient
+  engine faults; graceful degradation means goodput stays within
+  ``CHAOS_GOODPUT_FLOOR`` of the fault-free run and the breaker trips and
+  re-closes.
 
 Wall-clock rows feed the ``run.py --compare`` regression gate; the CI smoke
-(ci.yml) asserts the structural flags only.
+(ci.yml) asserts the structural flags only. A collapsed run (zero tokens /
+zero completions) reports NaN rows, never 0 — ``--compare`` treats
+non-finite gated values as regressions.
 """
 import dataclasses
+import math
 import time
 
 import numpy as np
@@ -25,9 +34,13 @@ from repro import configs
 from repro.core.importance import PruningSchedule
 from repro.models.mlp import SparseMLP, SparseMLPConfig
 from repro.models.transformer import PatternLM
+from repro.runtime.faultinject import EngineChaos, TransientFaultInjector
 from repro.serve import (
     ContinuousBatcher,
     EngineConfig,
+    GatewayConfig,
+    HealthThresholds,
+    ServingGateway,
     SparseInferenceEngine,
     eliminate_dead_neurons,
     importance_prune_mlp,
@@ -35,7 +48,17 @@ from repro.serve import (
     serve_sequential,
 )
 
+CHAOS_GOODPUT_FLOOR = 0.8  # chaos goodput >= this fraction of fault-free
+
 SLOTS = 8
+
+
+def _us_per_token(wall_s: float, tokens: int) -> float:
+    """NaN, not 0 or a masked denominator, when a run produced no tokens:
+    a collapsed run must fail the --compare gate, not ace it."""
+    if tokens <= 0:
+        return float("nan")
+    return wall_s * 1e6 / tokens
 
 
 def _lm_section(scale):
@@ -70,8 +93,8 @@ def _lm_section(scale):
     recompiles = engine.stats["compiles"] - warm_compiles
     jit_entries = engine.jit_entry_sizes()
 
-    us_tok = stats.wall_seconds * 1e6 / max(1, stats.generated_tokens)
-    us_tok_naive = nstats.wall_seconds * 1e6 / max(1, nstats.generated_tokens)
+    us_tok = _us_per_token(stats.wall_seconds, stats.generated_tokens)
+    us_tok_naive = _us_per_token(nstats.wall_seconds, nstats.generated_tokens)
     speedup = stats.throughput_tok_s / max(1e-9, nstats.throughput_tok_s)
     row("serve/lm/engine_us_per_token", us_tok,
         f"tok_s={stats.throughput_tok_s:.1f};slots={SLOTS};"
@@ -161,9 +184,149 @@ def _mlp_section(scale):
     }
 
 
+# ---------------------------------------------------------------------------
+# overload / chaos (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+_GW = dict(
+    default_deadline_s=0.3,
+    retry_limit=1,
+    retry_backoff_s=0.002,
+    breaker_threshold=3,
+    breaker_cooldown_s=0.01,
+    degraded_max_new_tokens=5,
+    brownout_queue_len=4,
+    health=HealthThresholds(recovery_ticks=3),
+)
+
+
+def _gateway_run(engine, n, rate, fault_indices=None):
+    base = engine._engine_calls
+    if fault_indices is not None:
+        chaos = EngineChaos(
+            TransientFaultInjector(sorted(fault_indices), persistent=1)
+        )
+        engine.fault_hook = lambda op, i: chaos(op, i - base)
+    try:
+        gw = ServingGateway(
+            engine, gateway=GatewayConfig(**_GW), queue_capacity=16
+        )
+        trace = poisson_trace(
+            n, rate=rate, vocab=engine.model.cfg.vocab,
+            prompt_lens=(4, 14), new_tokens=(3, 7), seed=13, deadline_s=0.3,
+        )
+        return gw.run(trace)
+    finally:
+        engine.fault_hook = None
+
+
+def _overload_section(scale):
+    """Load sweep past saturation + the chaos point, through the gateway."""
+    cfg = dataclasses.replace(
+        configs.get_spec("qwen1.5-0.5b").smoke,
+        ffn="sparse", sparse_block=16, sparse_density=0.5, d_ff=64,
+    )
+    ec = EngineConfig(
+        max_slots=4, max_len=48, prefill_buckets=(8, 16), prefill_batch=2
+    )
+    engine = SparseInferenceEngine(PatternLM(cfg, seed=0), engine=ec)
+    n = max(200, int(400 * scale.data_scale))
+
+    # warmup (compile) + saturation probe: a burst trace (all arrivals at
+    # t=0) measures what the engine can actually deliver
+    ContinuousBatcher(engine, queue_capacity=16).run(
+        poisson_trace(4, rate=1000.0, vocab=cfg.vocab,
+                      prompt_lens=(4, 14), new_tokens=(1, 6), seed=7)
+    )
+    sat = ContinuousBatcher(engine, queue_capacity=64).run(
+        poisson_trace(16, rate=1e6, vocab=cfg.vocab,
+                      prompt_lens=(4, 14), new_tokens=(3, 7), seed=5)
+    )
+    avg_new_tokens = 5.0
+    sat_qps = sat.throughput_tok_s / avg_new_tokens
+
+    # latency-vs-QPS + goodput curve: under, at, and 2x past saturation
+    curve = []
+    for frac in (0.5, 1.0, 2.0):
+        st = _gateway_run(engine, n, frac * sat_qps)
+        s = st.serve
+        point = {
+            "offered_x_saturation": frac,
+            "offered_qps": frac * sat_qps,
+            "throughput_tok_s": s.throughput_tok_s,
+            "goodput_tok_s": s.goodput_tok_s,
+            "completed": s.completed,
+            "rejected": s.rejected,
+            "failed": s.failed,
+            "latency_p50_ms": s.latency_p50_ms,
+            "latency_p95_ms": s.latency_p95_ms,
+            "shed": st.shed,
+            "max_queue_depth": st.max_queue_depth,
+            "health_states_seen": st.health_states_seen,
+        }
+        curve.append(point)
+        row(f"serve/overload/qps_{frac:g}x",
+            _us_per_token(1.0, s.goodput_tok_s),
+            f"goodput_tok_s={s.goodput_tok_s:.1f};"
+            f"p95_ms={s.latency_p95_ms:.1f};shed={s.rejected}")
+    sat_point = curve[-1]  # the 2x point: goodput at (past) saturation
+    row("serve/overload/us_per_goodput_token_sat",
+        _us_per_token(1.0, sat_point["goodput_tok_s"]),
+        f"offered=2x;goodput_tok_s={sat_point['goodput_tok_s']:.1f}")
+
+    # chaos point: same 2x trace with injected transient faults — singles
+    # (retry-recovered) plus a contiguous burst that trips the breaker
+    faults = set(range(60, 66)) | {12, 150}
+    chaos = _gateway_run(engine, n, 2.0 * sat_qps, fault_indices=faults)
+    goodput_ratio = (
+        chaos.serve.goodput_tok_s / sat_point["goodput_tok_s"]
+        if sat_point["goodput_tok_s"] > 0 else float("nan")
+    )
+    breaker_cycled = chaos.breaker_trips >= 1 and chaos.breaker_closes >= 1
+    degraded_gracefully = (
+        math.isfinite(goodput_ratio)
+        and goodput_ratio >= CHAOS_GOODPUT_FLOOR
+        and breaker_cycled
+        and chaos.breaker_final_state == "closed"
+    )
+    row("serve/overload/goodput_ratio_chaos", 0.0,
+        f"ratio={goodput_ratio:.3f};floor={CHAOS_GOODPUT_FLOOR}")
+    row("serve/overload/graceful_degradation", 0.0,
+        f"ok={degraded_gracefully};trips={chaos.breaker_trips};"
+        f"closes={chaos.breaker_closes};final={chaos.breaker_final_state}")
+    return {
+        "saturation_qps": sat_qps,
+        "saturation_tok_s": sat.throughput_tok_s,
+        "requests_per_point": n,
+        "curve": curve,
+        "chaos": {
+            "goodput_tok_s": chaos.serve.goodput_tok_s,
+            "goodput_ratio_vs_clean": goodput_ratio,
+            "completed": chaos.serve.completed,
+            "rejected": chaos.serve.rejected,
+            "failed": chaos.serve.failed,
+            "retries": chaos.retries,
+            "engine_call_failures": chaos.engine_call_failures,
+            "breaker_trips": chaos.breaker_trips,
+            "breaker_reopens": chaos.breaker_reopens,
+            "breaker_closes": chaos.breaker_closes,
+            "breaker_final_state": chaos.breaker_final_state,
+            "health_states_seen": chaos.health_states_seen,
+            "health_final": chaos.health_final,
+            "shed": chaos.shed,
+        },
+        "goodput_floor": CHAOS_GOODPUT_FLOOR,
+        "graceful_degradation": degraded_gracefully,
+    }
+
+
 def run(scale_name="ci"):
     scale = SCALES[scale_name]
-    return {"lm": _lm_section(scale), "mlp": _mlp_section(scale)}
+    return {
+        "lm": _lm_section(scale),
+        "mlp": _mlp_section(scale),
+        "overload": _overload_section(scale),
+    }
 
 
 if __name__ == "__main__":

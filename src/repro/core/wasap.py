@@ -66,7 +66,7 @@ from repro.launch.mesh import make_worker_mesh
 from repro.launch.steps import make_mlp_step_core, scan_masked_segment
 from repro.models.mlp import SparseMLP, SparseMLPConfig
 from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
-from repro.runtime.fault_tolerance import retry_step
+from repro.runtime.supervisor import retry_step
 from repro.train.trainer import evaluate, make_segment_fn, make_step_fn
 
 __all__ = [
@@ -416,7 +416,7 @@ class WASAPTrainer:
         self.epoch_end_hook = None      # hook(trainer, epoch) at boundaries
         self.step_retries = 0
         self.retry_backoff_s = 0.0
-        # heartbeat-driven elasticity: attach a fault_tolerance.
+        # heartbeat-driven elasticity: attach a supervisor.
         # HeartbeatMonitor over worker ids "w0".."w{K-1}" (plus an optional
         # beat_filter(worker_id, epoch) -> bool, e.g. faultinject.
         # StragglerInjector.beats) and phase-1 rounds run with renormalized

@@ -47,7 +47,7 @@ from repro.launch.sharding import default_rules, shape_aware_shardings
 from repro.models.transformer import PatternLM
 from repro.models.whisper import WhisperConfig
 from repro.optim.sgd import SGDState
-from repro.runtime.fault_tolerance import (
+from repro.runtime.supervisor import (
     HeartbeatMonitor,
     StragglerPolicy,
     plan_elastic_mesh,

@@ -14,12 +14,18 @@ seeded and replayable:
     integrity checks must detect all of them.
   * **Transient step failures** — :class:`TransientFaultInjector` raises at
     chosen global steps (first attempt only, or ``persistent=N`` attempts)
-    to exercise ``fault_tolerance.retry_step``.
+    to exercise ``supervisor.retry_step``.
   * **Stragglers / missed heartbeats** — :class:`StragglerInjector` marks
     (worker, round) pairs whose heartbeat should be suppressed, driving
     ``HeartbeatMonitor`` eviction in WASAP and the elastic launch loop;
     it also carries wall-clock delays for the async PS path
     (``AsyncPSConfig.straggler_delay``).
+  * **Serving-side faults** — :class:`EngineChaos` composes the two
+    injectors above into a ``SparseInferenceEngine.fault_hook``: transient
+    raises and straggler stalls keyed on the engine's monotone *call index*
+    (prefill/decode/classify invocations), so the serving gateway's retry,
+    circuit-breaker and brownout paths (DESIGN.md §9) are exercised by the
+    same seeded machinery as the training stack.
 
 :class:`FaultPlan` bundles all of the above; ``FaultPlan.from_seed``
 derives a replayable plan from a PRNG seed so a failing resilience run is
@@ -42,6 +48,7 @@ __all__ = [
     "TransientFault",
     "TransientFaultInjector",
     "StragglerInjector",
+    "EngineChaos",
     "FaultPlan",
     "truncate_leaf",
     "flip_bytes",
@@ -251,6 +258,51 @@ class StragglerInjector:
     def beats(self, worker_id: str, round_index: int) -> bool:
         """Does this worker's heartbeat arrive this round?"""
         return round_index not in self.suppress.get(worker_id, ())
+
+
+# ---------------------------------------------------------------------------
+# serving-side engine faults
+# ---------------------------------------------------------------------------
+
+
+class EngineChaos:
+    """A ``SparseInferenceEngine.fault_hook`` built from the two injectors.
+
+    The engine calls ``hook(op, call_index)`` at the top of every served
+    entry point (prefill/decode/classify), before any cache mutation.
+    ``transient`` is a :class:`TransientFaultInjector` keyed on the call
+    index (its ``persistent`` knob decides whether one gateway retry
+    recovers the call or the failure sticks long enough to trip the
+    breaker); ``straggler`` reuses :class:`StragglerInjector` with the op
+    name as the worker id — a suppressed "beat" stalls the call by
+    ``delay_s`` (a slow device, not a dead one). Both schedules live in
+    call-index space, so a chaos scenario is deterministic regardless of
+    wall-clock jitter.
+    """
+
+    def __init__(
+        self,
+        transient: Optional[TransientFaultInjector] = None,
+        straggler: Optional[StragglerInjector] = None,
+        sleep=time.sleep,
+    ):
+        self.transient = transient
+        self.straggler = straggler
+        self.sleep = sleep
+        self.calls = 0
+
+    def __call__(self, op: str, call_index: int) -> None:
+        self.calls += 1
+        if self.straggler is not None and not self.straggler.beats(
+            op, call_index
+        ):
+            self.sleep(self.straggler.delay_s)
+        if self.transient is not None:
+            self.transient(call_index)
+
+    @property
+    def raised(self) -> int:
+        return self.transient.raised if self.transient is not None else 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,18 @@
-"""Crash-recovery run loop for the resumable trainers (DESIGN.md §8).
+"""Crash recovery and fault tolerance for the resumable trainers
+(DESIGN.md §8: failure model, recovery protocol, trajectory equivalence).
 
-``run_supervised(trainer, config)`` wraps any trainer exposing the resume
-surface (``SequentialTrainer``, ``XLTrainer``; WASAP via its own phase-wise
-checkpointing) with the recovery protocol:
+Two layers live here. The *run loop*: ``run_supervised(trainer, config)``
+wraps any trainer exposing the resume surface (``SequentialTrainer``,
+``XLTrainer``; WASAP via its own phase-wise checkpointing) with the
+recovery protocol. The *fault-tolerance primitives* it and the distributed
+substrate consume: ``retry_step`` (transient retry with backoff),
+``HeartbeatMonitor``/``StragglerPolicy`` (liveness + WASAP-style straggler
+mitigation) and ``plan_elastic_mesh``/``ElasticPlan`` (mesh recomputation
+when the healthy device count changes). The serving-side counterpart of
+this failure model — deadlines, load shedding, circuit breaking — is
+``serve/gateway.py`` (DESIGN.md §9).
+
+The recovery protocol:
 
   1. **Restore** — if the checkpoint dir holds any step dirs, rewind the
      trainer to the newest checkpoint that passes integrity verification
@@ -12,8 +22,8 @@ checkpointing) with the recovery protocol:
      boundaries (and always at the final epoch), the trainer's full resume
      state is snapshotted; the write is atomic, so a kill mid-save leaves
      only a tmp dir the next manager init sweeps.
-  3. **Retry transients** — steps run under ``fault_tolerance.retry_step``
-     (``step_retries`` attempts with backoff) so a transient failure costs a
+  3. **Retry transients** — steps run under ``retry_step`` (below;
+     ``step_retries`` attempts with backoff) so a transient failure costs a
      retry, not the run.
   4. **Report progress** — ``progress_file`` (atomic tmp+rename) carries
      "gstep epoch" for an external watcher; ``faultinject.wait_and_kill``
@@ -37,12 +47,176 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import time
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.checkpoint.manager import CheckpointManager
 
-__all__ = ["SupervisorConfig", "run_supervised", "write_progress"]
+__all__ = [
+    "ElasticPlan",
+    "HeartbeatMonitor",
+    "StragglerPolicy",
+    "SupervisorConfig",
+    "plan_elastic_mesh",
+    "retry_step",
+    "run_supervised",
+    "write_progress",
+]
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance primitives (failure model & recovery: DESIGN.md §8;
+# checkpoint-restore mechanics: §5)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """WASAP-inspired mitigation: a straggler's contribution is *stale but
+    valid* (RetainValidUpdates) rather than blocking the sync point; beyond
+    ``evict_after`` missed beats the worker is evicted and the run goes
+    elastic."""
+
+    soft_deadline_s: float = 30.0     # beyond this: straggling (don't block)
+    hard_deadline_s: float = 300.0    # beyond this: dead
+    evict_after: int = 3              # consecutive hard misses -> evict
+
+
+class HeartbeatMonitor:
+    """Per-worker liveness with deadlines; ``classify()`` is a pure read of
+    heartbeat ages, ``tick()`` advances the miss window and performs
+    evictions (driver-side; in a real deployment heartbeats arrive over the
+    coordination service)."""
+
+    def __init__(self, worker_ids: List[str], policy: StragglerPolicy,
+                 clock: Callable[[], float] = time.monotonic):
+        self.policy = policy
+        self.clock = clock
+        now = clock()
+        self.last_beat: Dict[str, float] = {w: now for w in worker_ids}
+        self.misses: Dict[str, int] = {w: 0 for w in worker_ids}
+        self.evicted: set = set()
+
+    def beat(self, worker_id: str) -> None:
+        if worker_id in self.evicted:
+            return
+        self.last_beat[worker_id] = self.clock()
+        self.misses[worker_id] = 0
+
+    def classify(self) -> Dict[str, str]:
+        """Pure read: worker -> healthy/straggling/dead/evicted from current
+        heartbeat ages. Safe to poll at any frequency — state only advances
+        via `beat()` and `tick()`."""
+        now = self.clock()
+        out = {}
+        for w, t in self.last_beat.items():
+            if w in self.evicted:
+                out[w] = "evicted"
+                continue
+            age = now - t
+            if age > self.policy.hard_deadline_s:
+                out[w] = "dead"
+            elif age > self.policy.soft_deadline_s:
+                out[w] = "straggling"
+            else:
+                out[w] = "healthy"
+        return out
+
+    def tick(self) -> Dict[str, str]:
+        """One monitoring interval: charge a miss to every worker past the
+        hard deadline, restart its window, evict at `evict_after` consecutive
+        misses. Returns the classification as of this tick ("dead" for a
+        worker whose miss was just charged, "evicted" once the count trips).
+        Call once per poll cycle; `classify()` between ticks never inflates
+        miss counts."""
+        now = self.clock()
+        out = self.classify()
+        for w, status in out.items():
+            if status != "dead":
+                continue
+            self.misses[w] += 1
+            self.last_beat[w] = now  # restart the window
+            if self.misses[w] >= self.policy.evict_after:
+                self.evicted.add(w)
+                out[w] = "evicted"
+        return out
+
+    @property
+    def healthy_count(self) -> int:
+        return sum(1 for s in self.classify().values()
+                   if s in ("healthy", "straggling"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    pods: int
+    global_batch: int
+    note: str
+
+    @property
+    def n_devices(self) -> int:
+        return self.data * self.model * max(1, self.pods)
+
+
+def plan_elastic_mesh(
+    healthy_devices: int,
+    *,
+    model_axis: int = 16,
+    per_replica_batch: int = 16,
+    min_data: int = 1,
+) -> ElasticPlan:
+    """Largest (pods*data) x model mesh that fits the healthy device count.
+    Model axis is preserved (resharding TP state is cheap only along data);
+    the data axis shrinks to the largest supported size and the global batch
+    rescales. Restore is checkpoint-based: CheckpointManager manifests carry
+    sharding metadata, so arrays re-shard onto the new mesh on load."""
+    if healthy_devices < model_axis * min_data:
+        raise RuntimeError(
+            f"only {healthy_devices} healthy devices; "
+            f"need >= {model_axis * min_data}"
+        )
+    data_total = healthy_devices // model_axis
+    # prefer powers of two for collective efficiency
+    d = 1
+    while d * 2 <= data_total:
+        d *= 2
+    pods, data = (d // 16, 16) if d >= 32 else (1, d)
+    return ElasticPlan(
+        data=data,
+        model=model_axis,
+        pods=pods,
+        global_batch=d * per_replica_batch,
+        note=(
+            f"elastic: {healthy_devices} healthy -> "
+            f"mesh ({pods}x{data}x{model_axis})"
+        ),
+    )
+
+
+def retry_step(
+    fn: Callable,
+    *args,
+    retries: int = 3,
+    backoff_s: float = 0.1,
+    on_failure: Optional[Callable[[int, BaseException], None]] = None,
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Run fn with retry/backoff; on_failure(attempt, err) between attempts
+    (e.g. to restore from checkpoint or rebuild the mesh)."""
+    err: Optional[BaseException] = None
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args)
+        except Exception as e:  # noqa: BLE001
+            err = e
+            if on_failure is not None:
+                on_failure(attempt, e)
+            if attempt < retries:
+                sleep(backoff_s * (2 ** attempt))
+    raise err
 
 
 @dataclasses.dataclass

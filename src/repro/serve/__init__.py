@@ -11,6 +11,14 @@ training substrate (DESIGN.md §6).
 * ``serve.batcher``  — continuous batching: slot-based decode where finished
   sequences are evicted and queued requests join in place, bucketed prefill,
   admission control, and a synthetic Poisson traffic generator.
+* ``serve.metrics``  — rolling-window observability (latency/TTFT
+  percentiles, measured decode rate, queue depth, shed/retry/breaker
+  counters) and the ``healthy → degraded → browned_out`` readiness state
+  machine with hysteretic recovery.
+* ``serve.gateway``  — ``ServingGateway``: the overload-safe control plane
+  (DESIGN.md §9) — per-request deadlines, deadline-aware admission and load
+  shedding, bounded jittered retries, a circuit breaker, and brownout
+  before shedding; never raises engine faults to the caller.
 """
 from repro.serve.batcher import (
     ContinuousBatcher,
@@ -18,6 +26,21 @@ from repro.serve.batcher import (
     ServeStats,
     poisson_trace,
     serve_sequential,
+)
+from repro.serve.gateway import (
+    CircuitBreaker,
+    GatewayConfig,
+    GatewayStats,
+    ServingGateway,
+)
+from repro.serve.metrics import (
+    BROWNED_OUT,
+    DEGRADED,
+    HEALTHY,
+    HealthMonitor,
+    HealthThresholds,
+    RollingWindow,
+    ServeMetrics,
 )
 from repro.serve.compact import (
     CompactionReport,
@@ -34,11 +57,22 @@ from repro.serve.engine import (
 )
 
 __all__ = [
+    "BROWNED_OUT",
+    "CircuitBreaker",
     "CompactionReport",
     "ContinuousBatcher",
+    "DEGRADED",
     "EngineConfig",
+    "GatewayConfig",
+    "GatewayStats",
+    "HEALTHY",
+    "HealthMonitor",
+    "HealthThresholds",
     "Request",
+    "RollingWindow",
+    "ServeMetrics",
     "ServeStats",
+    "ServingGateway",
     "SparseInferenceEngine",
     "compact_block_lm",
     "compact_element_mlp",

@@ -47,15 +47,25 @@ class Request:
     prompt: np.ndarray           # (L,) int32 token ids
     max_new_tokens: int
     arrival: float = 0.0         # seconds from trace start
+    deadline_s: Optional[float] = None  # absolute (trace clock); None = no SLO
     # filled in by the batcher:
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_first: float = float("nan")   # first generated token (from arrival)
     t_done: float = float("nan")
-    rejected: Optional[str] = None  # backpressure / admission reason
+    rejected: Optional[str] = None  # backpressure / admission / shed reason
+    failed: Optional[str] = None    # admitted but not served (engine fault,
+                                    # deadline expiry) — gateway dispositions
 
     @property
     def done(self) -> bool:
-        return len(self.tokens) >= self.max_new_tokens
+        return self.failed is None and len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def deadline_met(self) -> bool:
+        """Completed within its SLO (vacuously true without a deadline)."""
+        return self.done and (
+            self.deadline_s is None or self.t_done <= self.deadline_s
+        )
 
 
 def poisson_trace(
@@ -66,9 +76,12 @@ def poisson_trace(
     prompt_lens=(4, 24),
     new_tokens=(4, 12),
     seed: int = 0,
+    deadline_s: Optional[float] = None,
 ) -> List[Request]:
     """``n`` requests with exponential interarrivals at ``rate`` req/s,
-    uniform prompt lengths and generation budgets."""
+    uniform prompt lengths and generation budgets. ``deadline_s`` stamps a
+    relative SLO on every request (absolute deadline = arrival + deadline_s);
+    the plain batcher ignores it, the gateway enforces it."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
     out = []
@@ -82,6 +95,10 @@ def poisson_trace(
                     rng.integers(new_tokens[0], new_tokens[1] + 1)
                 ),
                 arrival=float(arrivals[i]),
+                deadline_s=(
+                    None if deadline_s is None
+                    else float(arrivals[i]) + deadline_s
+                ),
             )
         )
     return out
@@ -93,7 +110,11 @@ class ServeStats:
     generated_tokens: int
     completed: int
     rejected: int
+    failed: int
     throughput_tok_s: float
+    goodput_tok_s: float          # deadline-met tokens/s (== throughput of
+                                  # completed work when no deadlines are set)
+    deadline_met: int
     latency_p50_ms: float
     latency_p95_ms: float
     latency_p99_ms: float
@@ -114,15 +135,30 @@ def _finalize(
     engine: SparseInferenceEngine,
 ) -> ServeStats:
     done = [r for r in requests if r.done]
-    lat = np.array([r.t_done - r.arrival for r in done]) * 1e3 if done else np.zeros(1)
-    ttft = np.array([r.t_first - r.arrival for r in done]) * 1e3 if done else np.zeros(1)
+    met = [r for r in done if r.deadline_met]
+    # zero completions => no latency data. Report NaN, NOT 0 ms: a collapsed
+    # run must read as structurally failed downstream (serve_bench rows and
+    # run.py --compare treat non-finite gated values as regressions), never
+    # as an infinitely fast one.
+    lat = (
+        np.array([r.t_done - r.arrival for r in done]) * 1e3
+        if done else np.array([np.nan])
+    )
+    ttft = (
+        np.array([r.t_first - r.arrival for r in done]) * 1e3
+        if done else np.array([np.nan])
+    )
     tokens = sum(len(r.tokens) for r in requests)
+    good_tokens = sum(len(r.tokens) for r in met)
     return ServeStats(
         wall_seconds=wall,
         generated_tokens=tokens,
         completed=len(done),
         rejected=sum(1 for r in requests if r.rejected),
+        failed=sum(1 for r in requests if r.failed),
         throughput_tok_s=tokens / wall if wall > 0 else 0.0,
+        goodput_tok_s=good_tokens / wall if wall > 0 else 0.0,
+        deadline_met=len(met),
         latency_p50_ms=float(np.percentile(lat, 50)),
         latency_p95_ms=float(np.percentile(lat, 95)),
         latency_p99_ms=float(np.percentile(lat, 99)),
@@ -193,7 +229,13 @@ class ContinuousBatcher:
                     rest.append(r)
             self.queue = rest + self.queue
             slots = free[: len(group)]
-            first = self.engine.prefill([r.prompt for r in group], slots)
+            first = self._call_prefill(group, slots)
+            if first is None:
+                # engine unavailable: the override already disposed of the
+                # group (failed it, or parked it back at the queue head while
+                # the breaker is open — slots were never occupied). Stop
+                # joining this iteration; the next loop pass re-evaluates.
+                break
             self.prefill_calls += 1
             t = self._now()
             for r, s, tok in zip(group, slots, first):
@@ -206,8 +248,20 @@ class ContinuousBatcher:
                 self.slot_pos[s] = r.prompt.shape[0]
                 self.slot_tok[s] = int(tok)
 
+    # engine-call seams: the base batcher calls the engine directly (failures
+    # propagate, as before). ``ServingGateway`` overrides these with the
+    # retry/breaker layer and returns None when the engine is unavailable.
+
+    def _call_prefill(self, group: List[Request], slots: List[int]):
+        return self.engine.prefill([r.prompt for r in group], slots)
+
+    def _call_decode(self):
+        return self.engine.decode_step(self.slot_tok, self.slot_pos)
+
     def _decode(self) -> None:
-        next_tok = self.engine.decode_step(self.slot_tok, self.slot_pos)
+        next_tok = self._call_decode()
+        if next_tok is None:
+            return  # engine unavailable this step (gateway breaker path)
         self.decode_steps += 1
         t = self._now()
         for s, r in enumerate(self.slot_req):

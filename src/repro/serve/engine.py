@@ -125,6 +125,13 @@ class SparseInferenceEngine:
         self.cfg = engine
         self.report: Optional[CompactionReport] = None
         self._cache = _JitCache(engine.compile_cache_max)
+        # chaos seam: called as fault_hook(op, call_index) at the top of every
+        # served entry point, BEFORE any state mutation — a raise here (e.g.
+        # faultinject.EngineChaos -> TransientFault) leaves caches untouched,
+        # so a retry of the same call is safe. ``call_index`` is monotone
+        # across ops, giving injectors a deterministic schedule space.
+        self.fault_hook: Optional[Callable[[str, int], None]] = None
+        self._engine_calls = 0
         if isinstance(model, SparseMLP):
             self.kind = "mlp"
             if compact:
@@ -218,6 +225,13 @@ class SparseInferenceEngine:
         exactly 1 after warmup (shape-stable serving, zero recompiles)."""
         return self._cache.entry_sizes()
 
+    def _enter(self, op: str) -> None:
+        """Fault-hook seam at the top of every served entry point."""
+        idx = self._engine_calls
+        self._engine_calls += 1
+        if self.fault_hook is not None:
+            self.fault_hook(op, idx)
+
     # -- MLP serving --------------------------------------------------------
 
     def classify(self, x: np.ndarray) -> np.ndarray:
@@ -225,6 +239,7 @@ class SparseInferenceEngine:
         Batches beyond the largest bucket are served in largest-bucket
         chunks (admission control upstream should prevent that)."""
         assert self.kind == "mlp"
+        self._enter("classify")
         n = x.shape[0]
         cap = self.cfg.batch_buckets[-1]
         if n > cap:
@@ -280,6 +295,7 @@ class SparseInferenceEngine:
         returning the first generated token per prompt. All prompts in a
         call must fit the same bucket — the batcher groups by bucket."""
         assert self.kind == "lm"
+        self._enter("prefill")
         assert 0 < len(prompts) <= self.cfg.prefill_batch
         lens = [int(p.shape[0]) for p in prompts]
         bucket = self.bucket_for(max(lens))
@@ -353,6 +369,7 @@ class SparseInferenceEngine:
         too and are ignored host-side). ``tokens``/``pos`` are (max_slots,);
         each slot attends its own causal prefix at its own position."""
         assert self.kind == "lm"
+        self._enter("decode")
         fn = self._cache.get(("decode",), self._build_decode)
         next_tok, self._caches = fn(
             self._params, self._topo, self._caches,

@@ -1,0 +1,247 @@
+"""Rolling-window serving metrics and the health state machine (DESIGN.md §9).
+
+The gateway's overload decisions — deadline-feasibility admission, brownout,
+shedding — are all *measured* decisions: they read a short rolling window of
+what the engine actually did (decode rate, step time, latency percentiles,
+queue depth), never a hard-coded capacity constant. This module holds that
+measurement layer plus the health/readiness state machine it drives:
+
+* :class:`RollingWindow` — a time-bounded sample window with percentile /
+  mean / rate reads. Empty windows read as NaN, not 0 — "no data" must never
+  masquerade as "infinitely fast" (the same contract as
+  ``batcher._finalize``'s zero-completion NaN).
+* :class:`ServeMetrics` — the gateway's instrument panel: latency / TTFT /
+  decode-rate windows, a queue-depth gauge, and monotone counters for every
+  shed / retry / breaker / brownout event, snapshotted into
+  ``GatewayStats`` and ``BENCH_serve.json``.
+* :class:`HealthMonitor` — ``healthy → degraded → browned_out`` readiness.
+  Escalation is immediate (one bad signal is enough: overload compounds in
+  queue time), recovery is hysteretic (``recovery_ticks`` consecutive calm
+  observations per level, stepping down one level at a time) so the state
+  doesn't flap at the threshold and brownout relief doesn't instantly
+  re-admit the load that caused it.
+
+Everything takes an injectable ``clock`` so tests drive the windows and
+hysteresis deterministically.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "HEALTHY",
+    "DEGRADED",
+    "BROWNED_OUT",
+    "HealthMonitor",
+    "HealthThresholds",
+    "RollingWindow",
+    "ServeMetrics",
+]
+
+
+class RollingWindow:
+    """Fixed-horizon sample window: (time, value) pairs no older than
+    ``window_s`` (and at most ``maxlen``, so a burst can't grow memory).
+
+    All reads trim expired samples first; an empty window reads NaN.
+    """
+
+    def __init__(
+        self,
+        window_s: float = 5.0,
+        maxlen: int = 4096,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.window_s = window_s
+        self.clock = clock
+        self._q: Deque[Tuple[float, float]] = collections.deque(maxlen=maxlen)
+
+    def observe(self, value: float, t: Optional[float] = None) -> None:
+        self._q.append((self.clock() if t is None else t, float(value)))
+
+    def _trim(self) -> None:
+        cutoff = self.clock() - self.window_s
+        while self._q and self._q[0][0] < cutoff:
+            self._q.popleft()
+
+    def values(self) -> List[float]:
+        self._trim()
+        return [v for _, v in self._q]
+
+    def count(self) -> int:
+        self._trim()
+        return len(self._q)
+
+    def percentile(self, p: float) -> float:
+        vals = self.values()
+        return float(np.percentile(vals, p)) if vals else float("nan")
+
+    def mean(self) -> float:
+        vals = self.values()
+        return float(np.mean(vals)) if vals else float("nan")
+
+    def rate_per_s(self) -> float:
+        """Sum of values per second of observed span — e.g. tokens/s when
+        each decode step observes its token count. NaN until two samples
+        span a measurable interval (no data must not read as rate 0, which
+        would shed everything, nor as +inf, which would admit everything)."""
+        self._trim()
+        if len(self._q) < 2:
+            return float("nan")
+        span = self._q[-1][0] - self._q[0][0]
+        if span <= 0:
+            return float("nan")
+        return sum(v for _, v in self._q) / span
+
+
+class ServeMetrics:
+    """The gateway's instrument panel (windows + gauges + counters)."""
+
+    def __init__(
+        self,
+        window_s: float = 5.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.clock = clock
+        self.latency_ms = RollingWindow(window_s, clock=clock)
+        self.ttft_ms = RollingWindow(window_s, clock=clock)
+        # one observation per decode step, value = tokens produced that step
+        self.decode_tokens = RollingWindow(window_s, clock=clock)
+        self.decode_step_ms = RollingWindow(window_s, clock=clock)
+        self.queue_depth = 0
+        self.counters: Dict[str, int] = collections.Counter()
+        self.shed: Dict[str, int] = collections.Counter()
+
+    # -- write side ---------------------------------------------------------
+
+    def observe_completion(self, latency_ms: float, ttft_ms: float) -> None:
+        self.latency_ms.observe(latency_ms)
+        if math.isfinite(ttft_ms):
+            self.ttft_ms.observe(ttft_ms)
+        self.counters["completed"] += 1
+
+    def observe_decode(self, tokens: int, step_ms: float) -> None:
+        self.decode_tokens.observe(tokens)
+        self.decode_step_ms.observe(step_ms)
+
+    def count(self, name: str, n: int = 1) -> None:
+        self.counters[name] += n
+
+    def count_shed(self, reason: str) -> None:
+        self.shed[reason] += 1
+        self.counters["shed_total"] += 1
+
+    # -- read side ----------------------------------------------------------
+
+    def decode_rate_tok_s(self) -> float:
+        return self.decode_tokens.rate_per_s()
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "latency_p50_ms": self.latency_ms.percentile(50),
+            "latency_p95_ms": self.latency_ms.percentile(95),
+            "latency_p99_ms": self.latency_ms.percentile(99),
+            "ttft_p50_ms": self.ttft_ms.percentile(50),
+            "decode_rate_tok_s": self.decode_rate_tok_s(),
+            "decode_step_p50_ms": self.decode_step_ms.percentile(50),
+            "queue_depth": float(self.queue_depth),
+            **{k: float(v) for k, v in self.counters.items()},
+            **{f"shed_{k}": float(v) for k, v in self.shed.items()},
+        }
+
+
+# ---------------------------------------------------------------------------
+# health / readiness
+# ---------------------------------------------------------------------------
+
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+BROWNED_OUT = "browned_out"
+_LEVELS = {HEALTHY: 0, DEGRADED: 1, BROWNED_OUT: 2}
+_BY_LEVEL = [HEALTHY, DEGRADED, BROWNED_OUT]
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthThresholds:
+    """When to degrade/brownout, and how sticky recovery is.
+
+    Queue fractions are of the gateway's queue capacity; ``degrade_p95_ms``
+    optionally adds a latency-SLO signal (NaN p95 — empty window — never
+    trips it). ``recovery_ticks`` is the hysteresis: that many consecutive
+    calm ticks step the state DOWN one level; any hot tick resets the
+    count and escalation is immediate."""
+
+    degrade_queue_frac: float = 0.5
+    brownout_queue_frac: float = 0.875
+    degrade_p95_ms: Optional[float] = None
+    recovery_ticks: int = 4
+
+
+class HealthMonitor:
+    """The ``healthy → degraded → browned_out`` readiness state machine."""
+
+    def __init__(
+        self,
+        thresholds: HealthThresholds = HealthThresholds(),
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.thresholds = thresholds
+        self.clock = clock
+        self.state = HEALTHY
+        self._calm = 0
+        self.transitions: List[Tuple[float, str, str]] = []
+        self.states_seen = {HEALTHY}
+
+    def _target(
+        self, queue_frac: float, breaker_open: bool, p95_ms: float
+    ) -> str:
+        th = self.thresholds
+        if breaker_open or queue_frac >= th.brownout_queue_frac:
+            return BROWNED_OUT
+        slow = (
+            th.degrade_p95_ms is not None
+            and math.isfinite(p95_ms)
+            and p95_ms > th.degrade_p95_ms
+        )
+        if queue_frac >= th.degrade_queue_frac or slow:
+            return DEGRADED
+        return HEALTHY
+
+    def _move(self, to: str) -> None:
+        self.transitions.append((self.clock(), self.state, to))
+        self.state = to
+        self.states_seen.add(to)
+
+    def tick(
+        self,
+        *,
+        queue_frac: float,
+        breaker_open: bool = False,
+        p95_ms: float = float("nan"),
+    ) -> str:
+        """One observation. Escalation jumps straight to the target level;
+        recovery steps down one level per ``recovery_ticks`` calm ticks."""
+        target = self._target(queue_frac, breaker_open, p95_ms)
+        cur, tgt = _LEVELS[self.state], _LEVELS[target]
+        if tgt > cur:
+            self._calm = 0
+            self._move(target)
+        elif tgt < cur:
+            self._calm += 1
+            if self._calm >= self.thresholds.recovery_ticks:
+                self._calm = 0
+                self._move(_BY_LEVEL[cur - 1])
+        else:
+            self._calm = 0
+        return self.state
+
+    @property
+    def ready(self) -> bool:
+        """Readiness-probe view: browned_out is not ready for new load."""
+        return self.state != BROWNED_OUT

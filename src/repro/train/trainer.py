@@ -61,7 +61,7 @@ from repro.data.synthetic import Dataset
 from repro.launch.steps import make_mlp_step_core, make_mlp_train_step, scan_segment
 from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
 from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
-from repro.runtime.fault_tolerance import retry_step
+from repro.runtime.supervisor import retry_step
 
 __all__ = [
     "TrainerConfig",

@@ -8,7 +8,7 @@ import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.optim.compression import TopKCompressor
-from repro.runtime.fault_tolerance import (
+from repro.runtime.supervisor import (
     HeartbeatMonitor,
     StragglerPolicy,
     plan_elastic_mesh,

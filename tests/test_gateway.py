@@ -1,0 +1,444 @@
+"""Overload-safe serving control plane: rolling metrics, health state
+machine, circuit breaker, admission ladder, deadline enforcement
+(DESIGN.md §9).
+
+Everything here runs against a fake engine / fake clocks — the real-engine
+chaos run (2x saturation Poisson trace with injected faults) lives in
+``tests/test_serve.py``.
+"""
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime.faultinject import EngineChaos, TransientFaultInjector
+from repro.serve import (
+    BROWNED_OUT,
+    DEGRADED,
+    HEALTHY,
+    CircuitBreaker,
+    GatewayConfig,
+    HealthMonitor,
+    HealthThresholds,
+    RollingWindow,
+    ServingGateway,
+    poisson_trace,
+)
+from repro.serve.batcher import Request, _finalize
+from repro.serve.engine import EngineConfig
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class FakeEngine:
+    """Engine-shaped stub: same slot/bucket surface and fault-hook seam as
+    ``SparseInferenceEngine``, constant per-call latency, no jax."""
+
+    kind = "lm"
+
+    def __init__(self, cfg: EngineConfig, step_s: float = 0.001):
+        self.cfg = cfg
+        self.step_s = step_s
+        self.fault_hook = None
+        self._engine_calls = 0
+        self.stats = {}
+
+    def _enter(self, op: str) -> None:
+        idx = self._engine_calls
+        self._engine_calls += 1
+        if self.fault_hook is not None:
+            self.fault_hook(op, idx)
+
+    def bucket_for(self, L: int):
+        for b in self.cfg.prefill_buckets:
+            if b >= L:
+                return b
+        return None
+
+    def prefill(self, prompts, slots):
+        self._enter("prefill")
+        time.sleep(self.step_s)
+        return np.ones(len(prompts), np.int32)
+
+    def decode_step(self, tok, pos):
+        self._enter("decode")
+        time.sleep(self.step_s)
+        return np.ones(self.cfg.max_slots, np.int32)
+
+
+def _cfg(**kw) -> EngineConfig:
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_buckets", (8, 16))
+    kw.setdefault("prefill_batch", 2)
+    return EngineConfig(**kw)
+
+
+def _gateway(engine=None, *, queue_capacity=16, **gw_kw) -> ServingGateway:
+    return ServingGateway(
+        engine or FakeEngine(_cfg()),
+        gateway=GatewayConfig(**gw_kw),
+        queue_capacity=queue_capacity,
+    )
+
+
+def _req(rid=0, *, L=4, new=4, arrival=0.0, deadline=None) -> Request:
+    return Request(
+        rid=rid,
+        prompt=np.zeros((L,), np.int32),
+        max_new_tokens=new,
+        arrival=arrival,
+        deadline_s=deadline,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rolling windows
+# ---------------------------------------------------------------------------
+
+
+def test_rolling_window_empty_reads_nan():
+    w = RollingWindow(5.0, clock=FakeClock())
+    assert math.isnan(w.percentile(95))
+    assert math.isnan(w.mean())
+    assert math.isnan(w.rate_per_s())
+    assert w.count() == 0
+
+
+def test_rolling_window_trims_by_time():
+    clk = FakeClock()
+    w = RollingWindow(1.0, clock=clk)
+    w.observe(10.0)
+    clk.t = 0.5
+    w.observe(20.0)
+    assert w.mean() == 15.0
+    clk.t = 1.2  # first sample (t=0) now older than the 1s horizon
+    assert w.values() == [20.0]
+    clk.t = 3.0  # everything expired: back to "no data", not 0
+    assert math.isnan(w.percentile(50))
+
+
+def test_rolling_window_rate_needs_spanning_samples():
+    clk = FakeClock()
+    w = RollingWindow(5.0, clock=clk)
+    w.observe(4.0)
+    assert math.isnan(w.rate_per_s())  # one sample: no measurable span
+    clk.t = 2.0
+    w.observe(4.0)
+    assert w.rate_per_s() == pytest.approx(4.0)  # 8 tokens over 2s
+
+
+# ---------------------------------------------------------------------------
+# health state machine
+# ---------------------------------------------------------------------------
+
+
+def test_health_escalates_immediately_and_recovers_hysteretically():
+    h = HealthMonitor(HealthThresholds(recovery_ticks=3), clock=FakeClock())
+    # one hot observation jumps straight to the target level
+    assert h.tick(queue_frac=0.95) == BROWNED_OUT
+    # recovery needs `recovery_ticks` consecutive calm ticks per LEVEL
+    assert h.tick(queue_frac=0.0) == BROWNED_OUT
+    assert h.tick(queue_frac=0.0) == BROWNED_OUT
+    assert h.tick(queue_frac=0.0) == DEGRADED  # one level, not straight home
+    assert h.tick(queue_frac=0.0) == DEGRADED
+    assert h.tick(queue_frac=0.0) == DEGRADED
+    assert h.tick(queue_frac=0.0) == HEALTHY
+    assert h.states_seen == {HEALTHY, DEGRADED, BROWNED_OUT}
+
+
+def test_health_hot_tick_resets_recovery_count():
+    h = HealthMonitor(HealthThresholds(recovery_ticks=2), clock=FakeClock())
+    h.tick(queue_frac=0.6)  # degraded
+    h.tick(queue_frac=0.0)  # calm 1/2
+    h.tick(queue_frac=0.6)  # hot again: calm count must reset
+    h.tick(queue_frac=0.0)
+    assert h.tick(queue_frac=0.0) == HEALTHY  # needed 2 fresh calm ticks
+    assert h.transitions[-1][1:] == (DEGRADED, HEALTHY)
+
+
+def test_health_breaker_open_forces_brownout():
+    h = HealthMonitor(clock=FakeClock())
+    assert h.tick(queue_frac=0.0, breaker_open=True) == BROWNED_OUT
+    assert not h.ready
+
+
+def test_health_p95_signal_degrades_but_nan_never_trips():
+    th = HealthThresholds(degrade_p95_ms=100.0)
+    h = HealthMonitor(th, clock=FakeClock())
+    # NaN p95 (empty window) is "no data", not "slow"
+    assert h.tick(queue_frac=0.0, p95_ms=float("nan")) == HEALTHY
+    assert h.tick(queue_frac=0.0, p95_ms=250.0) == DEGRADED
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_trips_on_consecutive_failures_only():
+    b = CircuitBreaker(threshold=3, cooldown_s=1.0)
+    b.record_failure(0.0)
+    b.record_failure(0.0)
+    b.record_success()  # streak broken
+    b.record_failure(0.1)
+    b.record_failure(0.1)
+    assert b.state == "closed"
+    b.record_failure(0.2)
+    assert b.state == "open" and b.trips == 1
+
+
+def test_breaker_cooldown_probe_cycle():
+    b = CircuitBreaker(threshold=1, cooldown_s=1.0)
+    b.record_failure(0.0)
+    assert b.state == "open"
+    assert not b.allow(0.5)  # still cooling down
+    assert b.allow(1.1)  # cooldown elapsed: ONE probe permitted
+    assert b.state == "half_open"
+    b.record_failure(1.2)  # probe failed: back to open, fresh cooldown
+    assert b.state == "open" and b.reopens == 1
+    assert not b.allow(1.5)
+    assert b.allow(2.3)
+    b.record_success()  # probe succeeded
+    assert b.state == "closed" and b.closes == 1
+
+
+def test_breaker_open_ignores_stray_success():
+    # only the half-open PROBE may close the breaker — a success recorded
+    # while open (e.g. an in-flight call finishing late) must not short-
+    # circuit the cooldown
+    b = CircuitBreaker(threshold=1, cooldown_s=10.0)
+    b.record_failure(0.0)
+    b.record_success()
+    assert b.state == "open"
+    assert not b.allow(1.0)
+
+
+# ---------------------------------------------------------------------------
+# admission ladder
+# ---------------------------------------------------------------------------
+
+
+def test_submit_stamps_default_deadline():
+    gw = _gateway(default_deadline_s=2.0)
+    r = _req(arrival=1.0)
+    assert gw.submit(r)
+    assert r.deadline_s == pytest.approx(3.0)
+    explicit = _req(rid=1, arrival=1.0, deadline=1.5)
+    gw.submit(explicit)
+    assert explicit.deadline_s == 1.5  # caller SLO wins over the default
+
+
+def test_brownout_clamps_max_new_tokens_before_shedding():
+    gw = _gateway(degraded_max_new_tokens=2)
+    gw.health.state = DEGRADED
+    r = _req(new=10)
+    assert gw.submit(r)  # admitted — browned out, not shed
+    assert r.max_new_tokens == 2
+    assert gw.metrics.counters["brownout_clamped"] == 1
+
+
+def test_degraded_shrinks_admission_queue():
+    gw = _gateway(queue_capacity=8, degraded_queue_frac=0.5)
+    for i in range(4):
+        assert gw.submit(_req(rid=i))
+    gw.health.state = DEGRADED  # effective capacity is now 8 * 0.5 = 4
+    r = _req(rid=9)
+    assert not gw.submit(r)
+    assert r.rejected == "shed: degraded admission limit"
+    assert gw.metrics.shed["admission_limit"] == 1
+
+
+def test_browned_out_admits_only_a_trickle():
+    gw = _gateway(queue_capacity=8, brownout_queue_len=2)
+    gw.health.state = BROWNED_OUT
+    assert gw.submit(_req(rid=0))
+    assert gw.submit(_req(rid=1))
+    r = _req(rid=2)
+    assert not gw.submit(r)
+    assert "browned_out admission limit" in r.rejected
+
+
+def test_predicted_deadline_miss_sheds_only_with_evidence():
+    gw = _gateway(default_deadline_s=0.05, admission_safety=1.0)
+    # cold decode-rate window: no evidence, must admit
+    assert gw.submit(_req(rid=0, new=50, L=4))
+    # warm the window: 80 tok/s measured
+    now = time.monotonic()
+    gw.metrics.decode_tokens.observe(4, t=now - 0.1)
+    gw.metrics.decode_tokens.observe(4, t=now)
+    r = _req(rid=1, new=50, L=4)  # ~1.2s of work against a 50ms SLO
+    assert not gw.submit(r)
+    assert r.rejected == "shed: predicted deadline miss"
+    assert gw.metrics.shed["predicted_deadline_miss"] == 1
+
+
+def test_static_rejections_still_counted():
+    gw = _gateway()
+    r = _req(L=17)  # > largest prefill bucket (16)
+    assert not gw.submit(r)
+    assert "bucket" in r.rejected
+    assert gw.metrics.shed["static_admission"] == 1
+
+
+# ---------------------------------------------------------------------------
+# deadline enforcement
+# ---------------------------------------------------------------------------
+
+
+def test_expire_sweeps_queue_and_evicts_slots():
+    gw = _gateway(default_deadline_s=None)
+    queued = _req(rid=0, deadline=1.0)
+    gw.queue.append(queued)
+    live = _req(rid=1, deadline=9.0)
+    gw.queue.append(live)
+    running = _req(rid=2, deadline=1.0)
+    gw.slot_req[0] = running
+    gw.slot_pos[0] = 5
+    gw._expire(now=2.0)
+    assert queued.rejected == "shed: expired in queue"
+    assert list(gw.queue) == [live]
+    assert running.failed == "deadline_expired"
+    assert gw.slot_req[0] is None  # slot freed for work that can still win
+    assert gw.slot_pos[0] == gw.engine.cfg.max_len - 1
+    assert not running.done and not running.deadline_met
+
+
+# ---------------------------------------------------------------------------
+# guarded calls / full runs
+# ---------------------------------------------------------------------------
+
+
+def test_guarded_retries_then_fails_into_breaker():
+    gw = _gateway(retry_limit=2, retry_backoff_s=0.0, breaker_threshold=2)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert gw._guarded(flaky) == "ok"  # 2 retries absorbed the fault
+    assert gw.metrics.counters["retries"] == 2
+    assert gw.breaker.failures == 0
+
+    def dead():
+        raise RuntimeError("down")
+
+    assert gw._guarded(dead) is None
+    assert gw.breaker.state == "closed"  # 1 of 2 consecutive failures
+    assert gw._guarded(dead) is None
+    assert gw.breaker.state == "open"
+    assert gw.metrics.counters["engine_call_failures"] == 2
+    assert len(gw._errors) > 0
+
+
+def _run(gateway_kw, *, chaos=None, n=40, step_s=0.001):
+    eng = FakeEngine(_cfg(), step_s=step_s)
+    eng.fault_hook = chaos
+    gw = ServingGateway(
+        eng, gateway=GatewayConfig(**gateway_kw), queue_capacity=16
+    )
+    trace = poisson_trace(
+        n, rate=2000.0, vocab=100, prompt_lens=(3, 8), new_tokens=(3, 6),
+        seed=0,
+    )
+    return gw, gw.run(trace), trace
+
+
+def test_clean_run_every_request_disposed_exactly_once():
+    gw, st, trace = _run(dict(default_deadline_s=1.0))
+    for r in trace:
+        dispositions = sum(
+            [r.done, r.rejected is not None, r.failed is not None]
+        )
+        assert dispositions == 1, (r.rid, r.rejected, r.failed)
+    s = st.serve
+    assert s.completed + s.rejected + s.failed == len(trace)
+    assert s.completed > 0 and s.goodput_tok_s > 0
+    assert st.breaker_trips == 0 and st.health_final == HEALTHY
+
+
+def test_chaos_run_retries_trips_probes_and_recovers():
+    # call-index fault schedule: singles are absorbed by one retry each; a
+    # contiguous burst of 6 indices with retry_limit=1 is 3 consecutive
+    # exhausted guarded calls -> deterministic trip at threshold 3
+    chaos = EngineChaos(
+        TransientFaultInjector(
+            sorted(set(range(10, 16)) | {4, 22, 27}), persistent=1
+        )
+    )
+    gw, st, trace = _run(
+        dict(
+            default_deadline_s=0.5,
+            retry_limit=1,
+            retry_backoff_s=0.001,
+            breaker_threshold=3,
+            breaker_cooldown_s=0.02,
+            health=HealthThresholds(recovery_ticks=3),
+        ),
+        chaos=chaos,
+    )
+    for r in trace:  # the gateway never raises; every request is disposed
+        assert sum([r.done, r.rejected is not None, r.failed is not None]) == 1
+    assert st.retries >= 3  # singles + burst first-attempts retried
+    assert st.engine_call_failures >= 3
+    assert st.breaker_trips >= 1
+    assert st.breaker_closes >= 1  # half-open probe succeeded
+    assert st.breaker_final_state == "closed"
+    assert BROWNED_OUT in st.health_states_seen  # open breaker was observed
+    assert st.health_final == HEALTHY  # hysteresis walked it back down
+    assert st.health_transitions >= 2
+    assert st.serve.completed > 0
+
+
+def test_dead_engine_terminates_via_deadlines_without_raising():
+    class DeadChaos:
+        def __call__(self, op, idx):
+            raise RuntimeError("engine is gone")
+
+    gw, st, trace = _run(
+        dict(
+            default_deadline_s=0.05,
+            retry_limit=1,
+            retry_backoff_s=0.001,
+            breaker_threshold=2,
+            breaker_cooldown_s=0.02,
+        ),
+        chaos=DeadChaos(),
+        n=10,
+    )
+    # liveness backstop: deadlines drain the queue, the run terminates, and
+    # nothing ever reached the caller as an exception
+    s = st.serve
+    assert s.completed == 0
+    assert s.rejected + s.failed == len(trace)
+    assert st.breaker_trips >= 1
+    assert st.breaker_final_state != "closed"  # honestly still sick
+    assert st.health_final == BROWNED_OUT  # settle can't clear an open breaker
+    # zero completions => NaN latency rows, never 0 ms (structural failure)
+    assert math.isnan(s.latency_p50_ms) and math.isnan(s.ttft_p50_ms)
+
+
+def test_finalize_zero_completions_reads_nan_not_zero():
+    class StubEngine:
+        stats = {}
+
+    r = _req(rid=0)
+    r.rejected = "queue full"
+    st = _finalize([r], wall=1.0, decode_steps=0, prefill_calls=0,
+                   engine=StubEngine())
+    assert st.completed == 0 and st.rejected == 1
+    assert math.isnan(st.latency_p50_ms)
+    assert math.isnan(st.latency_p95_ms)
+    assert math.isnan(st.latency_p99_ms)
+    assert math.isnan(st.ttft_p50_ms)
+    assert st.throughput_tok_s == 0.0 and st.goodput_tok_s == 0.0

@@ -160,7 +160,7 @@ def test_run_training_elastic_eviction_replans_and_restores(tmp_path):
     while a transient step fault is absorbed by retry_step. The whole loop
     runs on the 1-device mesh (n_hosts decouples the monitor from it)."""
     from repro.launch.train import run_training
-    from repro.runtime.fault_tolerance import StragglerPolicy
+    from repro.runtime.supervisor import StragglerPolicy
     from repro.runtime.faultinject import TransientFaultInjector
 
     clock = [0.0]

@@ -433,7 +433,7 @@ def test_wasap_elastic_round_completes_with_evicted_worker(tmp_path):
     """Heartbeat-driven elasticity: w1's beats stop, it is classified dead,
     charged misses and evicted; the phase-1 averaging rounds renormalize over
     the survivor, the run completes, and the elastic log records it."""
-    from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerPolicy
+    from repro.runtime.supervisor import HeartbeatMonitor, StragglerPolicy
 
     make_trainer = _wasap_parts()
     tr = make_trainer()
