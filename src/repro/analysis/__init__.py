@@ -1,0 +1,19 @@
+"""Hot-path contract auditor (DESIGN.md §10).
+
+Static analysis that machine-checks this repo's performance invariants:
+
+* ``registry`` — subsystems declare their jitted programs + contracts;
+* ``jaxpr_audit`` — trace-level checks (forbidden primitives, unsorted
+  scatters, dense materialization, f64 drift);
+* ``hlo_audit`` — compiled-level checks (donation aliasing, temp bytes,
+  scatter census) on the shared ``hlo_parser``;
+* ``lint`` — AST pass for tracer-hostile source idioms;
+* ``waivers`` — explicit, justified exception list;
+* ``compilecheck`` — registry-backed zero-recompile test helper.
+
+Run ``python -m repro.analysis`` for the full audit (nonzero exit on any
+unwaived violation or stale waiver).
+"""
+from repro.analysis import registry  # noqa: F401
+from repro.analysis.compilecheck import expect_compiles  # noqa: F401
+from repro.analysis.jaxpr_audit import Violation  # noqa: F401

@@ -1,0 +1,149 @@
+"""``python -m repro.analysis`` — audit every registered hot-path program
+against its contract, lint the source tree, and reconcile the result with
+the explicit waiver file. Exit nonzero on any unwaived violation, any
+stale waiver, or any audit crash."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+from typing import List
+
+from repro.analysis import hlo_audit, jaxpr_audit, lint, registry, waivers
+from repro.analysis.jaxpr_audit import Violation
+
+
+def _audit_spec(spec: registry.ProgramSpec, run_hlo: bool) -> List[Violation]:
+    out: List[Violation] = []
+    try:
+        prog = spec.build()
+    except Exception:
+        return [Violation(
+            spec.name, "build-error",
+            "program build crashed:\n" + traceback.format_exc(limit=4),
+        )]
+    try:
+        out.extend(jaxpr_audit.trace_and_audit(
+            prog.make(()), prog.args, spec.contract, spec.name,
+            kwargs=prog.kwargs,
+        ))
+    except Exception:
+        out.append(Violation(
+            spec.name, "trace-error",
+            "jaxpr trace crashed:\n" + traceback.format_exc(limit=4),
+        ))
+    if run_hlo:
+        try:
+            out.extend(hlo_audit.audit_compiled(prog, spec.contract, spec.name))
+        except Exception:
+            out.append(Violation(
+                spec.name, "compile-error",
+                "HLO audit crashed:\n" + traceback.format_exc(limit=4),
+            ))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="hot-path contract auditor (DESIGN.md §10)",
+    )
+    ap.add_argument("programs", nargs="*",
+                    help="audit only these registered programs")
+    ap.add_argument("--root", default=os.getcwd(),
+                    help="repo root (waivers + lint paths resolve here)")
+    ap.add_argument("--waivers", default=None,
+                    help="waiver file (default <root>/analysis/waivers.toml)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST lint pass")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip compile-level checks (trace-only, faster)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered programs and exit")
+    args = ap.parse_args(argv)
+
+    specs = registry.collect()
+    if args.list:
+        for spec in specs:
+            print(f"{spec.name:28s} [{spec.subsystem}] "
+                  f"expected_compiles={spec.contract.expected_compiles}")
+        return 0
+    if args.programs:
+        known = {s.name for s in specs}
+        unknown = [p for p in args.programs if p not in known]
+        if unknown:
+            print(f"unknown program(s): {unknown}; known: {sorted(known)}",
+                  file=sys.stderr)
+            return 2
+        specs = tuple(s for s in specs if s.name in args.programs)
+
+    findings: List = []
+    for spec in specs:
+        vs = _audit_spec(spec, run_hlo=not args.no_hlo)
+        status = "FAIL" if vs else "ok"
+        print(f"[{status:4s}] {spec.name} ({spec.subsystem})"
+              + (f" — {spec.notes}" if spec.notes and vs else ""))
+        findings.extend(vs)
+
+    if not args.no_lint:
+        lint_findings = lint.lint_tree(args.root, "src")
+        print(f"[{'FAIL' if lint_findings else 'ok':4s}] lint "
+              f"(src/, {len(lint.HOT_FILE_SUFFIXES)} hot files under the "
+              "donation rule)")
+        findings.extend(lint_findings)
+
+    waiver_path = args.waivers or os.path.join(
+        args.root, waivers.DEFAULT_WAIVERS_PATH
+    )
+    try:
+        wlist = waivers.load_waivers(waiver_path)
+    except ValueError as e:
+        print(f"\nwaiver file error: {e}", file=sys.stderr)
+        return 2
+    unwaived, waived, unused = waivers.apply_waivers(findings, wlist)
+
+    # staleness is only meaningful for waivers this run could have matched:
+    # lint waivers need the lint pass, compiled-level waivers need HLO
+    # checks, program waivers need their program in the audited set
+    hlo_checks = {
+        "temp-bytes", "temp-bytes-unavailable", "hlo-scatter",
+        "unknown-dtype", "donation-aliasing", "compile-error",
+    }
+    audited = {s.name for s in specs}
+
+    def _in_scope(w: waivers.Waiver) -> bool:
+        if w.id.startswith("lint:"):
+            return not args.no_lint
+        prog, _, check = w.id.rpartition(":")
+        if args.no_hlo and check in hlo_checks:
+            return False
+        return prog in audited
+
+    unused = [w for w in unused if _in_scope(w)]
+
+    if waived:
+        print(f"\nwaived ({len(waived)}):")
+        for v, w in waived:
+            print(f"  ~ {v}")
+            print(f"    waiver: {w.reason}")
+    if unwaived:
+        print(f"\nVIOLATIONS ({len(unwaived)}):")
+        for v in unwaived:
+            print(f"  ! {v}")
+    if unused:
+        print(f"\nSTALE WAIVERS ({len(unused)}) — matched nothing, remove:")
+        for w in unused:
+            print(f"  ? {w.id} ({waiver_path}:{w.line})")
+
+    failed = bool(unwaived or unused)
+    n_programs = len(specs)
+    print(f"\n{n_programs} program(s) audited, "
+          f"{len(unwaived)} unwaived violation(s), "
+          f"{len(waived)} waived, {len(unused)} stale waiver(s) -> "
+          + ("FAIL" if failed else "PASS"))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

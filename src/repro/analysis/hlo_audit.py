@@ -1,0 +1,101 @@
+"""Compiled-HLO contract checks: lower + compile a registered program and
+verify what the compiler actually produced, not what the source requested:
+
+* **aliasing** — build the program with the contract's ``donate_argnums``
+  forced on and require at least ``min_aliased_buffers`` input/output alias
+  pairs in the module header. A dropped ``donate_argnums`` (or donation the
+  compiler silently declined) fails here, on every backend — current CPU
+  XLA implements aliasing, so CI machine-checks it too.
+* **temp bytes** — ``memory_analysis().temp_size_in_bytes`` against the
+  contract ceiling (the compiled-level half of "temp memory flat in nnz").
+* **scatter census** — opcode counts over executed computations (including
+  fusion internals) via the shared HLO parser, where the contract opts in
+  (backend-dependent: CPU expands scatters into loops).
+* **unknown dtypes** — surfaced from the parser, never silently costed.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.tree_util as jtu
+
+from repro.analysis.hlo_parser import HloModule
+from repro.analysis.jaxpr_audit import Violation
+from repro.analysis.registry import AuditProgram, Contract
+
+__all__ = ["audit_compiled", "compile_program"]
+
+
+def compile_program(fn, args, kwargs=None):
+    """Lower and compile without executing (donated example buffers stay
+    live for other checks)."""
+    return fn.lower(*args, **(kwargs or {})).compile()
+
+
+def _donated_leaf_count(args, donate_argnums: Tuple[int, ...]) -> int:
+    return sum(
+        len(jtu.tree_leaves(args[i])) for i in donate_argnums if i < len(args)
+    )
+
+
+def audit_compiled(
+    prog: AuditProgram, contract: Contract, program: str
+) -> List[Violation]:
+    out: List[Violation] = []
+
+    # -- plain build: temp bytes + opcode census ----------------------------
+    compiled = compile_program(prog.make(()), prog.args, prog.kwargs)
+    text = compiled.as_text()
+    module = HloModule(text)
+
+    if contract.max_temp_bytes is not None:
+        ma = compiled.memory_analysis()
+        temp = getattr(ma, "temp_size_in_bytes", None) if ma else None
+        if temp is None:
+            out.append(Violation(
+                program, "temp-bytes-unavailable",
+                "backend reports no memory_analysis(); temp-bytes contract "
+                "cannot be verified",
+            ))
+        elif temp > contract.max_temp_bytes:
+            out.append(Violation(
+                program, "temp-bytes",
+                f"compiled temp buffers {temp} B exceed the contract ceiling "
+                f"{contract.max_temp_bytes} B",
+            ))
+
+    if contract.max_hlo_scatter is not None:
+        n_scatter = module.opcode_counts().get("scatter", 0)
+        if n_scatter > contract.max_hlo_scatter:
+            out.append(Violation(
+                program, "hlo-scatter",
+                f"{n_scatter} scatter op(s) in the compiled module "
+                f"(allowed {contract.max_hlo_scatter})",
+            ))
+
+    if module.unknown_dtypes:
+        out.append(Violation(
+            program, "unknown-dtype",
+            f"compiled module uses dtypes the byte model does not know: "
+            f"{sorted(module.unknown_dtypes)}",
+        ))
+
+    # -- donated build: did aliasing actually happen? -----------------------
+    if contract.donate_argnums:
+        floor: Optional[int] = contract.min_aliased_buffers
+        if floor is None:
+            floor = _donated_leaf_count(prog.args, contract.donate_argnums)
+        donated = compile_program(
+            prog.make(contract.donate_argnums), prog.args, prog.kwargs
+        )
+        dmod = HloModule(donated.as_text())
+        n_alias = len(dmod.input_output_alias)
+        if n_alias < floor:
+            out.append(Violation(
+                program, "donation-aliasing",
+                f"donated build aliased {n_alias} buffer(s), contract "
+                f"requires >= {floor} (donate_argnums="
+                f"{contract.donate_argnums}) — donation was dropped or "
+                "declined by the compiler",
+            ))
+    return out

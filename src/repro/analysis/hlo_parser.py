@@ -1,0 +1,247 @@
+"""Structural parser for XLA HLO text — the shared substrate for both the
+roofline cost model (``launch.hlo_analysis``) and the hot-path contract
+auditor (``analysis.hlo_audit``).
+
+Parses ``compiled.as_text()`` into computations/ops with shapes, resolves
+which computations execute (and how often, multiplying while-loop bodies by
+their parsed trip counts), and extracts the module-header facts the auditor
+checks: ``input_output_alias`` pairs (did donation actually alias?) and any
+dtype the byte model does not know (surfaced, never silently defaulted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import warnings
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+# the fallback element size used when a dtype is unknown; every use is
+# recorded on the module (and warned once per dtype) instead of silently
+# miscounting bytes
+_UNKNOWN_DTYPE_FALLBACK = 4
+_warned_dtypes: Set[str] = set()
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s*(?P<opcode>[\w\-]+)\((?P<args>.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+(?:\([^)]*\))?.*\{\s*$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+# module-header alias entries: "{out_index}: (param_index, {...}, may-alias)"
+_ALIAS_ENTRY_RE = re.compile(r"\{\s*([\d,\s]*)\s*\}:\s*\(\s*(\d+)")
+
+
+def _balanced_block(text: str, marker: str) -> str:
+    """The brace-balanced block following ``marker={`` (alias entries nest
+    braces — ``{ {0}: (0, {}, may-alias), ... }`` — so a regex can't)."""
+    start = text.find(marker + "={")
+    if start < 0:
+        return ""
+    i = start + len(marker) + 1
+    depth = 0
+    for j in range(i, len(text)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[i + 1 : j]
+    return ""
+
+
+def shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    """All (dtype, dims) pairs in a shape string (tuples yield several)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_bytes(type_str: str, unknown: Optional[Set[str]] = None) -> int:
+    """Total bytes of a shape string. Unknown dtypes fall back to 4 bytes
+    but are recorded in ``unknown`` (if given) and warned once per dtype —
+    never silently miscounted."""
+    total = 0
+    for dt, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        if dt in _DTYPE_BYTES:
+            total += n * _DTYPE_BYTES[dt]
+        else:
+            if unknown is not None:
+                unknown.add(dt)
+            if dt not in _warned_dtypes:
+                _warned_dtypes.add(dt)
+                warnings.warn(
+                    f"hlo_parser: unknown dtype {dt!r} — assuming "
+                    f"{_UNKNOWN_DTYPE_FALLBACK} bytes/element; byte counts "
+                    "involving it are approximate",
+                    stacklevel=2,
+                )
+            total += n * _UNKNOWN_DTYPE_FALLBACK
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_fused: bool = False  # fused computations' internals don't touch HBM
+
+
+class HloModule:
+    """Parsed HLO module: computations, op shapes, execution counts, and the
+    module-header facts (input/output aliasing, unknown dtypes)."""
+
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.shape_of: Dict[str, str] = {}
+        self.entry: Optional[str] = None
+        self.header: str = ""
+        # (output_index, param_index) pairs the compiler actually aliased
+        self.input_output_alias: List[Tuple[int, int]] = []
+        self.unknown_dtypes: Set[str] = set()
+        self._parse(text)
+
+    def bytes_of(self, type_str: str) -> int:
+        return shape_bytes(type_str, unknown=self.unknown_dtypes)
+
+    def _parse_header(self, line: str) -> None:
+        self.header = line
+        block = _balanced_block(line, "input_output_alias")
+        if not block:
+            return
+        for out_idx, param_idx in _ALIAS_ENTRY_RE.findall(block):
+            first = out_idx.split(",")[0].strip() if out_idx.strip() else ""
+            self.input_output_alias.append(
+                (int(first) if first else 0, int(param_idx))
+            )
+
+    def _parse(self, text: str) -> None:
+        current: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if line.startswith("HloModule"):
+                self._parse_header(line)
+                continue
+            if current is None:
+                m = _COMP_RE.match(line)
+                if m and ("{" in line):
+                    name = m.group("name")
+                    comp = Computation(
+                        name=name, ops=[], is_fused="fused_computation" in name
+                    )
+                    self.computations[name] = comp
+                    if line.startswith("ENTRY"):
+                        self.entry = name
+                    current = comp
+                continue
+            if line.strip() == "}" or line.strip().startswith("} //"):
+                current = None
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                op = Op(
+                    name=m.group("name"),
+                    type_str=m.group("type"),
+                    opcode=m.group("opcode"),
+                    rest=m.group("args"),
+                )
+                current.ops.append(op)
+                self.shape_of[op.name] = op.type_str
+                # touch the byte model so unknown dtypes surface even for
+                # consumers that never weigh this op
+                self.bytes_of(op.type_str)
+            # anything else (constants spanning lines) ignored
+
+    # -- execution counts ----------------------------------------------------
+
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for op in comp.ops:
+            if op.opcode == "constant":
+                mm = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        return best
+
+    def execution_counts(self) -> Dict[str, float]:
+        counts: Dict[str, float] = defaultdict(float)
+        if self.entry is None:
+            return counts
+        stack = [(self.entry, 1.0)]
+        seen_guard = 0
+        while stack:
+            seen_guard += 1
+            if seen_guard > 100000:
+                break
+            name, mult = stack.pop()
+            counts[name] += mult
+            comp = self.computations.get(name)
+            if comp is None:
+                continue
+            for op in comp.ops:
+                called = _CALLED_RE.findall(op.rest)
+                branches = _BRANCH_RE.findall(op.rest)
+                if op.opcode == "while":
+                    body = cond = None
+                    mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                    mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                    if mb:
+                        body = mb.group(1)
+                    if mc:
+                        cond = mc.group(1)
+                    n = self.trip_count(cond) if cond else 1
+                    if body:
+                        stack.append((body, mult * n))
+                    if cond:
+                        stack.append((cond, mult * (n + 1)))
+                else:
+                    for c in called:
+                        stack.append((c, mult))
+                    for blist in branches:
+                        for b in _OPERAND_RE.findall(blist):
+                            stack.append((b, mult))
+        return counts
+
+    # -- opcode census over executed code ------------------------------------
+
+    def opcode_counts(self, include_fused: bool = True) -> Dict[str, int]:
+        """Static occurrence counts of every opcode in executed computations
+        (each op counted once — not weighted by trip count). Fusion internals
+        are included by default: a scatter hiding inside a fusion is still a
+        scatter."""
+        counts = self.execution_counts()
+        out: Dict[str, int] = defaultdict(int)
+        for name, comp in self.computations.items():
+            if counts.get(name, 0.0) == 0.0 and name != self.entry:
+                continue
+            if comp.is_fused and not include_fused:
+                continue
+            for op in comp.ops:
+                out[op.opcode] += 1
+        # fused computations are reached via "calls=" which execution_counts
+        # follows, so the filter above already covers them
+        return dict(out)

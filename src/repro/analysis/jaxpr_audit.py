@@ -1,0 +1,151 @@
+"""jaxpr-level contract checks: walk a traced program (recursing into every
+sub-jaxpr — scan/while bodies, cond branches, pjit calls, custom-VJP
+fwd/bwd) and verify the registered contract:
+
+* no forbidden primitives (host callbacks by default);
+* no unsorted scatters beyond the declared allowance, and none whose result
+  outgrows the per-op bound (the dense-scatter hazard);
+* no intermediate value larger than the declared element budget (the
+  "temp memory flat in nnz" invariant at trace level);
+* no f64/c128 dtype drift unless the contract allows it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.analysis.registry import Contract
+
+__all__ = ["Violation", "iter_eqns", "audit_jaxpr", "trace_and_audit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    program: str
+    check: str       # stable id suffix: "<program>:<check>" keys waivers
+    message: str
+
+    @property
+    def waiver_id(self) -> str:
+        return f"{self.program}:{self.check}"
+
+    def __str__(self) -> str:
+        return f"[{self.waiver_id}] {self.message}"
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Depth-first over every eqn including all nested jaxprs (scan/while
+    bodies, cond branches, pjit/custom-vjp calls)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            items = v if isinstance(v, (list, tuple)) else [v]
+            for item in items:
+                inner = None
+                if hasattr(item, "eqns"):          # Jaxpr
+                    inner = item
+                elif hasattr(item, "jaxpr"):       # ClosedJaxpr
+                    inner = item.jaxpr
+                if inner is not None:
+                    yield from iter_eqns(inner)
+
+
+def _aval_elems(v) -> int:
+    aval = getattr(v, "aval", None)
+    shape = getattr(aval, "shape", None)
+    if shape is None:
+        return 0
+    return int(np.prod(shape)) if shape else 1
+
+
+def _aval_dtype(v):
+    aval = getattr(v, "aval", None)
+    return getattr(aval, "dtype", None)
+
+
+def audit_jaxpr(closed_jaxpr, contract: Contract, program: str) -> List[Violation]:
+    out: List[Violation] = []
+    forbidden_hits = {}
+    unsorted: List[Tuple[str, int]] = []   # (primitive, result elems)
+    max_inter = 0
+    max_inter_prim = ""
+    f64_hits = []
+    for eqn in iter_eqns(closed_jaxpr.jaxpr):
+        name = eqn.primitive.name
+        if name in contract.forbidden_primitives:
+            forbidden_hits[name] = forbidden_hits.get(name, 0) + 1
+        if name.startswith("scatter"):
+            if not eqn.params.get("indices_are_sorted", False):
+                elems = max((_aval_elems(v) for v in eqn.outvars), default=0)
+                unsorted.append((name, elems))
+        # container/call eqns re-expose their inner results; the recursion
+        # already measures the real producers, but measuring the call's
+        # outvars too is harmless (same avals)
+        for v in eqn.outvars:
+            elems = _aval_elems(v)
+            if elems > max_inter:
+                max_inter, max_inter_prim = elems, name
+            dt = _aval_dtype(v)
+            if (
+                not contract.allow_f64
+                and dt is not None
+                and dt in (np.float64, np.complex128)
+            ):
+                f64_hits.append((name, str(dt)))
+
+    if forbidden_hits:
+        out.append(Violation(
+            program, "forbidden-primitive",
+            f"forbidden primitive(s) in trace: "
+            + ", ".join(f"{k} x{v}" for k, v in sorted(forbidden_hits.items())),
+        ))
+    if len(unsorted) > contract.max_unsorted_scatter:
+        out.append(Violation(
+            program, "unsorted-scatter",
+            f"{len(unsorted)} unsorted scatter(s) "
+            f"(allowed {contract.max_unsorted_scatter}): "
+            + ", ".join(f"{p}->{e} elems" for p, e in unsorted),
+        ))
+    else:
+        for prim, elems in unsorted:
+            if elems > contract.max_unsorted_scatter_elems:
+                out.append(Violation(
+                    program, "unsorted-scatter-size",
+                    f"allowed unsorted {prim} writes {elems} elems "
+                    f"(bound {contract.max_unsorted_scatter_elems}) — "
+                    "nnz-scale dense scatter in a truly-sparse hot path",
+                ))
+    if (
+        contract.max_intermediate_elems is not None
+        and max_inter > contract.max_intermediate_elems
+    ):
+        out.append(Violation(
+            program, "dense-materialization",
+            f"intermediate of {max_inter} elems (from {max_inter_prim}) "
+            f"exceeds the {contract.max_intermediate_elems}-elem budget — "
+            "a sparse operand is being materialized densely",
+        ))
+    if f64_hits:
+        prims = sorted({p for p, _ in f64_hits})
+        out.append(Violation(
+            program, "f64-drift",
+            f"f64/c128 values produced by {prims} ({len(f64_hits)} sites) "
+            "in an f32 hot path",
+        ))
+    return out
+
+
+def trace_and_audit(
+    fn, args, contract: Contract, program: str, kwargs: Optional[dict] = None
+) -> List[Violation]:
+    kwargs = kwargs or {}
+    if hasattr(fn, "trace"):
+        # jitted program: AOT trace respects static_argnames (make_jaxpr
+        # would turn static kwargs into tracers)
+        closed = fn.trace(*args, **kwargs).jaxpr
+    else:
+        closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return audit_jaxpr(closed, contract, program)

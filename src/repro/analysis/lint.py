@@ -1,0 +1,419 @@
+"""AST lint for tracer-hostile idioms in the hot path.
+
+Static-analysis companion to the jaxpr/HLO audits: those check what a
+program *traced to*; this checks what the *source* says, so it catches
+hazards on code paths the audit scales never exercise.
+
+Rules (each finding carries a stable waiver id
+``lint:<rule>:<relpath>:<qualname>``):
+
+* ``host-sync`` — ``.item()`` / ``float(x)`` / ``int(x)`` / ``bool(x)`` /
+  ``np.asarray(x)`` / ``np.array(x)`` on non-literal values inside a traced
+  region. Each forces a device→host transfer and a pipeline stall (or a
+  ConcretizationTypeError at trace time).
+* ``tracer-branch`` — Python ``if``/``while`` on a traced (non-static)
+  parameter inside a traced region. Trace-time branching silently bakes one
+  side into the program, or fails to trace at all.
+* ``jit-missing-donation`` — in registered hot files only: a ``jax.jit``
+  whose wrapped function takes a known big mutable buffer (``opt_state``,
+  ``caches``, ``big_caches``, ``acc``) without a ``donate_argnums``
+  keyword. Donation policy is central (``repro.runtime.donation``) — an
+  explicit ``donate_argnums=donation.donate_argnums(...)`` satisfies this.
+
+Traced regions are detected syntactically: functions decorated with
+``jax.jit`` (directly or through ``functools.partial``), functions passed
+to ``jax.jit(...)`` / ``lax.scan`` / ``lax.while_loop`` / ``lax.cond`` /
+``jax.vmap`` / ``jax.grad`` / ``jax.value_and_grad`` / ``jax.checkpoint``
+/ ``shard_map``, and every ``def`` nested inside one. Static parameters
+(``static_argnames`` entries and keyword-only parameters, which this repo
+uses for static config by convention) are exempt from ``tracer-branch``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["LintFinding", "lint_file", "lint_tree", "HOT_FILE_SUFFIXES"]
+
+# files under the donation rule: the registered hot-path subsystems plus the
+# kernel layer they call into (matched by path suffix, OS-independent)
+HOT_FILE_SUFFIXES: Tuple[str, ...] = (
+    "repro/train/trainer.py",
+    "repro/core/wasap.py",
+    "repro/xl/stream.py",
+    "repro/serve/engine.py",
+    "repro/launch/steps.py",
+    "repro/kernels/ops.py",
+)
+
+# parameter names that mean "big mutable buffer the caller won't reuse"
+_BIG_BUFFER_PARAMS = frozenset(
+    {"opt_state", "caches", "big_caches", "acc", "carry_acc"}
+)
+
+# callables that trace their function argument
+_TRACING_TRANSFORMS = frozenset({
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint", "remat",
+    "scan", "while_loop", "cond", "fori_loop", "shard_map", "custom_vjp",
+    "custom_jvp",
+})
+
+_HOST_SYNC_BUILTINS = frozenset({"float", "int", "bool"})
+_HOST_SYNC_NP = frozenset({"asarray", "array"})
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str       # repo-relative
+    line: int
+    rule: str
+    qualname: str   # enclosing function ("<module>" at top level)
+    message: str
+
+    @property
+    def waiver_id(self) -> str:
+        return f"lint:{self.rule}:{self.path}:{self.qualname}"
+
+    def __str__(self) -> str:
+        return f"[{self.waiver_id}] {self.path}:{self.line}: {self.message}"
+
+
+def _dotted(node: ast.expr) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    name = _dotted(call.func)
+    return name.split(".")[-1] == "jit"
+
+
+def _partial_jit(call: ast.Call) -> bool:
+    """functools.partial(jax.jit, ...) used as a decorator."""
+    if _dotted(call.func).split(".")[-1] != "partial":
+        return False
+    return bool(call.args) and (
+        isinstance(call.args[0], (ast.Name, ast.Attribute))
+        and _dotted(call.args[0]).split(".")[-1] == "jit"
+    )
+
+
+def _static_names_from_call(call: ast.Call) -> Set[str]:
+    """static_argnames entries of a jit(...) / partial(jit, ...) call."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+    return out
+
+
+class _TracedRegionFinder(ast.NodeVisitor):
+    """First pass: map function-def nodes -> static param names if traced."""
+
+    def __init__(self) -> None:
+        self.traced: Dict[ast.AST, Set[str]] = {}
+        self._defs: Dict[str, ast.AST] = {}
+
+    def _mark(self, fn: ast.AST, static: Set[str]) -> None:
+        cur = self.traced.setdefault(fn, set())
+        cur |= static
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._defs[node.name] = node
+        for dec in node.decorator_list:
+            if isinstance(dec, (ast.Name, ast.Attribute)):
+                if _dotted(dec).split(".")[-1] == "jit":
+                    self._mark(node, set())
+            elif isinstance(dec, ast.Call):
+                if _is_jit_call(dec) or _partial_jit(dec):
+                    self._mark(node, _static_names_from_call(dec))
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func).split(".")[-1]
+        if name in _TRACING_TRANSFORMS:
+            static = (
+                _static_names_from_call(node) if name == "jit" else set()
+            )
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name) and arg.id in self._defs:
+                    self._mark(self._defs[arg.id], static)
+                elif isinstance(arg, ast.Lambda):
+                    self._mark(arg, static)
+        self.generic_visit(node)
+
+
+def _param_names(fn: ast.AST) -> Tuple[Set[str], Set[str]]:
+    """(positional-or-normal, keyword-only) parameter names."""
+    args = getattr(fn, "args", None)
+    if args is None:
+        return set(), set()
+    pos = {a.arg for a in list(args.posonlyargs) + list(args.args)}
+    kw = {a.arg for a in args.kwonlyargs}
+    return pos, kw
+
+
+def _test_exempt(test: ast.expr) -> bool:
+    """Branch tests that are fine at trace time: None checks, isinstance,
+    shape/dtype/ndim introspection, len(), literals."""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) and any(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops
+        ):
+            return True
+        if isinstance(node, ast.Call):
+            callee = _dotted(node.func).split(".")[-1]
+            if callee in ("isinstance", "len", "hasattr", "getattr"):
+                return True
+        if isinstance(node, ast.Attribute) and node.attr in (
+            "shape", "ndim", "dtype", "size",
+        ):
+            return True
+    return False
+
+
+class _RuleVisitor(ast.NodeVisitor):
+    def __init__(
+        self,
+        path: str,
+        traced: Dict[ast.AST, Set[str]],
+        hot_file: bool,
+        defs: Dict[str, ast.AST],
+    ) -> None:
+        self.path = path
+        self.traced = traced
+        self.hot_file = hot_file
+        self.defs = defs
+        self.findings: List[LintFinding] = []
+        # stack of (fn node, traced param names) for enclosing traced regions
+        self._stack: List[Tuple[ast.AST, Set[str]]] = []
+        self._qual: List[str] = []
+
+    # -- helpers -----------------------------------------------------------
+
+    def _qualname(self) -> str:
+        return ".".join(self._qual) if self._qual else "<module>"
+
+    def _in_traced(self) -> bool:
+        return bool(self._stack)
+
+    def _traced_params(self) -> Set[str]:
+        out: Set[str] = set()
+        for _, names in self._stack:
+            out |= names
+        return out
+
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        self.findings.append(LintFinding(
+            path=self.path,
+            line=getattr(node, "lineno", 0),
+            rule=rule,
+            qualname=self._qualname(),
+            message=message,
+        ))
+
+    # -- traced-region tracking -------------------------------------------
+
+    def _enter_fn(self, node: ast.AST, name: str) -> None:
+        self._qual.append(name)
+        is_traced = node in self.traced or self._in_traced()
+        if is_traced:
+            static = self.traced.get(node, set())
+            pos, kw = _param_names(node)
+            # keyword-only params are static config by repo convention
+            traced_params = pos - static - kw - {"self"}
+            self._stack.append((node, traced_params))
+        self.generic_visit(node)
+        if is_traced:
+            self._stack.pop()
+        self._qual.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_jit_decorators(node)
+        self._enter_fn(node, node.name)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._enter_fn(node, "<lambda>")
+
+    # -- rule: jit-missing-donation ---------------------------------------
+
+    def _wrapped_buffer_params(self, call: ast.Call) -> Set[str]:
+        """Big-buffer params of the function a jit(...) call wraps."""
+        if not call.args:
+            return set()
+        target = call.args[0]
+        fn: Optional[ast.AST] = None
+        if isinstance(target, ast.Name) and target.id in self.defs:
+            fn = self.defs[target.id]
+        elif isinstance(target, ast.Lambda):
+            fn = target
+        if fn is None:
+            return set()
+        pos, _ = _param_names(fn)
+        return pos & _BIG_BUFFER_PARAMS
+
+    def _check_jit_decorators(self, node: ast.FunctionDef) -> None:
+        if not self.hot_file:
+            return
+        pos, _ = _param_names(node)
+        bufs = pos & _BIG_BUFFER_PARAMS
+        if not bufs:
+            return
+        for dec in node.decorator_list:
+            donated = None
+            if isinstance(dec, (ast.Name, ast.Attribute)):
+                if _dotted(dec).split(".")[-1] == "jit":
+                    donated = False
+            elif isinstance(dec, ast.Call) and (
+                _is_jit_call(dec) or _partial_jit(dec)
+            ):
+                donated = any(
+                    kw.arg == "donate_argnums" for kw in dec.keywords
+                )
+            if donated is False:
+                # attribute the finding to the decorated function itself
+                self._qual.append(node.name)
+                self._emit(
+                    dec, "jit-missing-donation",
+                    f"jit over {node.name}({', '.join(sorted(bufs))}, ...) "
+                    "without donate_argnums — route through "
+                    "repro.runtime.donation",
+                )
+                self._qual.pop()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # jit-missing-donation for jax.jit(fn, ...) call form
+        if self.hot_file and _is_jit_call(node):
+            bufs = self._wrapped_buffer_params(node)
+            if bufs and not any(
+                kw.arg == "donate_argnums" for kw in node.keywords
+            ):
+                self._emit(
+                    node, "jit-missing-donation",
+                    f"jax.jit over a function taking "
+                    f"({', '.join(sorted(bufs))}) without donate_argnums — "
+                    "route through repro.runtime.donation",
+                )
+        # host-sync inside traced regions
+        if self._in_traced():
+            callee = _dotted(node.func)
+            tail = callee.split(".")[-1]
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"
+                and not node.args
+            ):
+                self._emit(
+                    node, "host-sync",
+                    ".item() inside a traced region forces a device->host "
+                    "sync",
+                )
+            elif (
+                isinstance(node.func, ast.Name)
+                and tail in _HOST_SYNC_BUILTINS
+                and node.args
+                and not isinstance(node.args[0], ast.Constant)
+                and not _test_exempt(node.args[0])
+                and any(
+                    isinstance(n, ast.Name) and n.id in self._traced_params()
+                    for n in ast.walk(node.args[0])
+                )
+            ):
+                # only flagged when the argument references a traced (non-
+                # static) parameter — int(zeta * n) over static config and
+                # shapes is trace-time arithmetic, not a sync
+                self._emit(
+                    node, "host-sync",
+                    f"{tail}() on a traced value concretizes it "
+                    "(device->host sync or trace error)",
+                )
+            elif (
+                tail in _HOST_SYNC_NP
+                and callee.split(".")[0] in ("np", "numpy")
+                and node.args
+            ):
+                self._emit(
+                    node, "host-sync",
+                    f"{callee}() materializes a device value on host inside "
+                    "a traced region",
+                )
+        self.generic_visit(node)
+
+    # -- rule: tracer-branch ----------------------------------------------
+
+    def _check_branch(self, node, test: ast.expr) -> None:
+        if not self._in_traced() or _test_exempt(test):
+            return
+        traced = self._traced_params()
+        if not traced:
+            return
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Name) and sub.id in traced:
+                self._emit(
+                    node, "tracer-branch",
+                    f"Python branch on traced parameter {sub.id!r} — use "
+                    "lax.cond/jnp.where or make it static",
+                )
+                return
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node, node.test)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node, node.test)
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._check_branch(node, node.test)
+        self.generic_visit(node)
+
+
+def _is_hot_file(relpath: str) -> bool:
+    norm = relpath.replace(os.sep, "/")
+    return any(norm.endswith(suffix) for suffix in HOT_FILE_SUFFIXES)
+
+
+def lint_source(source: str, relpath: str) -> List[LintFinding]:
+    tree = ast.parse(source, filename=relpath)
+    finder = _TracedRegionFinder()
+    finder.visit(tree)
+    visitor = _RuleVisitor(
+        path=relpath.replace(os.sep, "/"),
+        traced=finder.traced,
+        hot_file=_is_hot_file(relpath),
+        defs=finder._defs,
+    )
+    visitor.visit(tree)
+    return visitor.findings
+
+
+def lint_file(path: str, root: Optional[str] = None) -> List[LintFinding]:
+    rel = os.path.relpath(path, root) if root else path
+    with open(path, "r", encoding="utf-8") as fh:
+        return lint_source(fh.read(), rel)
+
+
+def lint_tree(root: str, subdir: str = "src") -> List[LintFinding]:
+    """Lint every .py under root/subdir; paths in findings are root-relative."""
+    findings: List[LintFinding] = []
+    top = os.path.join(root, subdir)
+    for dirpath, dirnames, filenames in os.walk(top):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                findings.extend(lint_file(os.path.join(dirpath, fn), root))
+    return findings

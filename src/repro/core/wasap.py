@@ -66,6 +66,7 @@ from repro.launch.mesh import make_worker_mesh
 from repro.launch.steps import make_mlp_step_core, scan_masked_segment
 from repro.models.mlp import SparseMLP, SparseMLPConfig
 from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
+from repro.runtime import donation
 from repro.runtime.supervisor import retry_step
 from repro.train.trainer import evaluate, make_segment_fn, make_step_fn
 
@@ -142,6 +143,7 @@ def make_phase1_epoch_fn(
     worker_axis: str = "vmap",
     mesh=None,
     weighted: bool = False,
+    donate=None,
 ):
     """Build the jitted phase-1 epoch: one device call scanning sync rounds.
 
@@ -169,6 +171,10 @@ def make_phase1_epoch_fn(
     ``"shard_map"`` maps the same program over the 'data' axis of ``mesh``
     (each shard vmaps its K/D local workers, all_gathers the worker axis,
     and averages in the same order as the vmap path — bit-identical).
+
+    ``donate`` overrides the central donation policy
+    (``repro.runtime.donation``) — the contract auditor passes explicit
+    argnums to force-build donated/undonated variants.
     """
     if worker_axis not in ("vmap", "shard_map"):
         raise ValueError(f"worker_axis must be vmap|shard_map, got {worker_axis!r}")
@@ -251,9 +257,7 @@ def make_phase1_epoch_fn(
             out_specs=(P(), P(), P()),
             check_rep=False,  # all_gather + mean makes every output replicated
         )
-    # donation is a no-op (with a warning) on CPU — only request it elsewhere
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    return jax.jit(fn, donate_argnums=donate)
+    return jax.jit(fn, donate_argnums=donation.donate_argnums(0, 1, override=donate))
 
 
 def _make_worker_round(config: SparseMLPConfig, opt: MomentumSGD):
@@ -1013,3 +1017,65 @@ class WASAPTrainer:
         self.history["test_acc"].append(acc)
         self.history["n_params"].append(self.model.n_params)
         self.history["epoch_seconds"].append(dt)
+
+
+# ---------------------------------------------------------------------------
+# contract auditor registration (repro.analysis, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def analysis_programs():
+    """Registry hook: the phase-1 fused epoch (K vmapped workers, scan over
+    sync rounds). The audit model pins ``element_impl="custom"`` so the
+    structural checks exercise the custom-VJP kernels even at the tiny
+    audit scale (below the auto-dispatch nnz threshold)."""
+    from repro.analysis.registry import AuditProgram, Contract, ProgramSpec
+
+    dims = (20, 16, 10)
+    K, R, H, B = 2, 2, 2, 8
+
+    def build() -> AuditProgram:
+        cfg = SparseMLPConfig(
+            layer_dims=dims, epsilon=6, dropout=0.0, element_impl="custom"
+        )
+        model = SparseMLP(cfg, seed=0)
+        opt = MomentumSGD(momentum=0.9, weight_decay=2e-4)
+        n_train = R * H * B
+        args = (
+            model.params(),
+            opt.init(model.params()),
+            model.topo_arrays(),
+            jnp.zeros((n_train, dims[0]), jnp.float32),
+            jnp.zeros((n_train,), jnp.int32),
+            jnp.arange(R * K * H * B, dtype=jnp.int32).reshape(R, K, H, B)
+            % n_train,
+            jnp.full((R, H), 0.01, jnp.float32),
+            jnp.ones((R, H), jnp.float32),
+            jnp.zeros((R, K, 2), jnp.uint32),
+        )
+        nnz = [int(t.rows.shape[0]) for t in model.topos]
+        return AuditProgram(
+            make=lambda donate: make_phase1_epoch_fn(
+                cfg, opt, n_workers=K, donate=donate
+            ),
+            args=args,
+            meta={"dims": dims, "workers": K, "rounds": R, "nnz": nnz},
+        )
+
+    return [
+        ProgramSpec(
+            name="wasap.phase1_epoch",
+            subsystem=__name__,
+            contract=Contract(
+                # one CE-loss label scatter, batched over the K worker vmap
+                max_unsorted_scatter=1,
+                max_unsorted_scatter_elems=K * B * dims[-1],
+                max_intermediate_elems=256 * 1024,
+                donate_argnums=(0, 1),
+                max_temp_bytes=4 * 1024 * 1024,
+                expected_compiles=1,
+            ),
+            build=build,
+            notes="K-worker vmapped local SGD + on-device average per round",
+        )
+    ]

@@ -52,6 +52,7 @@ from repro.core.sparsity import (
     spmm_chunk_for,
 )
 from repro.kernels import block_sparse_matmul as _k
+from repro.runtime import donation
 
 
 def _float0_zeros(x):
@@ -343,16 +344,7 @@ def bsmm_infer(
 # (xl/planner.py) — so a full training run compiles each of them exactly
 # once, no matter how many shards, layers or epochs stream through.
 
-# donation lets XLA reuse the accumulator buffer in place; it is a no-op
-# (with a warning) on CPU, so only request it elsewhere — same policy as
-# train/trainer.make_segment_fn.
-_XL_DONATE = (0,) if jax.default_backend() != "cpu" else ()
-
-
-@functools.partial(
-    jax.jit, static_argnames=("n_segments", "chunk"), donate_argnums=_XL_DONATE
-)
-def xl_shard_acc(
+def _xl_shard_acc_impl(
     acc: jax.Array,
     srcT: jax.Array,
     values: jax.Array,
@@ -382,8 +374,23 @@ def xl_shard_acc(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def xl_shard_dw(
+def make_xl_shard_acc(donate=None):
+    """Fresh jitted shard-acc. The accumulator (arg 0) is donated per the
+    central policy (``repro.runtime.donation``) so XLA reuses its buffer in
+    place; ``donate`` overrides the policy (contract-auditor force builds)."""
+    return jax.jit(
+        _xl_shard_acc_impl,
+        static_argnames=("n_segments", "chunk"),
+        donate_argnums=donation.donate_argnums(0, override=donate),
+    )
+
+
+# the shared production instance every stream executor dispatches through —
+# ONE compile per (shapes, n_segments, chunk), however many layers/shards
+xl_shard_acc = make_xl_shard_acc()
+
+
+def _xl_shard_dw_impl(
     xT: jax.Array,
     dyT: jax.Array,
     rows: jax.Array,
@@ -398,3 +405,16 @@ def xl_shard_dw(
     clamped garbage; the host writes back only the shard's real extent.
     """
     return coo_dw(xT, dyT, rows, cols, chunk=chunk)
+
+
+def make_xl_shard_dw(donate=None):
+    """Fresh jitted shard-dW (no donated args: every input is reused by the
+    caller; ``donate`` exists for auditor symmetry with shard-acc)."""
+    return jax.jit(
+        _xl_shard_dw_impl,
+        static_argnames=("chunk",),
+        donate_argnums=donation.donate_argnums(override=donate),
+    )
+
+
+xl_shard_dw = make_xl_shard_dw()

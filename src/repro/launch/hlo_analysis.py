@@ -6,7 +6,10 @@ under-counted by the trip count. This module re-derives per-chip FLOPs and
 HBM traffic from the HLO text with while-body costs multiplied by parsed trip
 counts — the numbers the §Roofline table uses.
 
-Model:
+The structural parsing (computations, op shapes, execution counts, module
+header) lives in ``repro.analysis.hlo_parser`` — shared with the hot-path
+contract auditor (DESIGN.md §10). This module keeps the cost model:
+
   * FLOPs — every dot/convolution, 2 * prod(lhs dims) * prod(rhs free dims),
     weighted by the execution count of its computation (ENTRY=1; fusion/call/
     cond inherit; while bodies multiply by trip count).
@@ -16,235 +19,102 @@ Model:
     constants / tuples / bitcasts are skipped (no traffic or aliased).
   * Trip count — largest integer literal compared against in the while
     condition computation (exact for lax.scan's 0..N counters).
+
+Unknown dtypes are never silently costed: the parser warns once per dtype
+and the result carries them under ``unknown_dtypes`` so a consumer can see
+when byte counts are approximate.
 """
 from __future__ import annotations
 
-import dataclasses
 import re
-from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s*(?P<opcode>[\w\-]+)\((?P<args>.*)$"
+from repro.analysis.hlo_parser import (  # re-exported for back-compat
+    HloModule,
+    Op,
+    shape_dims as _dims,
 )
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+(?:\([^)]*\))?.*\{\s*$")
-_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
-_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+__all__ = ["HloModule", "analyze_hlo", "analyze_module"]
+
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
-_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _RHS_CONTRACT_RE = re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}")
 _RHS_BATCH_RE = re.compile(r"rhs_batch_dims=\{([0-9,]*)\}")
 
 
-def _dims(type_str: str) -> List[Tuple[str, List[int]]]:
-    out = []
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        out.append((dt, [int(d) for d in dims.split(",") if d]))
-    return out
+def _dot_flops(module: HloModule, op: Op) -> float:
+    # operands resolved through shape map (first two operand names)
+    names = _OPERAND_RE.findall(op.rest.split("),")[0] + ")")
+    shapes = [module.shape_of.get(n) for n in names]
+    shapes = [s for s in shapes if s is not None]
+    if len(shapes) < 2:
+        return 0.0
+    lhs, rhs = _dims(shapes[0]), _dims(shapes[1])
+    if not lhs or not rhs:
+        return 0.0
+    lhs_dims, rhs_dims = lhs[0][1], rhs[0][1]
+    rc = _RHS_CONTRACT_RE.search(op.rest)
+    rb = _RHS_BATCH_RE.search(op.rest)
+    rc_dims = [int(d) for d in rc.group(1).split(",") if d] if rc else []
+    rb_dims = [int(d) for d in rb.group(1).split(",") if d] if rb else []
+    lhs_prod = 1
+    for d in lhs_dims:
+        lhs_prod *= d
+    rhs_free = 1
+    for i, d in enumerate(rhs_dims):
+        if i not in rc_dims and i not in rb_dims:
+            rhs_free *= d
+    return 2.0 * lhs_prod * rhs_free
 
 
-def _bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _dims(type_str):
-        n = 1
-        for d in dims:
-            n *= d
-        total += n * _DTYPE_BYTES.get(dt, 4)
-    return total
-
-
-@dataclasses.dataclass
-class Op:
-    name: str
-    type_str: str
-    opcode: str
-    rest: str
-
-    @property
-    def out_bytes(self) -> int:
-        return _bytes(self.type_str)
-
-
-@dataclasses.dataclass
-class Computation:
-    name: str
-    ops: List[Op]
-    is_fused: bool = False  # fused computations' internals don't touch HBM
-
-
-class HloModule:
-    def __init__(self, text: str):
-        self.computations: Dict[str, Computation] = {}
-        self.shape_of: Dict[str, str] = {}
-        self.entry: Optional[str] = None
-        self._parse(text)
-
-    def _parse(self, text: str) -> None:
-        current: Optional[Computation] = None
-        for raw in text.splitlines():
-            line = raw.rstrip()
-            if not line:
-                continue
-            if current is None:
-                m = _COMP_RE.match(line)
-                if m and ("{" in line):
-                    name = m.group("name")
-                    comp = Computation(
-                        name=name, ops=[], is_fused="fused_computation" in name
-                    )
-                    self.computations[name] = comp
-                    if line.startswith("ENTRY"):
-                        self.entry = name
-                    current = comp
-                continue
-            if line.strip() == "}" or line.strip().startswith("} //"):
-                current = None
-                continue
-            m = _OP_RE.match(line)
-            if m:
-                op = Op(
-                    name=m.group("name"),
-                    type_str=m.group("type"),
-                    opcode=m.group("opcode"),
-                    rest=m.group("args"),
-                )
-                current.ops.append(op)
-                self.shape_of[op.name] = op.type_str
-            else:
-                # parameter lines: "%p = f32[..] parameter(0)" handled above;
-                # anything else (constants spanning lines) ignored
-                pass
-
-    # -- execution counts ----------------------------------------------------
-
-    def trip_count(self, cond_name: str) -> int:
-        comp = self.computations.get(cond_name)
-        if comp is None:
-            return 1
-        best = 1
+def analyze_module(module: HloModule) -> Dict[str, object]:
+    counts = module.execution_counts()
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll_bytes = 0.0
+    for name, comp in module.computations.items():
+        mult = counts.get(name, 0.0)
+        if mult == 0.0:
+            continue
+        cf = 0.0
         for op in comp.ops:
-            if op.opcode == "constant":
-                mm = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
-                if mm:
-                    best = max(best, int(mm.group(1)))
-        return best
-
-    def execution_counts(self) -> Dict[str, float]:
-        counts: Dict[str, float] = defaultdict(float)
-        if self.entry is None:
-            return counts
-        stack = [(self.entry, 1.0)]
-        seen_guard = 0
-        while stack:
-            seen_guard += 1
-            if seen_guard > 100000:
-                break
-            name, mult = stack.pop()
-            counts[name] += mult
-            comp = self.computations.get(name)
-            if comp is None:
+            if op.opcode in ("dot", "convolution"):
+                cf += _dot_flops(module, op)
+            if comp.is_fused:
                 continue
-            for op in comp.ops:
-                called = _CALLED_RE.findall(op.rest)
-                branches = _BRANCH_RE.findall(op.rest)
-                if op.opcode == "while":
-                    body = cond = None
-                    mb = re.search(r"body=%?([\w.\-]+)", op.rest)
-                    mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
-                    if mb:
-                        body = mb.group(1)
-                    if mc:
-                        cond = mc.group(1)
-                    n = self.trip_count(cond) if cond else 1
-                    if body:
-                        stack.append((body, mult * n))
-                    if cond:
-                        stack.append((cond, mult * (n + 1)))
-                else:
-                    for c in called:
-                        stack.append((c, mult))
-                    for blist in branches:
-                        for b in _OPERAND_RE.findall(blist):
-                            stack.append((b, mult))
-        return counts
-
-    # -- flops -----------------------------------------------------------------
-
-    def _dot_flops(self, op: Op) -> float:
-        # operands resolved through shape map (first two operand names)
-        names = _OPERAND_RE.findall(op.rest.split("),")[0] + ")")
-        shapes = [self.shape_of.get(n) for n in names]
-        shapes = [s for s in shapes if s is not None]
-        if len(shapes) < 2:
-            return 0.0
-        lhs, rhs = _dims(shapes[0]), _dims(shapes[1])
-        if not lhs or not rhs:
-            return 0.0
-        lhs_dims, rhs_dims = lhs[0][1], rhs[0][1]
-        rc = _RHS_CONTRACT_RE.search(op.rest)
-        rb = _RHS_BATCH_RE.search(op.rest)
-        rc_dims = [int(d) for d in rc.group(1).split(",") if d] if rc else []
-        rb_dims = [int(d) for d in rb.group(1).split(",") if d] if rb else []
-        lhs_prod = 1
-        for d in lhs_dims:
-            lhs_prod *= d
-        rhs_free = 1
-        for i, d in enumerate(rhs_dims):
-            if i not in rc_dims and i not in rb_dims:
-                rhs_free *= d
-        return 2.0 * lhs_prod * rhs_free
-
-    def analyze(self) -> Dict[str, float]:
-        counts = self.execution_counts()
-        flops = 0.0
-        hbm_bytes = 0.0
-        coll_bytes = 0.0
-        per_comp_flops: Dict[str, float] = {}
-        for name, comp in self.computations.items():
-            mult = counts.get(name, 0.0)
-            if mult == 0.0:
+            if op.opcode in (
+                "parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "iota",
+            ):
                 continue
-            cf = 0.0
-            for op in comp.ops:
-                if op.opcode in ("dot", "convolution"):
-                    cf += self._dot_flops(op)
-                if comp.is_fused:
-                    continue
-                if op.opcode in (
-                    "parameter", "constant", "tuple", "get-tuple-element",
-                    "bitcast", "after-all", "iota",
-                ):
-                    continue
-                operand_b = sum(
-                    _bytes(self.shape_of[n])
-                    for n in _OPERAND_RE.findall(op.rest)
-                    if n in self.shape_of
-                )
-                traffic = op.out_bytes + operand_b
-                hbm_bytes += mult * traffic
-                if op.opcode.startswith(
-                    ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                     "collective-permute")
-                ) and not op.opcode.endswith("-done"):
-                    c = max(op.out_bytes, operand_b)
-                    if op.opcode.startswith("all-reduce"):
-                        c *= 2
-                    coll_bytes += mult * c
-            per_comp_flops[name] = cf
-            flops += mult * cf
-        return {
-            "flops": flops,
-            "hbm_bytes": hbm_bytes,
-            "collective_bytes": coll_bytes,
-        }
+            out_b = module.bytes_of(op.type_str)
+            operand_b = sum(
+                module.bytes_of(module.shape_of[n])
+                for n in _OPERAND_RE.findall(op.rest)
+                if n in module.shape_of
+            )
+            traffic = out_b + operand_b
+            hbm_bytes += mult * traffic
+            if op.opcode.startswith(
+                ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                 "collective-permute")
+            ) and not op.opcode.endswith("-done"):
+                c = max(out_b, operand_b)
+                if op.opcode.startswith("all-reduce"):
+                    c *= 2
+                coll_bytes += mult * c
+        flops += mult * cf
+    result: Dict[str, object] = {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll_bytes,
+    }
+    # surface, don't bury: any dtype the byte model guessed at (4 B/elem)
+    unknown: List[str] = sorted(module.unknown_dtypes)
+    if unknown:
+        result["unknown_dtypes"] = unknown
+    return result
 
 
-def analyze_hlo(text: str) -> Dict[str, float]:
-    return HloModule(text).analyze()
+def analyze_hlo(text: str) -> Dict[str, object]:
+    return analyze_module(HloModule(text))

@@ -242,3 +242,63 @@ def make_decode_step(model):
         return logits, new_caches
 
     return decode
+
+
+# ---------------------------------------------------------------------------
+# contract auditor registration (repro.analysis, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def analysis_programs():
+    """Registry hook: the per-batch SET-MLP train step (the legacy/benchmark
+    path and the building block of every fused segment). Deliberately NOT
+    donated: ``runtime.supervisor.retry_step`` re-enters it with the same
+    buffers after a transient fault, which donation would invalidate."""
+    from repro.analysis.registry import AuditProgram, Contract, ProgramSpec
+    from repro.core import sparsity
+
+    dims = (256, 128, 64)
+    batch = 32
+
+    def build() -> AuditProgram:
+        from repro.models.mlp import SparseMLP
+
+        config = SparseMLPConfig(layer_dims=dims, epsilon=16, dropout=0.0)
+        model = SparseMLP(config, seed=0)
+        opt = MomentumSGD(momentum=0.9, weight_decay=2e-4)
+
+        def program(params, opt_state, topo_arrays, x, y, lr, rng):
+            core = make_mlp_step_core(config, opt, topo_arrays)
+            return core(params, opt_state, (x, y, lr), rng)
+
+        args = (
+            model.params(),
+            opt.init(model.params()),
+            model.topo_arrays(),
+            jnp.zeros((batch, dims[0]), jnp.float32),
+            jnp.zeros((batch,), jnp.int32),
+            jnp.asarray(0.01, jnp.float32),
+            jax.random.PRNGKey(0),
+        )
+        nnz = [int(t.rows.shape[0]) for t in model.topos]
+        return AuditProgram(
+            make=lambda donate: jax.jit(program, donate_argnums=donate),
+            args=args,
+            meta={"dims": dims, "batch": batch, "nnz": nnz},
+        )
+
+    return [
+        ProgramSpec(
+            name="launch.mlp_train_step",
+            subsystem=__name__,
+            contract=Contract(
+                max_unsorted_scatter=1,
+                max_unsorted_scatter_elems=batch * dims[-1],
+                max_intermediate_elems=sparsity.SPMM_TEMP_BUDGET_ELEMS,
+                max_temp_bytes=8 * 1024 * 1024,
+                expected_compiles=1,
+            ),
+            build=build,
+            notes="per-batch step; undonated by design (retry_step re-entry)",
+        )
+    ]

@@ -1,0 +1,46 @@
+"""Central buffer-donation policy for every hot-path jit.
+
+One place decides whether ``donate_argnums`` is requested, instead of the
+``(0, 1) if jax.default_backend() != "cpu" else ()`` expression previously
+copy-pasted across trainer/wasap/ops/engine.  The policy:
+
+* accelerators — donate: params/optimizer/cache buffers are updated in place,
+  which is what keeps the fused epoch and the decode loop allocation-flat.
+* CPU — don't donate.  CPU XLA *does* implement input/output aliasing on
+  current jaxlibs (it was a warn-and-ignore no-op when these call sites were
+  first written), but the CI benchmarks and equivalence tests deliberately
+  re-run several implementations from the same initial buffers; donation
+  would invalidate those arrays after the first call.  Keeping CPU
+  conservative preserves that, and costs nothing the CI measures.
+
+The hot-path contract auditor (``repro.analysis``) does NOT trust this
+policy: every builder that takes buffers it should donate accepts an explicit
+``donate=`` override, and the audit force-builds a donated variant and
+verifies in the compiled HLO that input/output aliasing actually happened
+(DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def backend_donates() -> bool:
+    """Whether the repo policy requests donation on this backend."""
+    return jax.default_backend() != "cpu"
+
+
+def donate_argnums(
+    *argnums: int, override: Optional[Tuple[int, ...]] = None
+) -> Tuple[int, ...]:
+    """The ``donate_argnums`` tuple for a hot-path jit.
+
+    ``override`` short-circuits the policy: builders thread their ``donate=``
+    parameter through here so the auditor (and tests) can force donation on
+    (to machine-check aliasing) or off (to keep double-call compile-count
+    probes safe) regardless of backend. ``None`` means "apply the policy".
+    """
+    if override is not None:
+        return tuple(override)
+    return tuple(argnums) if backend_donates() else ()

@@ -44,6 +44,7 @@ from repro.core.importance import PruningSchedule
 from repro.core.sparsity import BlockMeta, BlockTopology, ElementTopology
 from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
 from repro.models.transformer import ModelConfig, PatternLM
+from repro.runtime import donation
 from repro.serve.compact import (
     CompactionReport,
     compact_block_lm,
@@ -108,9 +109,10 @@ class _JitCache:
         return {k: f._cache_size() for k, f in self._d.items()}
 
 
-def _donate(*argnums: int) -> Tuple[int, ...]:
-    # donation is a no-op (with a warning) on CPU — only request it elsewhere
-    return argnums if jax.default_backend() != "cpu" else ()
+# buffer-donation decisions route through the central policy; builders take
+# an explicit ``donate`` override so the contract auditor can force-build
+# donated/undonated variants (DESIGN.md §10)
+_donate = donation.donate_argnums
 
 
 class SparseInferenceEngine:
@@ -258,6 +260,7 @@ class SparseInferenceEngine:
     def _build_classify(self):
         config = self.model.config
 
+        # params/topo are served again by the next call — nothing to donate
         @jax.jit
         def fn(params, topo, xb):
             return mlp_forward(params, topo, xb, config, infer=True)
@@ -322,7 +325,7 @@ class SparseInferenceEngine:
         )
         return np.asarray(next_tok)[: len(prompts)]
 
-    def _build_prefill(self, bucket: int):
+    def _build_prefill(self, bucket: int, donate=None):
         model = self.model
         n_rep = model.cfg.n_rep
 
@@ -362,7 +365,7 @@ class SparseInferenceEngine:
             )
             return next_tok, {"stack": new_stack, "rest": new_rest}
 
-        return jax.jit(fn, donate_argnums=_donate(2))
+        return jax.jit(fn, donate_argnums=_donate(2, override=donate))
 
     def decode_step(self, tokens: np.ndarray, pos: np.ndarray) -> np.ndarray:
         """One decode step for ALL slots (shape-stable: inactive slots run
@@ -377,7 +380,7 @@ class SparseInferenceEngine:
         )
         return np.asarray(next_tok)
 
-    def _build_decode(self):
+    def _build_decode(self, donate=None):
         model = self.model
 
         def fn(params, topo, caches, tokens, pos):
@@ -391,7 +394,7 @@ class SparseInferenceEngine:
             logits, new_caches = jax.vmap(one)(caches, tokens, pos)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
 
-        return jax.jit(fn, donate_argnums=_donate(2))
+        return jax.jit(fn, donate_argnums=_donate(2, override=donate))
 
 
 # ---------------------------------------------------------------------------
@@ -491,3 +494,135 @@ def _restore_lm(mgr: CheckpointManager, step, meta) -> PatternLM:
             )
         model.topologies[slot] = new_list
     return model
+
+
+# ---------------------------------------------------------------------------
+# contract auditor registration (repro.analysis, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def analysis_programs():
+    """Registry hook: the three served entry points, built at smoke scale.
+
+    Serving is forward-only and *small-problem* by design, so ``espmm``'s
+    inference dispatch legitimately picks the scatter formulation below the
+    forward-only cliff (``SPMM_INFER_*``) — classify's contract therefore
+    BOUNDS unsorted scatters (one per layer, output-sized) instead of
+    forbidding them; the KV-cache slot inserts in prefill/decode are
+    likewise bounded scatters into cache-leaf-sized buffers, never
+    nnz/dense-scale."""
+    import dataclasses as _dc
+
+    from repro.analysis.registry import AuditProgram, Contract, ProgramSpec
+
+    mlp_dims = (32, 24, 20, 6)
+    bucket = 8
+
+    def build_classify() -> AuditProgram:
+        cfg = SparseMLPConfig(
+            layer_dims=mlp_dims, epsilon=6, impl="element", dropout=0.0
+        )
+        eng = SparseInferenceEngine(SparseMLP(cfg, seed=0))
+        args = (
+            eng._params, eng._topo,
+            jnp.zeros((bucket, mlp_dims[0]), jnp.float32),
+        )
+        return AuditProgram(
+            make=lambda donate: jax.jit(
+                eng._build_classify(), donate_argnums=donate
+            ) if donate else eng._build_classify(),
+            args=args,
+            meta={"dims": mlp_dims, "bucket": bucket},
+        )
+
+    def _lm_engine():
+        from repro import configs
+
+        lm_cfg = _dc.replace(
+            configs.get_spec("qwen1.5-0.5b").smoke,
+            ffn="sparse", sparse_block=16, sparse_density=0.5, d_ff=64,
+        )
+        return SparseInferenceEngine(
+            PatternLM(lm_cfg, seed=0),
+            engine=EngineConfig(
+                max_slots=2, max_len=16, prefill_buckets=(8,),
+                prefill_batch=2, batch_buckets=(1, 8),
+            ),
+        )
+
+    def build_prefill() -> AuditProgram:
+        eng = _lm_engine()
+        B, bkt = eng.cfg.prefill_batch, eng.cfg.prefill_buckets[0]
+        args = (
+            eng._params, eng._topo, eng._caches,
+            jnp.zeros((B, bkt), jnp.int32),
+            jnp.ones((B,), jnp.int32),
+            jnp.zeros((B,), jnp.int32),
+        )
+        return AuditProgram(
+            make=lambda donate: eng._build_prefill(bkt, donate=donate),
+            args=args,
+            meta={"prefill_batch": B, "bucket": bkt,
+                  "slots": eng.cfg.max_slots},
+        )
+
+    def build_decode() -> AuditProgram:
+        eng = _lm_engine()
+        S = eng.cfg.max_slots
+        args = (
+            eng._params, eng._topo, eng._caches,
+            jnp.zeros((S,), jnp.int32),
+            jnp.zeros((S,), jnp.int32),
+        )
+        return AuditProgram(
+            make=lambda donate: eng._build_decode(donate=donate),
+            args=args,
+            meta={"slots": S, "max_len": eng.cfg.max_len},
+        )
+
+    return [
+        ProgramSpec(
+            name="serve.classify",
+            subsystem=__name__,
+            contract=Contract(
+                # espmm_infer's scatter formulation: one output-sized
+                # scatter-add per layer at sub-threshold serving scale
+                max_unsorted_scatter=len(mlp_dims) - 1,
+                max_unsorted_scatter_elems=bucket * max(mlp_dims),
+                max_intermediate_elems=64 * 1024,
+                max_temp_bytes=1024 * 1024,
+                expected_compiles=1,
+            ),
+            build=build_classify,
+            notes="forward-only MLP classify; params reused, no donation",
+        ),
+        ProgramSpec(
+            name="serve.prefill",
+            subsystem=__name__,
+            contract=Contract(
+                # KV slot inserts: one scatter per cache leaf, cache-sized
+                max_unsorted_scatter=16,
+                max_unsorted_scatter_elems=512 * 1024,
+                max_intermediate_elems=1024 * 1024,
+                donate_argnums=(2,),
+                max_temp_bytes=16 * 1024 * 1024,
+                expected_compiles=1,
+            ),
+            build=build_prefill,
+            notes="batched causal prefill seeding slot caches (donated)",
+        ),
+        ProgramSpec(
+            name="serve.decode",
+            subsystem=__name__,
+            contract=Contract(
+                max_unsorted_scatter=16,
+                max_unsorted_scatter_elems=512 * 1024,
+                max_intermediate_elems=1024 * 1024,
+                donate_argnums=(2,),
+                max_temp_bytes=16 * 1024 * 1024,
+                expected_compiles=1,
+            ),
+            build=build_decode,
+            notes="all-slots vmapped decode step, caches donated",
+        ),
+    ]

@@ -61,6 +61,7 @@ from repro.data.synthetic import Dataset
 from repro.launch.steps import make_mlp_step_core, make_mlp_train_step, scan_segment
 from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
 from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
+from repro.runtime import donation
 from repro.runtime.supervisor import retry_step
 
 __all__ = [
@@ -97,6 +98,19 @@ def make_step_fn(config: SparseMLPConfig, opt: MomentumSGD):
     return make_mlp_train_step(config, opt)
 
 
+def make_segment_program(config: SparseMLPConfig, opt: MomentumSGD):
+    """The un-jitted epoch-segment program. Exposed separately so the
+    contract auditor (DESIGN.md §10) can build fresh jitted variants —
+    donated for the aliasing check, undonated for trace/compile probes —
+    without touching the lru-cached production jit below."""
+
+    def segment(params, opt_state, topo_arrays, x_all, y_all, perm, lrs, key):
+        step_core = make_mlp_step_core(config, opt, topo_arrays, x_all, y_all)
+        return scan_segment(step_core, params, opt_state, key, (perm, lrs))
+
+    return segment
+
+
 @functools.lru_cache(maxsize=32)
 def make_segment_fn(config: SparseMLPConfig, opt: MomentumSGD):
     """Jitted multi-minibatch epoch segment.
@@ -104,18 +118,15 @@ def make_segment_fn(config: SparseMLPConfig, opt: MomentumSGD):
     ``segment(params, opt_state, topo_arrays, x_all, y_all, perm, lrs, key)``
     gathers the epoch's batches from the device-resident dataset by the
     (steps, batch) index permutation and runs them all inside one
-    ``lax.scan``; params/opt_state buffers are donated (where the backend
-    supports it) so the optimizer state never leaves the device. Cached per
-    (model config, optimizer) so repeated trainers share the jit cache.
+    ``lax.scan``; params/opt_state buffers are donated per the central
+    policy (``repro.runtime.donation``) so the optimizer state never leaves
+    the device. Cached per (model config, optimizer) so repeated trainers
+    share the jit cache.
     """
-
-    def segment(params, opt_state, topo_arrays, x_all, y_all, perm, lrs, key):
-        step_core = make_mlp_step_core(config, opt, topo_arrays, x_all, y_all)
-        return scan_segment(step_core, params, opt_state, key, (perm, lrs))
-
-    # donation is a no-op (with a warning) on CPU — only request it elsewhere
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    return jax.jit(segment, donate_argnums=donate)
+    return jax.jit(
+        make_segment_program(config, opt),
+        donate_argnums=donation.donate_argnums(0, 1),
+    )
 
 
 @functools.lru_cache(maxsize=64)
@@ -820,3 +831,66 @@ class XLTrainer:
             if self.epoch_end_hook is not None:
                 self.epoch_end_hook(self, epoch)
         return self.history
+
+
+# ---------------------------------------------------------------------------
+# contract auditor registration (repro.analysis, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def analysis_programs():
+    """Registry hook: the fused epoch segment — the headline training hot
+    path — at an audit scale sitting ABOVE the espmm auto-dispatch
+    thresholds (nnz >= 2048), so the audit traces the custom-VJP kernels
+    production uses, not the small-model scatter fallback."""
+    from repro.analysis.registry import AuditProgram, Contract, ProgramSpec
+
+    audit_dims = (784, 256, 100)
+    audit_eps = 20.0
+    batch, steps = 32, 2
+
+    def build() -> AuditProgram:
+        cfg = SparseMLPConfig(
+            layer_dims=audit_dims, epsilon=audit_eps, dropout=0.0
+        )
+        model = SparseMLP(cfg, seed=0)
+        opt = MomentumSGD(momentum=0.9, weight_decay=2e-4)
+        n_train = steps * batch
+        args = (
+            model.params(),
+            opt.init(model.params()),
+            model.topo_arrays(),
+            jnp.zeros((n_train, audit_dims[0]), jnp.float32),
+            jnp.zeros((n_train,), jnp.int32),
+            jnp.arange(n_train, dtype=jnp.int32).reshape(steps, batch),
+            jnp.full((steps,), 0.01, jnp.float32),
+            jax.random.PRNGKey(0),
+        )
+        program = make_segment_program(cfg, opt)
+        nnz = [int(t.rows.shape[0]) for t in model.topos]
+        return AuditProgram(
+            make=lambda donate: jax.jit(program, donate_argnums=donate),
+            args=args,
+            meta={"dims": audit_dims, "batch": batch, "nnz": nnz},
+        )
+
+    from repro.core import sparsity
+
+    return [
+        ProgramSpec(
+            name="train.segment",
+            subsystem=__name__,
+            contract=Contract(
+                # the one legal unsorted scatter: the CE-loss label gather's
+                # backward, sized (batch, n_classes) — never nnz-scale
+                max_unsorted_scatter=1,
+                max_unsorted_scatter_elems=batch * audit_dims[-1],
+                max_intermediate_elems=sparsity.SPMM_TEMP_BUDGET_ELEMS,
+                donate_argnums=(0, 1),
+                max_temp_bytes=8 * 1024 * 1024,
+                expected_compiles=1,
+            ),
+            build=build,
+            notes="fused epoch: scan over minibatch steps, params/opt donated",
+        )
+    ]

@@ -47,7 +47,13 @@ from repro.core.topology import (
     element_shard_bounds,
     pad_shard,
 )
-from repro.kernels.ops import xl_shard_acc, xl_shard_dw
+from repro.kernels.ops import (
+    make_xl_shard_acc,
+    make_xl_shard_dw,
+    xl_shard_acc,
+    xl_shard_dw,
+)
+from repro.runtime import donation
 from repro.xl.planner import XLPlan
 
 __all__ = [
@@ -285,9 +291,15 @@ class XLModelState:
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _bias_add(acc, bias_pad):
+def _bias_add_impl(acc, bias_pad):
     return acc + bias_pad[:, None]
+
+
+# the accumulator is dead after the add (forward() rebinds to z), so donate
+# it per the central policy — XLA reuses the (d_max, B) buffer in place
+_bias_add = jax.jit(
+    _bias_add_impl, donate_argnums=donation.donate_argnums(0)
+)
 
 
 @jax.jit
@@ -619,3 +631,74 @@ class StreamExecutor:
                 dz = _act_bwd(dh, zs[l - 1], self._slopes[l - 1])
         self._note_bytes(n + 5)
         return float(loss)
+
+
+# ---------------------------------------------------------------------------
+# contract auditor registration (repro.analysis, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def analysis_programs():
+    """Registry hook: the two streamed shard programs — the ONLY device
+    matmuls the XL substrate ever dispatches. Audit scale: d_max=32, B=8,
+    one 128-slot shard of 64-wide chunks (shapes are arbitrary here; the
+    contracts are structural)."""
+    from repro.analysis.registry import AuditProgram, Contract, ProgramSpec
+
+    d_max, B, cap, chunk = 32, 8, 128, 64
+
+    def build_acc() -> AuditProgram:
+        idx = jnp.arange(cap, dtype=jnp.int32)
+        args = (
+            jnp.zeros((d_max, B), jnp.float32),       # acc (donated)
+            jnp.zeros((d_max, B), jnp.float32),       # srcT
+            jnp.zeros((cap,), jnp.float32),           # values
+            idx % d_max,                              # gather_idx
+            jnp.sort(idx % d_max),                    # segment_idx (sorted)
+        )
+        return AuditProgram(
+            make=lambda donate: make_xl_shard_acc(donate=donate),
+            args=args,
+            kwargs={"n_segments": d_max, "chunk": chunk},
+            meta={"d_max": d_max, "batch": B, "capacity": cap},
+        )
+
+    def build_dw() -> AuditProgram:
+        idx = jnp.arange(cap, dtype=jnp.int32)
+        args = (
+            jnp.zeros((d_max, B), jnp.float32),       # xT
+            jnp.zeros((d_max, B), jnp.float32),       # dyT
+            idx % d_max,                              # rows
+            jnp.sort(idx % d_max),                    # cols
+        )
+        return AuditProgram(
+            make=lambda donate: make_xl_shard_dw(donate=donate),
+            args=args,
+            kwargs={"chunk": chunk},
+            meta={"d_max": d_max, "batch": B, "capacity": cap},
+        )
+
+    shard_contract = dict(
+        # sorted segment-sum only: ZERO unsorted scatters anywhere in the
+        # streamed substrate, forward or backward
+        max_unsorted_scatter=0,
+        max_intermediate_elems=4 * chunk * B,
+        max_temp_bytes=1024 * 1024,
+        expected_compiles=1,
+    )
+    return [
+        ProgramSpec(
+            name="xl.shard_acc",
+            subsystem=__name__,
+            contract=Contract(donate_argnums=(0,), **shard_contract),
+            build=build_acc,
+            notes="one program for streamed fwd AND dX; acc donated",
+        ),
+        ProgramSpec(
+            name="xl.shard_dw",
+            subsystem=__name__,
+            contract=Contract(**shard_contract),
+            build=build_dw,
+            notes="per-shard dW batch contraction; all inputs reused",
+        ),
+    ]

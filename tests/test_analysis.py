@@ -1,0 +1,532 @@
+"""Contract auditor (repro.analysis, DESIGN.md §10).
+
+The load-bearing tests here are the MUTATION tests: each one deliberately
+reintroduces a performance bug this repo has already engineered out —
+a dense scatter in the backward, a dropped ``donate_argnums``, a host
+callback inside a jitted program, tracer-hostile source idioms — and
+asserts the audit fails *naming the right contract*. If these pass, the
+auditor is known to catch regressions, not just bless the status quo.
+"""
+import os
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_audit, jaxpr_audit, lint, registry, waivers
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.compilecheck import expect_compiles, snapshot
+from repro.analysis.hlo_parser import HloModule, shape_bytes
+from repro.analysis.registry import AuditProgram, Contract
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.optim.sgd import MomentumSGD
+from repro.train.trainer import make_segment_program
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _checks(violations):
+    return {v.check for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_collects_every_hot_subsystem():
+    specs = registry.collect()
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names))
+    subsystems = {s.subsystem for s in specs}
+    assert set(registry.HOOK_MODULES) <= subsystems
+    # the headline programs are registered
+    for expected in ("train.segment", "wasap.phase1_epoch", "xl.shard_acc",
+                     "xl.shard_dw", "serve.prefill", "serve.decode"):
+        assert expected in names
+
+
+def test_registry_get_unknown_raises():
+    with pytest.raises(KeyError, match="no registered hot-path program"):
+        registry.get("no.such.program")
+    assert registry.expected_compiles("train.segment") >= 1
+
+
+# ---------------------------------------------------------------------------
+# mutation: scatter reintroduced into the backward
+# ---------------------------------------------------------------------------
+
+
+def _segment_case(element_impl):
+    dims, batch, steps = (40, 32, 10), 8, 2
+    cfg = SparseMLPConfig(
+        layer_dims=dims, epsilon=6, dropout=0.0, element_impl=element_impl
+    )
+    model = SparseMLP(cfg, seed=0)
+    opt = MomentumSGD(momentum=0.9, weight_decay=2e-4)
+    n = steps * batch
+    args = (
+        model.params(), opt.init(model.params()), model.topo_arrays(),
+        jnp.zeros((n, dims[0]), jnp.float32), jnp.zeros((n,), jnp.int32),
+        jnp.arange(n, dtype=jnp.int32).reshape(steps, batch),
+        jnp.full((steps,), 0.01, jnp.float32), jax.random.PRNGKey(0),
+    )
+    contract = Contract(
+        max_unsorted_scatter=1,  # the CE-loss label scatter, nothing else
+        max_unsorted_scatter_elems=batch * dims[-1],
+    )
+    return jax.jit(make_segment_program(cfg, opt)), args, contract
+
+
+def test_mutation_scatter_backward_fails_named_contract():
+    """Swapping the custom-VJP espmm for the scatter impl reintroduces
+    nnz-addressed unsorted scatter-adds in fwd+bwd — the audit must fail
+    the train.segment contract by name."""
+    fn, args, contract = _segment_case("scatter")
+    vs = jaxpr_audit.trace_and_audit(fn, args, contract, "train.segment")
+    assert "unsorted-scatter" in _checks(vs)
+    v = next(v for v in vs if v.check == "unsorted-scatter")
+    assert v.program == "train.segment"
+    assert v.waiver_id == "train.segment:unsorted-scatter"
+
+
+def test_custom_impl_passes_same_contract():
+    """Positive control: the designed formulation satisfies the very
+    contract the mutation fails."""
+    fn, args, contract = _segment_case("custom")
+    assert jaxpr_audit.trace_and_audit(fn, args, contract, "train.segment") == []
+
+
+# ---------------------------------------------------------------------------
+# mutation: host callback leaked into a jitted program
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_host_callback_fails_forbidden_primitive():
+    def leaky(x):
+        y = jnp.sin(x)
+        return jax.pure_callback(
+            lambda a: np.asarray(a), jax.ShapeDtypeStruct(x.shape, x.dtype), y
+        )
+
+    vs = jaxpr_audit.trace_and_audit(
+        jax.jit(leaky), (jnp.ones((4,)),), Contract(), "train.segment"
+    )
+    assert _checks(vs) == {"forbidden-primitive"}
+    assert vs[0].program == "train.segment"
+    assert "pure_callback" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# mutation: dense materialization + f64 drift
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_dense_materialization_fails_budget():
+    def dense(a, b):
+        return jnp.outer(a, b).sum(axis=1)  # (512, 512) intermediate
+
+    vs = jaxpr_audit.trace_and_audit(
+        jax.jit(dense), (jnp.ones((512,)), jnp.ones((512,))),
+        Contract(max_intermediate_elems=1024), "xl.shard_acc",
+    )
+    assert "dense-materialization" in _checks(vs)
+    assert vs[0].waiver_id == "xl.shard_acc:dense-materialization"
+
+
+def test_mutation_f64_drift_detected():
+    from jax.experimental import enable_x64
+
+    def drift(x):
+        return x.astype(jnp.float64) * 2.0
+
+    with enable_x64():
+        vs = jaxpr_audit.trace_and_audit(
+            jax.jit(drift), (jnp.ones((4,), jnp.float32),),
+            Contract(), "train.segment",
+        )
+    assert "f64-drift" in _checks(vs)
+
+
+def test_audit_recurses_into_scan_bodies():
+    def body(c, x):
+        big = jnp.outer(x, x)  # hidden inside the scan body
+        return c + big.sum(), None
+
+    def scanned(xs):
+        out, _ = jax.lax.scan(body, 0.0, xs)
+        return out
+
+    vs = jaxpr_audit.trace_and_audit(
+        jax.jit(scanned), (jnp.ones((3, 128)),),
+        Contract(max_intermediate_elems=1024), "p",
+    )
+    assert "dense-materialization" in _checks(vs)
+
+
+# ---------------------------------------------------------------------------
+# mutation: dropped donate_argnums (compiled-level aliasing check)
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_dropped_donation_fails_aliasing():
+    """An AuditProgram whose ``make`` ignores the donate request models a
+    refactor that silently dropped ``donate_argnums`` — the compiled module
+    header then carries no input_output_alias and the audit fails."""
+
+    def step(acc, x):
+        return acc + x, x.sum()
+
+    args = (jnp.ones((64, 64)), jnp.ones((64, 64)))
+    contract = Contract(donate_argnums=(0,))
+
+    dropped = AuditProgram(make=lambda donate: jax.jit(step), args=args)
+    vs = hlo_audit.audit_compiled(dropped, contract, "xl.shard_acc")
+    assert _checks(vs) == {"donation-aliasing"}
+    assert vs[0].program == "xl.shard_acc"
+
+    honored = AuditProgram(
+        make=lambda donate: jax.jit(step, donate_argnums=donate), args=args
+    )
+    assert hlo_audit.audit_compiled(honored, contract, "xl.shard_acc") == []
+
+
+def test_mutation_dropped_donation_on_registered_program():
+    """Same mutation through a real registered spec (the cheap XL shard
+    accumulator), proving registry plumbing reaches the compiled check."""
+    spec = registry.get("xl.shard_acc")
+    prog = spec.build()
+    dropped = AuditProgram(
+        make=lambda donate: prog.make(()), args=prog.args, kwargs=prog.kwargs
+    )
+    vs = hlo_audit.audit_compiled(dropped, spec.contract, spec.name)
+    assert "donation-aliasing" in _checks(vs)
+    assert vs[0].waiver_id == "xl.shard_acc:donation-aliasing"
+
+
+def test_temp_bytes_ceiling_enforced():
+    def hungry(x):
+        y = jnp.outer(x, x)          # ~4 MB f32 temp
+        return jnp.tanh(y).sum()
+
+    prog = AuditProgram(
+        make=lambda donate: jax.jit(hungry), args=(jnp.ones((1024,)),)
+    )
+    vs = hlo_audit.audit_compiled(
+        prog, Contract(max_temp_bytes=64 * 1024), "p"
+    )
+    assert "temp-bytes" in _checks(vs)
+
+
+# ---------------------------------------------------------------------------
+# HLO parser: module-header facts
+# ---------------------------------------------------------------------------
+
+_ALIAS_HEADER = (
+    "HloModule jit_step, is_scheduled=true, "
+    "input_output_alias={ {0}: (0, {}, may-alias), {1}: (2, {}, may-alias) }, "
+    "entry_computation_layout={(f32[8,4], f32[8,4])->f32[8,4]}"
+)
+
+
+def test_hlo_parser_alias_header_nested_braces():
+    mod = HloModule(_ALIAS_HEADER + "\n\nENTRY main {\n}\n")
+    assert mod.input_output_alias == [(0, 0), (1, 2)]
+
+
+def test_hlo_parser_no_alias_header():
+    assert HloModule("HloModule jit_f\n").input_output_alias == []
+
+
+def test_unknown_dtype_warns_once_and_is_recorded():
+    unknown = set()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        n = shape_bytes("mystery9[3,5]", unknown=unknown)
+        shape_bytes("mystery9[2]", unknown=unknown)  # second use: no rewarn
+    assert n == 3 * 5 * 4  # documented 4-byte fallback
+    assert unknown == {"mystery9"}
+    msgs = [str(w.message) for w in caught if "mystery9" in str(w.message)]
+    assert len(msgs) == 1
+
+
+# ---------------------------------------------------------------------------
+# AST lint: seeded violations
+# ---------------------------------------------------------------------------
+
+HOT_PATH = "src/repro/train/trainer.py"  # any HOT_FILE_SUFFIXES member
+
+
+def _rules(src, relpath="src/repro/models/thing.py"):
+    findings = lint.lint_source(textwrap.dedent(src), relpath)
+    return [f.rule for f in findings], findings
+
+
+def test_lint_host_sync_item_in_jitted_fn():
+    rules, findings = _rules(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x.sum().item()
+        """
+    )
+    assert rules == ["host-sync"]
+    assert findings[0].qualname == "f"
+    assert findings[0].waiver_id == (
+        "lint:host-sync:src/repro/models/thing.py:f"
+    )
+
+
+def test_lint_host_sync_float_on_traced_param_only():
+    rules, _ = _rules(
+        """
+        import jax
+
+        @jax.jit
+        def f(x, *, zeta):
+            n = int(zeta * 10)      # static keyword-only config: fine
+            return float(x) + n     # traced param: flagged
+        """
+    )
+    assert rules == ["host-sync"]
+
+
+def test_lint_tracer_branch():
+    rules, findings = _rules(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """
+    )
+    assert rules == ["tracer-branch"]
+    assert "lax.cond" in findings[0].message
+
+
+def test_lint_shape_branch_exempt():
+    rules, _ = _rules(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x.ndim == 2:
+                return x.sum()
+            return x
+        """
+    )
+    assert rules == []
+
+
+def test_lint_nested_def_inherits_traced_region():
+    rules, findings = _rules(
+        """
+        import jax
+
+        @jax.jit
+        def outer(x):
+            def inner(y):
+                return float(y)
+            return inner(x)
+        """
+    )
+    assert rules == ["host-sync"]
+    assert findings[0].qualname == "outer.inner"
+
+
+def test_lint_missing_donation_hot_file_only():
+    src = """
+        import jax
+
+        @jax.jit
+        def step(params, opt_state, x):
+            return params, opt_state
+        """
+    rules, findings = _rules(src, relpath=HOT_PATH)
+    assert rules == ["jit-missing-donation"]
+    assert findings[0].waiver_id == (
+        f"lint:jit-missing-donation:{HOT_PATH}:step"
+    )
+    # same source outside the hot set: silent
+    rules, _ = _rules(src, relpath="src/repro/models/thing.py")
+    assert rules == []
+
+
+def test_lint_donation_satisfied_by_keyword():
+    rules, _ = _rules(
+        """
+        import jax
+        from repro.runtime import donation
+
+        @jax.jit(donate_argnums=donation.donate_argnums(1))
+        def step(params, opt_state, x):
+            return params, opt_state
+
+        def _impl(acc, u):
+            return acc + u
+
+        applied = jax.jit(_impl, donate_argnums=donation.donate_argnums(0))
+        """,
+        relpath=HOT_PATH,
+    )
+    assert rules == []
+
+
+def test_lint_call_form_missing_donation():
+    rules, _ = _rules(
+        """
+        import jax
+
+        def _impl(acc, u):
+            return acc + u
+
+        applied = jax.jit(_impl)
+        """,
+        relpath=HOT_PATH,
+    )
+    assert rules == ["jit-missing-donation"]
+
+
+def test_lint_src_tree_is_clean_modulo_waivers():
+    """The repo's own source passes its own lint, modulo the documented
+    waiver file — the zero-undocumented-waivers acceptance gate."""
+    findings = lint.lint_tree(REPO_ROOT, "src")
+    wlist = waivers.load_waivers(
+        os.path.join(REPO_ROOT, waivers.DEFAULT_WAIVERS_PATH)
+    )
+    unwaived, _, _ = waivers.apply_waivers(findings, wlist)
+    assert unwaived == [], "\n".join(str(f) for f in unwaived)
+
+
+# ---------------------------------------------------------------------------
+# waivers
+# ---------------------------------------------------------------------------
+
+
+def test_waiver_parse_roundtrip():
+    ws = waivers.parse_waivers(
+        '# header comment\n'
+        '[[waiver]]\n'
+        'id = "a:b"  # trailing comment\n'
+        'reason = "says \\"why\\""\n'
+        '\n'
+        '[[waiver]]\n'
+        'id = "c:d"\n'
+        'reason = "other"\n'
+    )
+    assert [(w.id, w.reason) for w in ws] == [
+        ("a:b", 'says "why"'), ("c:d", "other"),
+    ]
+
+
+@pytest.mark.parametrize("bad,match", [
+    ('[[waiver]]\nid = "a:b"\n', "needs both"),
+    ('[[waiver]]\nid = "a:b"\nreason = "  "\n', "empty reason"),
+    ('[[waiver]]\nid = "a"\nreason = "r"\n'
+     '[[waiver]]\nid = "a"\nreason = "r"\n', "duplicate"),
+    ('[table]\nid = "a"\n', "unsupported syntax"),
+])
+def test_waiver_parse_errors(bad, match):
+    with pytest.raises(ValueError, match=match):
+        waivers.parse_waivers(bad)
+
+
+def test_apply_waivers_splits_and_flags_stale():
+    vs = [
+        jaxpr_audit.Violation("p", "unsorted-scatter", "m1"),
+        jaxpr_audit.Violation("q", "f64-drift", "m2"),
+    ]
+    ws = [
+        waivers.Waiver("p:unsorted-scatter", "known", 1),
+        waivers.Waiver("gone:check", "stale", 5),
+    ]
+    unwaived, waived, unused = waivers.apply_waivers(vs, ws)
+    assert [v.waiver_id for v in unwaived] == ["q:f64-drift"]
+    assert [(v.waiver_id, w.reason) for v, w in waived] == [
+        ("p:unsorted-scatter", "known")
+    ]
+    assert [w.id for w in unused] == ["gone:check"]
+
+
+# ---------------------------------------------------------------------------
+# compilecheck helper
+# ---------------------------------------------------------------------------
+
+
+def test_expect_compiles_jitted_fn():
+    f = jax.jit(lambda x: x * 3)
+    x = jnp.ones((7,))
+    with expect_compiles(f, 1):
+        f(x)
+    with expect_compiles(f, 0):
+        f(x)  # warm: same trace
+    with pytest.raises(AssertionError, match="contract expects exactly"):
+        with expect_compiles(f, 0):
+            f(jnp.ones((9,)))  # new shape -> new executable
+
+
+def test_expect_compiles_counter_sources():
+    counts = {"a": 0, "b": 0}
+    with expect_compiles(lambda: dict(counts), 3):
+        counts["a"] += 2
+        counts["b"] += 1
+    n = [0]
+    with expect_compiles(lambda: n[0], 1, at_most=True):
+        n[0] += 1
+    with pytest.raises(TypeError, match="neither a jitted function"):
+        snapshot(object())
+
+
+def test_expect_compiles_registry_backed():
+    assert registry.expected_compiles("xl.shard_acc") == 1
+    n = [0]
+    with expect_compiles(lambda: n[0], program="xl.shard_acc"):
+        n[0] += 1
+    with pytest.raises(TypeError, match="explicit count or a registered"):
+        with expect_compiles(lambda: 0):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# CLI end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_cli_audits_program_clean(capsys):
+    rc = analysis_main(
+        ["xl.shard_acc", "xl.shard_dw", "--no-lint", "--root", REPO_ROOT]
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "[ok  ] xl.shard_acc" in out
+    assert "PASS" in out
+
+
+def test_cli_fails_on_stale_waiver(tmp_path, capsys):
+    stale = tmp_path / "waivers.toml"
+    stale.write_text(
+        '[[waiver]]\nid = "xl.shard_acc:never-fires"\nreason = "stale"\n'
+    )
+    rc = analysis_main([
+        "xl.shard_acc", "--no-lint", "--no-hlo",
+        "--root", REPO_ROOT, "--waivers", str(stale),
+    ])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "STALE WAIVERS" in out
+
+
+def test_cli_rejects_unknown_program(capsys):
+    rc = analysis_main(["no.such.program", "--no-lint", "--root", REPO_ROOT])
+    assert rc == 2

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.analysis.compilecheck import expect_compiles
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.all_relu import activation_fn
 from repro.core.importance import PruningSchedule, element_degrees
@@ -293,11 +294,10 @@ def test_lm_serving_completes_and_measures(lm_serving):
 
 def test_zero_recompiles_after_warmup(lm_serving):
     engine = lm_serving["engine"]
-    compiles = engine.stats["compiles"]
-    ContinuousBatcher(engine, queue_capacity=16).run(
-        lm_serving["trace_fn"](11)
-    )
-    assert engine.stats["compiles"] == compiles, "recompile after warmup"
+    with expect_compiles(lambda: engine.stats["compiles"], 0):
+        ContinuousBatcher(engine, queue_capacity=16).run(
+            lm_serving["trace_fn"](11)
+        )
     assert all(v == 1 for v in engine.jit_entry_sizes().values())
 
 

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.compilecheck import expect_compiles
 from repro.core.sparsity import ElementTopology
 from repro.core.wasap import (
     WASAPConfig,
@@ -259,13 +260,11 @@ def test_phase1_epoch_fn_no_recompile_across_epochs():
         _phase1_case(seed=5)
     )
     ep = make_phase1_epoch_fn(cfg, opt, n_workers=2, worker_axis="vmap")
-    before = ep._cache_size()
-    p, o, _ = ep(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)
-    after_first = ep._cache_size()
+    with expect_compiles(ep, program="wasap.phase1_epoch"):
+        p, o, _ = ep(params, opt_state, topo, x_all, y_all, idx, lrs, valid, keys)
     keys2 = jax.random.split(jax.random.PRNGKey(99), 4).reshape(2, 2, 2)
-    ep(p, o, topo, x_all, y_all, idx, lrs, valid, keys2)
-    assert after_first == before + 1
-    assert ep._cache_size() == after_first  # zero recompiles on epoch 2
+    with expect_compiles(ep, 0):  # zero recompiles on epoch 2
+        ep(p, o, topo, x_all, y_all, idx, lrs, valid, keys2)
 
 
 def test_roundloop_tail_rounds_single_compile():
@@ -280,9 +279,8 @@ def test_roundloop_tail_rounds_single_compile():
     trainer = WASAPTrainer(model, data, wc)
     steps = min(ld.steps_per_epoch for ld in trainer.loaders)
     assert steps % wc.sync_every != 0  # the case under test
-    before = trainer._round._cache_size()
-    trainer.run()
-    assert trainer._round._cache_size() == before + 1
+    with expect_compiles(trainer._round, 1):
+        trainer.run()
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis import registry
+from repro.analysis.compilecheck import expect_compiles
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.topology import (
     check_element_shards,
@@ -267,9 +269,11 @@ def test_zero_recompiles_across_shards_layers_epochs(data):
     # warm every program once (fwd + bwd over all layers/shards)
     tr.executor.train_step(x, y, 0.01, momentum=0.9, weight_decay=2e-4)
     warm = compile_counts()
-    assert warm["xl_shard_acc"] == 1  # ONE program for fwd AND dX
-    assert warm["xl_shard_dw"] == 1
-    tr.run()  # full epoch + evolution + eval
+    # registry contracts: ONE program each for fwd AND dX / for dW
+    assert warm["xl_shard_acc"] == registry.expected_compiles("xl.shard_acc")
+    assert warm["xl_shard_dw"] == registry.expected_compiles("xl.shard_dw")
+    with expect_compiles(compile_counts, 0):
+        tr.run()  # full epoch + evolution + eval
     assert compile_counts() == warm
 
 
