@@ -1,0 +1,324 @@
+"""Observability overhead benchmark — instrumented vs ``obs.disabled()``
+(DESIGN.md §11).
+
+The telemetry substrate's contract is that instrumentation can stay
+permanently in the hot loops. This bench quantifies that tax on the two
+paths the repo ships as hot — the fused-epoch trainer and the serving
+gateway — and gates it at ``OVERHEAD_BUDGET_FRAC`` (<2%).
+
+**Why the gated number is composed, not a raw wall-clock A/B.** On a
+shared CI box, identical back-to-back runs differ by 10-30% wall *and* CPU
+time (A/A noise — noisy neighbours, frequency throttling). No estimator
+over a handful of second-scale runs can resolve a 2% difference under
+that; a wall-basis gate would be flaky in both directions. So the gate
+uses a noise-robust decomposition, each factor measurable with good SNR:
+
+    overhead_frac = (differential obs ops) x (per-op cost) / (run time)
+
+* **differential obs ops** — ``obs.debug_allocs()`` counts every
+  obs-owned write (span open + event emit, points, telemetry
+  window/histogram observes). The instrumented-minus-disabled delta of
+  that counter over a run counts *exactly* the operations the disabled
+  run skips: deterministic, zero variance. Control-series writes (the
+  windows the gateway steers by) happen in both modes and cancel.
+* **per-op cost** — a tight microbench over the real span/point/
+  event_span hot paths; min over trials. Conservative: the rate is
+  dominated by full spans (the most expensive op), and cheaper ops
+  (gauge sets, window observes) are charged at the same rate.
+* **run time** — median of the disabled runs. Its +-10% wobble scales a
+  ~0.5% estimate by +-0.05% absolute — harmless — where it scales a raw
+  A/B difference by +-10% absolute.
+
+The raw instrumented/disabled wall times are still measured (paired
+A/B/A/B, median of per-pair ratios) and reported as rows, with a loose
+``WALL_RATIO_BACKSTOP`` gate — the composed estimate can't see a
+pathology that makes instrumented runs categorically slower (say, a
+reintroduced per-event fsync), the backstop can, and 25% sits far above
+the A/A noise floor. Compile time is excluded by construction: a
+throwaway warmup run per section populates the jit caches before any
+measured run, and the serve section asserts zero recompiles during
+measurement. Trace-buffer serialization happens at tracer close, outside
+the hot regions by design (see ``obs.trace.Tracer``); the gate protects
+the hot path, which is exactly where the events are *recorded*.
+
+``run.py --compare`` applies both gates on the FRESH run's summary
+(baseline-independent — an overhead budget is an absolute contract, not a
+relative-to-last-commit one). NaN (collapsed run) fails the gate.
+"""
+import dataclasses
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALES, row
+from repro import configs, obs
+from repro.core.importance import PruningSchedule
+from repro.data import datasets
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.models.transformer import PatternLM
+from repro.serve import (
+    EngineConfig,
+    GatewayConfig,
+    HealthThresholds,
+    ServingGateway,
+    SparseInferenceEngine,
+    poisson_trace,
+)
+from repro.train.trainer import SequentialTrainer, TrainerConfig
+
+OVERHEAD_BUDGET_FRAC = 0.02  # instrumented may cost at most 2% over disabled
+WALL_RATIO_BACKSTOP = 1.25   # raw paired wall A/B must stay under this
+
+REPEATS = 5        # trainer pairs — median-of-5 keeps the paired wall
+SERVE_REPEATS = 5  # ratio safely inside the backstop on a ~±8%-noise box
+
+
+def _per_op_cost_s(tmpdir):
+    """Seconds per obs-owned operation (= per ``debug_allocs`` tick) on the
+    real recording hot paths, min over trials."""
+    n = 1000
+    best = float("inf")
+    path = os.path.join(tmpdir, "per_op_probe.jsonl")
+    with obs.trace_to(path, meta={"bench": "obs/per_op"}):
+        for _ in range(5):
+            a0 = obs.debug_allocs()
+            t0 = time.perf_counter()
+            for i in range(n):
+                with obs.span("bench.span", i=i, kind="probe"):
+                    pass
+                obs.point("bench.point", i=i)
+                obs.event_span("bench.event", 0.0, 1.0, i=i)
+            dt = time.perf_counter() - t0
+            ops = obs.debug_allocs() - a0
+            best = min(best, dt / max(1, ops))
+    return best
+
+
+def _paired_ratio(instr, disab):
+    """Median of per-repeat instrumented/disabled wall ratios."""
+    ratios = [
+        a / b for a, b in zip(instr, disab)
+        if np.isfinite(a) and np.isfinite(b) and b > 0
+    ]
+    if len(ratios) != len(instr):  # a collapsed run must fail the gate
+        return float("nan")
+    return float(np.median(ratios))
+
+
+def _composed_frac(diff_ops, per_op_s, run_s):
+    if diff_ops < 0 or not np.isfinite(run_s) or run_s <= 0:
+        return float("nan")
+    return diff_ops * per_op_s / run_s
+
+
+# ---------------------------------------------------------------------------
+# fused-epoch trainer
+# ---------------------------------------------------------------------------
+
+
+def _make_trainer(scale, seed=0, batch_size=16):
+    name = "fashionmnist"  # many steps/epoch at CI scale (see table2)
+    data = datasets.load(name, scale=scale.data_scale, seed=seed)
+    hp = datasets.PAPER_HPARAMS[name]
+    feats, _, _, classes, _ = datasets.PAPER_DATASETS[name]
+    hidden = [max(16, int(h * scale.hidden_scale))
+              for h in datasets.PAPER_ARCHS[name]]
+    cfg = SparseMLPConfig(
+        layer_dims=(feats, *hidden, classes), epsilon=hp["epsilon"],
+        activation="all_relu", alpha=hp["alpha"], dropout=0.1,
+        init=hp["init"], impl="element", element_impl="auto",
+    )
+    epochs = max(5, scale.epochs)
+    tc = TrainerConfig(
+        epochs=epochs, batch_size=batch_size, lr=hp["lr"], zeta=0.3,
+        seed=seed, eval_every=epochs,  # eval out of the timing
+        fused_epochs=True, device_evolution=True,
+        pruning=PruningSchedule(tau=max(1, epochs // 2), period=1,
+                                percentile=10.0),
+    )
+    return SparseMLP(cfg, seed=seed), data, tc
+
+
+def _train_run(scale, trace_path):
+    """One fresh trainer run -> (steady-epoch seconds, obs-op count,
+    events written). ``trace_path=None`` -> run under ``obs.disabled()``.
+    Fresh model each call (evolution mutates topology), same seed, shared
+    jit cache across calls."""
+    model, data, tc = _make_trainer(scale)
+    trainer = SequentialTrainer(model, data, tc)
+    a0 = obs.debug_allocs()
+    if trace_path is None:
+        with obs.disabled():
+            hist = trainer.run()
+        events = 0
+    else:
+        with obs.trace_to(trace_path, meta={"bench": "obs/train_fused"}) as t:
+            hist = trainer.run()
+        events = t.events_written
+    ops = obs.debug_allocs() - a0
+    return float(np.sum(hist["epoch_seconds"][1:])), ops, events
+
+
+def _train_section(scale, tmpdir, per_op_s):
+    _train_run(scale, None)  # warmup: compile the fused segment
+    instr, disab, events, diff_ops = [], [], 0, 0
+    for rep in range(REPEATS):  # paired A/B so drift cancels in the ratio
+        s, ops_on, n = _train_run(
+            scale, os.path.join(tmpdir, f"train_{rep}.jsonl"))
+        instr.append(s)
+        events = max(events, n)
+        s_off, ops_off, _ = _train_run(scale, None)
+        disab.append(s_off)
+        diff_ops = max(diff_ops, ops_on - ops_off)
+    run_s = float(np.median(disab))
+    frac = _composed_frac(diff_ops, per_op_s, run_s)
+    ratio = _paired_ratio(instr, disab)
+    row("obs/train_fused/instrumented_run", float(np.median(instr)) * 1e6,
+        f"events={events};obs_ops={diff_ops};repeats={REPEATS}")
+    row("obs/train_fused/disabled_run", run_s * 1e6, "")
+    row("obs/train_fused/overhead", 0.0,
+        f"frac={frac:.5f};budget={OVERHEAD_BUDGET_FRAC};"
+        f"wall_ratio={ratio:.3f}")
+    return {
+        "instrumented_run_s": float(np.median(instr)),
+        "disabled_run_s": run_s,
+        "overhead_frac": frac,
+        "wall_ratio": ratio,
+        "obs_ops": diff_ops,
+        "events_written": events,
+    }
+
+
+# ---------------------------------------------------------------------------
+# serving gateway
+# ---------------------------------------------------------------------------
+
+_GW = dict(
+    default_deadline_s=30.0,  # burst trace: nothing should deadline out
+    retry_limit=1,
+    retry_backoff_s=0.002,
+    breaker_threshold=3,
+    breaker_cooldown_s=0.01,
+    degraded_max_new_tokens=5,
+    brownout_queue_len=256,  # keep brownout out of a throughput measurement
+    health=HealthThresholds(recovery_ticks=3),
+)
+
+
+def _make_engine(scale):
+    # d_ff scaled up vs the serve_bench smoke model: overhead is a *ratio*,
+    # so the decode step must cost what a real serving step costs (ms-scale),
+    # not a toy kernel that makes any fixed per-event cost look huge
+    cfg = dataclasses.replace(
+        configs.get_spec("qwen1.5-0.5b").smoke,
+        ffn="sparse", sparse_block=16, sparse_density=0.5, d_ff=256,
+    )
+    ec = EngineConfig(
+        max_slots=4, max_len=64, prefill_buckets=(8, 16), prefill_batch=2
+    )
+    return SparseInferenceEngine(PatternLM(cfg, seed=0), engine=ec)
+
+
+def _serve_run(engine, n, trace_path):
+    """One burst-trace gateway run (all arrivals ~t=0, so wall = service
+    time) -> (wall seconds, obs-op count, events, stats); same trace seed
+    every call."""
+    gw = ServingGateway(
+        engine, gateway=GatewayConfig(**_GW), queue_capacity=256
+    )
+    trace = poisson_trace(
+        n, rate=1e6, vocab=engine.model.cfg.vocab,
+        prompt_lens=(4, 14), new_tokens=(4, 10), seed=5,
+    )
+    a0 = obs.debug_allocs()
+    if trace_path is None:
+        with obs.disabled():
+            st = gw.run(trace)
+        events = 0
+    else:
+        with obs.trace_to(trace_path, meta={"bench": "obs/serve_gateway"}) as t:
+            st = gw.run(trace)
+        events = t.events_written
+    ops = obs.debug_allocs() - a0
+    wall = st.serve.wall_seconds
+    if st.serve.generated_tokens <= 0:  # collapsed run must fail the gate
+        wall = float("nan")
+    return wall, ops, events, st
+
+
+def _serve_section(scale, tmpdir, per_op_s):
+    engine = _make_engine(scale)
+    n = max(96, int(400 * scale.data_scale))
+    _serve_run(engine, n, None)  # warmup: compile every bucket
+    warm_compiles = engine.stats["compiles"]
+    instr, disab, events, diff_ops = [], [], 0, 0
+    last = None
+    for rep in range(SERVE_REPEATS):
+        s, ops_on, ne, last = _serve_run(
+            engine, n, os.path.join(tmpdir, f"serve_{rep}.jsonl"))
+        instr.append(s)
+        events = max(events, ne)
+        s_off, ops_off, _, _ = _serve_run(engine, n, None)
+        disab.append(s_off)
+        diff_ops = max(diff_ops, ops_on - ops_off)
+    recompiles = engine.stats["compiles"] - warm_compiles
+    run_s = float(np.median(disab))
+    frac = _composed_frac(diff_ops, per_op_s, run_s)
+    ratio = _paired_ratio(instr, disab)
+    row("obs/serve_gateway/instrumented_run", float(np.median(instr)) * 1e6,
+        f"events={events};obs_ops={diff_ops};requests={n};"
+        f"repeats={SERVE_REPEATS};recompiles={recompiles}")
+    row("obs/serve_gateway/disabled_run", run_s * 1e6, "")
+    row("obs/serve_gateway/overhead", 0.0,
+        f"frac={frac:.5f};budget={OVERHEAD_BUDGET_FRAC};"
+        f"wall_ratio={ratio:.3f}")
+    return {
+        "instrumented_run_s": float(np.median(instr)),
+        "disabled_run_s": run_s,
+        "overhead_frac": frac,
+        "wall_ratio": ratio,
+        "obs_ops": diff_ops,
+        "events_written": events,
+        "requests": n,
+        "recompiles_during_measurement": recompiles,
+        "completed": last.serve.completed if last else 0,
+    }
+
+
+def run(scale_name="ci"):
+    scale = SCALES[scale_name]
+    with tempfile.TemporaryDirectory(prefix="obs_bench_") as tmpdir:
+        per_op_s = _per_op_cost_s(tmpdir)
+        row("obs/per_op_cost", per_op_s * 1e6, "min-of-5-trials")
+        train = _train_section(scale, tmpdir, per_op_s)
+        serve = _serve_section(scale, tmpdir, per_op_s)
+    fracs = (train["overhead_frac"], serve["overhead_frac"])
+    ratios = (train["wall_ratio"], serve["wall_ratio"])
+    within = bool(
+        all(np.isfinite(f) and f <= OVERHEAD_BUDGET_FRAC for f in fracs)
+        and all(np.isfinite(r) and r <= WALL_RATIO_BACKSTOP for r in ratios)
+    )
+    out = {
+        "train_fused": train,
+        "serve_gateway": serve,
+        "summary": {
+            "per_op_cost_us": per_op_s * 1e6,
+            "train_overhead_frac": train["overhead_frac"],
+            "serve_overhead_frac": serve["overhead_frac"],
+            "train_wall_ratio": train["wall_ratio"],
+            "serve_wall_ratio": serve["wall_ratio"],
+            "overhead_budget_frac": OVERHEAD_BUDGET_FRAC,
+            "wall_ratio_backstop": WALL_RATIO_BACKSTOP,
+            "within_budget": within,
+        },
+    }
+    row("obs/within_budget", 0.0,
+        f"ok={within};train={train['overhead_frac']:.5f};"
+        f"serve={serve['overhead_frac']:.5f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -50,8 +50,45 @@ HOT_PATH_ROWS = {
         "resilience/train_ckpt_every_epoch",
         "resilience/recovery_total",
     ],
+    "obs": [
+        "obs/train_fused/instrumented_run",
+        "obs/serve_gateway/instrumented_run",
+    ],
 }
 REGRESSION_TOLERANCE = 1.25  # fresh > 1.25x baseline => fail
+
+# The obs section additionally carries an ABSOLUTE gate, checked on the
+# fresh run's summary (not against the baseline): instrumentation overhead
+# vs obs.disabled() must stay within the DESIGN.md §11 budget. Budget and
+# backstop values live in obs_bench (single source of truth).
+OBS_GATES = (
+    ("train_overhead_frac", "overhead_budget_frac"),
+    ("serve_overhead_frac", "overhead_budget_frac"),
+    ("train_wall_ratio", "wall_ratio_backstop"),
+    ("serve_wall_ratio", "wall_ratio_backstop"),
+)
+
+
+def check_obs_budget(payload: dict) -> int:
+    """Absolute overhead gate for the obs section; returns violation count.
+    Missing/NaN values fail — a collapsed bench must not pass the gate."""
+    summary = payload.get("summary") or {}
+    # obs_bench.run nests its gate block under "summary" of its own result
+    summary = summary.get("summary", summary)
+    violations = 0
+    for key, budget_key in OBS_GATES:
+        value, budget = summary.get(key), summary.get(budget_key)
+        if (value is None or budget is None
+                or not math.isfinite(value) or value > budget):
+            print(
+                f"OBS BUDGET VIOLATION {key}={value} (budget "
+                f"{budget_key}={budget})",
+                file=sys.stderr,
+            )
+            violations += 1
+        else:
+            print(f"obs budget {key}={value:.5f} <= {budget} ok")
+    return violations
 
 
 def compare_against_baseline(baseline_path: str, payloads: dict) -> int:
@@ -101,6 +138,8 @@ def compare_against_baseline(baseline_path: str, payloads: dict) -> int:
         print(line, file=sys.stderr if status == "REGRESSION" else sys.stdout)
         if status == "REGRESSION":
             regressions += 1
+    if section == "obs":
+        regressions += check_obs_budget(payloads[section])
     return regressions
 
 
@@ -110,7 +149,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default="",
         help="comma list: table2,table3,table4,table5,table6,gradient_flow,"
-        "kernels,roofline,serve,resilience",
+        "kernels,roofline,serve,resilience,obs",
     )
     ap.add_argument(
         "--json-dir", default=".",
@@ -132,6 +171,7 @@ def main() -> None:
         common,
         gradient_flow,
         kernels_micro,
+        obs_bench,
         resilience_bench,
         roofline,
         serve_bench,
@@ -153,6 +193,7 @@ def main() -> None:
         ("roofline", lambda: roofline.run()),
         ("serve", lambda: serve_bench.run(args.scale)),
         ("resilience", lambda: resilience_bench.run(args.scale)),
+        ("obs", lambda: obs_bench.run(args.scale)),
     ]
     json_dir = pathlib.Path(args.json_dir)
     json_dir.mkdir(parents=True, exist_ok=True)

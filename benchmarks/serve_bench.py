@@ -262,13 +262,21 @@ def _overload_section(scale):
             "latency_p95_ms": s.latency_p95_ms,
             "shed": st.shed,
             "max_queue_depth": st.max_queue_depth,
+            # sampled telemetry (obs gauges/windows, DESIGN.md §11): the
+            # queue-depth-vs-QPS curve — depth should sit near zero below
+            # saturation and pin at capacity past it
+            "queue_depth_mean": st.metrics.get("queue_depth_mean"),
+            "queue_depth_p95": st.metrics.get("queue_depth_p95"),
+            "slot_occupancy_mean": st.metrics.get("slot_occupancy_mean"),
             "health_states_seen": st.health_states_seen,
         }
         curve.append(point)
         row(f"serve/overload/qps_{frac:g}x",
             _us_per_token(1.0, s.goodput_tok_s),
             f"goodput_tok_s={s.goodput_tok_s:.1f};"
-            f"p95_ms={s.latency_p95_ms:.1f};shed={s.rejected}")
+            f"p95_ms={s.latency_p95_ms:.1f};shed={s.rejected};"
+            f"qdepth_mean={point['queue_depth_mean']:.2f};"
+            f"qdepth_p95={point['queue_depth_p95']:.1f}")
     sat_point = curve[-1]  # the 2x point: goodput at (past) saturation
     row("serve/overload/us_per_goodput_token_sat",
         _us_per_token(1.0, sat_point["goodput_tok_s"]),

@@ -10,12 +10,13 @@ in one jitted call per token.
     PYTHONPATH=src python examples/serve.py --arch qwen1.5-0.5b --requests 12
 """
 import argparse
+import contextlib
 import dataclasses
 import tempfile
 
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.core.importance import PruningSchedule
 from repro.checkpoint.manager import CheckpointManager
 from repro.models.transformer import PatternLM
@@ -40,6 +41,9 @@ def main():
                     "percentile before serving (Table 6 as a feature)")
     ap.add_argument("--naive", action="store_true",
                     help="also run the sequential per-request baseline")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a JSONL obs trace of the measured serving "
+                    "run (DESIGN.md §11) and print the per-span summary")
     args = ap.parse_args()
 
     spec = configs.get_spec(args.arch)
@@ -78,8 +82,16 @@ def main():
         ContinuousBatcher(engine).run(make_trace(0))
         warm_compiles = engine.stats["compiles"]
 
+        # trace only the measured run — warmup compiles would dominate the
+        # span summary otherwise (engine/batcher are already instrumented)
+        trace_ctx = (
+            obs.trace_to(args.trace, meta={"example": "serve",
+                                           "arch": args.arch})
+            if args.trace else contextlib.nullcontext()
+        )
         batcher = ContinuousBatcher(engine)
-        stats = batcher.run(make_trace(1))
+        with trace_ctx:
+            stats = batcher.run(make_trace(1))
         print(f"arch={args.arch} (reduced, sparse FFN) slots={args.slots}")
         print(f"continuous batching: {stats.generated_tokens} tokens in "
               f"{stats.wall_seconds * 1e3:.0f} ms "
@@ -94,6 +106,11 @@ def main():
         print(f"compile cache: {post['compiles']} compiles "
               f"({post['compiles'] - warm_compiles} after warmup), "
               f"hit rate {post['hit_rate']:.2f}")
+        if args.trace:
+            summary = obs.summarize_events(obs.read_events(args.trace))
+            print(f"\ntrace written to {args.trace} "
+                  f"({summary['n_events']} events)")
+            print(obs.format_summary(summary))
 
         if args.naive:
             naive_engine = SparseInferenceEngine.from_checkpoint(

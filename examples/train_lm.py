@@ -9,12 +9,14 @@ driver; expect hours on 1 CPU core, minutes on a real accelerator).
     PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.topology import evolve_block
 from repro.models.transformer import ModelConfig, PatternLM, chunked_softmax_xent
@@ -48,6 +50,9 @@ def main():
     ap.add_argument("--evolve-every", type=int, default=50)
     ap.add_argument("--zeta", type=float, default=0.3)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a JSONL obs trace (DESIGN.md §11) and print "
+                    "the per-span summary at the end")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -80,32 +85,53 @@ def main():
                               args.batch, args.seq + 1)
     rng = np.random.default_rng(7)
     topo = model.topo_arrays()
+    trace_ctx = (
+        obs.trace_to(args.trace, meta={"example": "train_lm",
+                                       "preset": args.preset})
+        if args.trace else contextlib.nullcontext()
+    )
     t0 = time.perf_counter()
-    for i in range(args.steps):
-        tokens = next(stream)
-        params, opt_state, loss = step(params, opt_state, topo, tokens)
-        if (i + 1) % args.evolve_every == 0:
-            # SET evolution on every sparse FFN (host-side, Algorithm 2)
-            for slot, topos in model.topologies.items():
-                vals_in = np.asarray(params["stack"][slot]["ffn"]["win"])
-                vals_out = np.asarray(params["stack"][slot]["ffn"]["wout"])
-                new_in, new_out = [], []
-                for r, (t_in, t_out) in enumerate(topos):
-                    res_i = evolve_block(t_in, vals_in[r], args.zeta, rng)
-                    res_o = evolve_block(t_out, vals_out[r], args.zeta, rng)
-                    model.topologies[slot][r] = (res_i.topology, res_o.topology)
-                    new_in.append(res_i.values)
-                    new_out.append(res_o.values)
-                params["stack"][slot]["ffn"]["win"] = jnp.asarray(np.stack(new_in))
-                params["stack"][slot]["ffn"]["wout"] = jnp.asarray(np.stack(new_out))
-            topo = model.topo_arrays()
-            print(f"  [evolve] step {i+1}: SET prune/regrow done")
-        if i % 20 == 0 or i == args.steps - 1:
-            print(f"step {i:4d} loss={float(loss):.4f} "
-                  f"({time.perf_counter()-t0:.1f}s)")
+    with trace_ctx, obs.span("train.run", steps=args.steps):
+        for i in range(args.steps):
+            tokens = next(stream)
+            with obs.span("train.step", i=i) as sp:
+                params, opt_state, loss = step(params, opt_state, topo, tokens)
+                sp.block_on(loss)  # span close waits for the device result
+            if (i + 1) % args.evolve_every == 0:
+                # SET evolution on every sparse FFN (host-side, Algorithm 2)
+                with obs.span("train.evolve", step=i + 1):
+                    for slot, topos in model.topologies.items():
+                        vals_in = np.asarray(
+                            params["stack"][slot]["ffn"]["win"])
+                        vals_out = np.asarray(
+                            params["stack"][slot]["ffn"]["wout"])
+                        new_in, new_out = [], []
+                        for r, (t_in, t_out) in enumerate(topos):
+                            res_i = evolve_block(
+                                t_in, vals_in[r], args.zeta, rng)
+                            res_o = evolve_block(
+                                t_out, vals_out[r], args.zeta, rng)
+                            model.topologies[slot][r] = (
+                                res_i.topology, res_o.topology)
+                            new_in.append(res_i.values)
+                            new_out.append(res_o.values)
+                        params["stack"][slot]["ffn"]["win"] = jnp.asarray(
+                            np.stack(new_in))
+                        params["stack"][slot]["ffn"]["wout"] = jnp.asarray(
+                            np.stack(new_out))
+                    topo = model.topo_arrays()
+                print(f"  [evolve] step {i+1}: SET prune/regrow done")
+            if i % 20 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss={float(loss):.4f} "
+                      f"({time.perf_counter()-t0:.1f}s)")
     ckpt.save(args.steps, params, meta={"preset": args.preset})
     ckpt.wait()
     print(f"checkpoint saved to {args.ckpt_dir}")
+    if args.trace:
+        summary = obs.summarize_events(obs.read_events(args.trace))
+        print(f"\ntrace written to {args.trace} "
+              f"({summary['n_events']} events)")
+        print(obs.format_summary(summary))
 
 
 if __name__ == "__main__":

@@ -19,6 +19,12 @@ Rules (each finding carries a stable waiver id
   ``caches``, ``big_caches``, ``acc``) without a ``donate_argnums``
   keyword. Donation policy is central (``repro.runtime.donation``) — an
   explicit ``donate_argnums=donation.donate_argnums(...)`` satisfies this.
+* ``obs-in-jit`` — any ``repro.obs`` call (``obs.span``/``obs.point``/
+  metric writes through an obs import) reachable inside a traced region.
+  The observability contract (DESIGN.md §11) is that instrumentation lives
+  host-side *between* jitted calls: inside a trace it would either fail
+  (side-effecting Python under jit) or silently run only at trace time —
+  a span that never measures, a counter that bumps once per compile.
 
 Traced regions are detected syntactically: functions decorated with
 ``jax.jit`` (directly or through ``functools.partial``), functions passed
@@ -154,6 +160,32 @@ class _TracedRegionFinder(ast.NodeVisitor):
         self.generic_visit(node)
 
 
+def _obs_bindings(tree: ast.AST) -> Tuple[Set[str], Set[str]]:
+    """Names this module binds to ``repro.obs``: (module aliases, bare
+    function names). ``from repro import obs`` / ``import repro.obs as o``
+    populate the first; ``from repro.obs import span`` the second."""
+    aliases: Set[str] = set()
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.obs" or a.name.startswith("repro.obs."):
+                    if a.asname:
+                        aliases.add(a.asname)
+                    # un-aliased: calls spell repro.obs.* — matched by the
+                    # dotted-prefix check in the rule itself
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "repro":
+                for a in node.names:
+                    if a.name == "obs":
+                        aliases.add(a.asname or "obs")
+            elif mod == "repro.obs" or mod.startswith("repro.obs."):
+                for a in node.names:
+                    names.add(a.asname or a.name)
+    return aliases, names
+
+
 def _param_names(fn: ast.AST) -> Tuple[Set[str], Set[str]]:
     """(positional-or-normal, keyword-only) parameter names."""
     args = getattr(fn, "args", None)
@@ -190,11 +222,15 @@ class _RuleVisitor(ast.NodeVisitor):
         traced: Dict[ast.AST, Set[str]],
         hot_file: bool,
         defs: Dict[str, ast.AST],
+        obs_aliases: Set[str] = frozenset(),
+        obs_names: Set[str] = frozenset(),
     ) -> None:
         self.path = path
         self.traced = traced
         self.hot_file = hot_file
         self.defs = defs
+        self.obs_aliases = set(obs_aliases)
+        self.obs_names = set(obs_names)
         self.findings: List[LintFinding] = []
         # stack of (fn node, traced param names) for enclosing traced regions
         self._stack: List[Tuple[ast.AST, Set[str]]] = []
@@ -307,6 +343,21 @@ class _RuleVisitor(ast.NodeVisitor):
                     f"({', '.join(sorted(bufs))}) without donate_argnums — "
                     "route through repro.runtime.donation",
                 )
+        # obs instrumentation inside traced regions (all files)
+        if self._in_traced():
+            callee_full = _dotted(node.func)
+            root = callee_full.split(".")[0]
+            if (
+                root in self.obs_aliases
+                or callee_full.startswith("repro.obs.")
+                or ("." not in callee_full and callee_full in self.obs_names)
+            ):
+                self._emit(
+                    node, "obs-in-jit",
+                    f"{callee_full}() reachable inside a traced region — "
+                    "obs instrumentation must stay host-side between "
+                    "jitted calls (DESIGN.md §11)",
+                )
         # host-sync inside traced regions
         if self._in_traced():
             callee = _dotted(node.func)
@@ -391,11 +442,14 @@ def lint_source(source: str, relpath: str) -> List[LintFinding]:
     tree = ast.parse(source, filename=relpath)
     finder = _TracedRegionFinder()
     finder.visit(tree)
+    obs_aliases, obs_names = _obs_bindings(tree)
     visitor = _RuleVisitor(
         path=relpath.replace(os.sep, "/"),
         traced=finder.traced,
         hot_file=_is_hot_file(relpath),
         defs=finder._defs,
+        obs_aliases=obs_aliases,
+        obs_names=obs_names,
     )
     visitor.visit(tree)
     return visitor.findings

@@ -337,6 +337,8 @@ class CheckpointManager:
             shutil.rmtree(dst)
         src.rename(dst)
         (dst / "QUARANTINE_REASON.txt").write_text(reason + "\n")
+        from repro import obs
+        obs.point("checkpoint.quarantine", step=step, reason=reason)
         return dst
 
     def latest_valid_step(self, quarantine: bool = True) -> Optional[int]:

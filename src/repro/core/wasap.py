@@ -69,6 +69,7 @@ from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
 from repro.runtime import donation
 from repro.runtime.supervisor import retry_step
 from repro.train.trainer import evaluate, make_segment_fn, make_step_fn
+from repro import obs
 
 __all__ = [
     "WASAPConfig",
@@ -455,15 +456,20 @@ class WASAPTrainer:
     # -- phases --------------------------------------------------------------
 
     def run(self) -> Dict[str, list]:
-        if self._fused:
-            if self._phase == 1:
-                self._run_phase1_fused()
-                self._phase = 2
-            worker_states = self._run_phase2_fused()
-        else:
-            self._run_phase1_roundloop()
-            worker_states = self._run_phase2_perbatch()
-        self._merge_workers(worker_states)
+        with obs.span(
+            "wasap.run", mode=self.wc.mode, workers=self.wc.n_workers,
+            fused=self._fused, worker_axis=self.wc.worker_axis,
+        ):
+            if self._fused:
+                if self._phase == 1:
+                    self._run_phase1_fused()
+                    self._phase = 2
+                worker_states = self._run_phase2_fused()
+            else:
+                self._run_phase1_roundloop()
+                worker_states = self._run_phase2_perbatch()
+            with obs.span("wasap.merge", workers=len(worker_states)):
+                self._merge_workers(worker_states)
         acc = evaluate(self.model, self.data.x_test, self.data.y_test)
         wc = self.wc
         self.history["epoch"].append(wc.phase1_epochs + wc.phase2_epochs)
@@ -494,71 +500,86 @@ class WASAPTrainer:
         start = min(self.start_epoch, wc.phase1_epochs)
         gstep = start * steps
         for epoch in range(start, wc.phase1_epochs):
-            t0 = time.perf_counter()
-            weights = (
-                self._worker_weights(epoch) if self.monitor is not None else None
-            )
-            idx = np.zeros((rounds, k, h, bsz), np.int32)
-            for wk, ld in enumerate(self.loaders):
-                order = np.zeros((padded, bsz), np.int32)
-                order[:steps] = (
-                    ld.epoch_order(epoch)[: steps * bsz]
-                    .astype(np.int32)
-                    .reshape(steps, bsz)
+            with obs.span(
+                "wasap.epoch", epoch=epoch, phase=1, rounds=rounds
+            ) as ep_sp:
+                t0 = time.perf_counter()
+                weights = (
+                    self._worker_weights(epoch)
+                    if self.monitor is not None else None
                 )
-                idx[:, wk] = order.reshape(rounds, h, bsz)
-            valid = np.zeros((rounds * h,), np.float32)
-            valid[:steps] = 1.0
-            lrs = np.zeros((rounds * h,), np.float32)
-            lrs[:steps] = [self._lr(gstep + i, epoch) for i in range(steps)]
-            self.key, sub = jax.random.split(self.key)
-            keys = jax.random.split(sub, rounds * k).reshape(rounds, k, 2)
-            epoch_args = (
-                params, opt_state, topo, x_all, y_all,
-                jnp.asarray(idx), jnp.asarray(lrs.reshape(rounds, h)),
-                jnp.asarray(valid.reshape(rounds, h)), keys,
-            )
-
-            def run_epoch():
-                # hook first: a kill/transient fires before the pure device
-                # call, so retry_step re-enters with identical inputs
-                if self.fault_hook is not None:
-                    self.fault_hook(gstep)
-                if weights is None:
-                    return self._epoch_fn(*epoch_args)
-                return self._weighted_epoch_fn()(
-                    *epoch_args, jnp.asarray(weights)
+                idx = np.zeros((rounds, k, h, bsz), np.int32)
+                for wk, ld in enumerate(self.loaders):
+                    order = np.zeros((padded, bsz), np.int32)
+                    order[:steps] = (
+                        ld.epoch_order(epoch)[: steps * bsz]
+                        .astype(np.int32)
+                        .reshape(steps, bsz)
+                    )
+                    idx[:, wk] = order.reshape(rounds, h, bsz)
+                valid = np.zeros((rounds * h,), np.float32)
+                valid[:steps] = 1.0
+                lrs = np.zeros((rounds * h,), np.float32)
+                lrs[:steps] = [self._lr(gstep + i, epoch) for i in range(steps)]
+                self.key, sub = jax.random.split(self.key)
+                keys = jax.random.split(sub, rounds * k).reshape(rounds, k, 2)
+                epoch_args = (
+                    params, opt_state, topo, x_all, y_all,
+                    jnp.asarray(idx), jnp.asarray(lrs.reshape(rounds, h)),
+                    jnp.asarray(valid.reshape(rounds, h)), keys,
                 )
 
-            if self.step_retries:
-                params, opt_state, loss_sums = retry_step(
-                    run_epoch,
-                    retries=self.step_retries,
-                    backoff_s=self.retry_backoff_s,
+                def run_epoch():
+                    # hook first: a kill/transient fires before the pure
+                    # device call, so retry_step re-enters with identical
+                    # inputs
+                    if self.fault_hook is not None:
+                        self.fault_hook(gstep)
+                    if weights is None:
+                        return self._epoch_fn(*epoch_args)
+                    return self._weighted_epoch_fn()(
+                        *epoch_args, jnp.asarray(weights)
+                    )
+
+                # jitted-call boundary: the whole epoch's sync rounds are one
+                # device call; registered outputs are blocked on at span
+                # close (the code below blocks on the same values anyway)
+                with obs.span(
+                    "wasap.sync_rounds", rounds=rounds, h=h,
+                    elastic=weights is not None,
+                ) as sr_sp:
+                    if self.step_retries:
+                        params, opt_state, loss_sums = retry_step(
+                            run_epoch,
+                            retries=self.step_retries,
+                            backoff_s=self.retry_backoff_s,
+                        )
+                    else:
+                        params, opt_state, loss_sums = run_epoch()
+                    sr_sp.block_on(loss_sums)
+                gstep += steps
+                # master topology evolution on the averaged model; momentum
+                # is re-aligned (RetainValidUpdates semantics for velocity)
+                self.key, sub = jax.random.split(self.key)
+                topo, params, opt_state = self._evolve_master_device(
+                    topo, params, opt_state, sub
                 )
-            else:
-                params, opt_state, loss_sums = run_epoch()
-            gstep += steps
-            # master topology evolution on the averaged model; momentum is
-            # re-aligned (RetainValidUpdates semantics for the velocity)
-            self.key, sub = jax.random.split(self.key)
-            topo, params, opt_state = self._evolve_master_device(
-                topo, params, opt_state, sub
-            )
-            # dispatch is async — wait for the epoch's device work so
-            # epoch_seconds measures compute, not enqueue
-            jax.block_until_ready((params, loss_sums))
-            dt = time.perf_counter() - t0
-            train_loss = float(jnp.sum(loss_sums)) / (k * steps)
-            acc = evaluate(
-                model, self.data.x_test, self.data.y_test,
-                params=params, topo_arrays=topo,
-            )
-            self._log(epoch, 1, train_loss, dt, acc)
-            self._p1_state = (params, opt_state, topo)
-            self.epoch_next = epoch + 1
-            if self.epoch_end_hook is not None:
-                self.epoch_end_hook(self, epoch)
+                obs.point("wasap.evolve", epoch=epoch, device=True)
+                # dispatch is async — wait for the epoch's device work so
+                # epoch_seconds measures compute, not enqueue
+                jax.block_until_ready((params, loss_sums))
+                dt = time.perf_counter() - t0
+                train_loss = float(jnp.sum(loss_sums)) / (k * steps)
+                acc = evaluate(
+                    model, self.data.x_test, self.data.y_test,
+                    params=params, topo_arrays=topo,
+                )
+                ep_sp.set(loss=train_loss, acc=float(acc))
+                self._log(epoch, 1, train_loss, dt, acc)
+                self._p1_state = (params, opt_state, topo)
+                self.epoch_next = epoch + 1
+                if self.epoch_end_hook is not None:
+                    self.epoch_end_hook(self, epoch)
         model.set_params(params)
         self._sync_topos_to_host(topo)
         self.epoch_next = wc.phase1_epochs
@@ -644,43 +665,55 @@ class WASAPTrainer:
         steps_per_epoch = min(ld.steps_per_epoch for ld in self.loaders)
         start = max(self.start_epoch, wc.phase1_epochs)
         for epoch in range(start, wc.phase1_epochs + wc.phase2_epochs):
-            t0 = time.perf_counter()
-            if self.fault_hook is not None:
-                self.fault_hook(epoch * steps_per_epoch)
-            losses = []
-            for wk in range(k):
-                w = workers[wk]
-                ld = self.loaders[wk]
-                steps = ld.steps_per_epoch
-                perm = jnp.asarray(
-                    ld.epoch_order(epoch).astype(np.int32).reshape(steps, bsz)
-                )
-                lrs = jnp.full((steps,), wc.lr, jnp.float32)
-                w["params"], w["opt"], w["key"], ls = self._segment(
-                    w["params"], w["opt"], w["topo"], x_all, y_all,
-                    perm, lrs, w["key"],
-                )
-                losses.append(ls)
-                # per-worker evolution (divergent topologies)
-                w["key"], sub = jax.random.split(w["key"])
-                w["topo"], vals, vel = evolve_element_layers_device(
-                    w["topo"], list(w["params"]["values"]),
-                    list(w["opt"].velocity["values"]), sub,
-                    layer_dims=cfg.layer_dims, zeta=wc.zeta,
-                    init_scheme=cfg.init,
-                )
-                w["params"] = {
-                    "values": tuple(vals), "biases": w["params"]["biases"]
-                }
-                w["opt"] = replace_values_velocity(w["opt"], vel)
-            jax.block_until_ready([w["params"] for w in workers])
-            dt = time.perf_counter() - t0
-            loss = float(np.mean([np.asarray(l).mean() for l in losses]))
-            self._log(epoch, 2, loss, dt, float("nan"))
-            self._p2_workers = workers
-            self.epoch_next = epoch + 1
-            if self.epoch_end_hook is not None:
-                self.epoch_end_hook(self, epoch)
+            with obs.span(
+                "wasap.epoch", epoch=epoch, phase=2, workers=k
+            ) as ep_sp:
+                t0 = time.perf_counter()
+                if self.fault_hook is not None:
+                    self.fault_hook(epoch * steps_per_epoch)
+                losses = []
+                # one span over all K worker segments+evolutions: the calls
+                # are enqueued asynchronously across workers and blocked on
+                # once, so a per-worker span would serialize the device queue
+                with obs.span("wasap.worker_segments", workers=k) as ws_sp:
+                    for wk in range(k):
+                        w = workers[wk]
+                        ld = self.loaders[wk]
+                        steps = ld.steps_per_epoch
+                        perm = jnp.asarray(
+                            ld.epoch_order(epoch).astype(np.int32).reshape(
+                                steps, bsz
+                            )
+                        )
+                        lrs = jnp.full((steps,), wc.lr, jnp.float32)
+                        w["params"], w["opt"], w["key"], ls = self._segment(
+                            w["params"], w["opt"], w["topo"], x_all, y_all,
+                            perm, lrs, w["key"],
+                        )
+                        losses.append(ls)
+                        # per-worker evolution (divergent topologies)
+                        w["key"], sub = jax.random.split(w["key"])
+                        w["topo"], vals, vel = evolve_element_layers_device(
+                            w["topo"], list(w["params"]["values"]),
+                            list(w["opt"].velocity["values"]), sub,
+                            layer_dims=cfg.layer_dims, zeta=wc.zeta,
+                            init_scheme=cfg.init,
+                        )
+                        w["params"] = {
+                            "values": tuple(vals),
+                            "biases": w["params"]["biases"],
+                        }
+                        w["opt"] = replace_values_velocity(w["opt"], vel)
+                    ws_sp.block_on([w["params"] for w in workers])
+                jax.block_until_ready([w["params"] for w in workers])
+                dt = time.perf_counter() - t0
+                loss = float(np.mean([np.asarray(l).mean() for l in losses]))
+                ep_sp.set(loss=loss)
+                self._log(epoch, 2, loss, dt, float("nan"))
+                self._p2_workers = workers
+                self.epoch_next = epoch + 1
+                if self.epoch_end_hook is not None:
+                    self.epoch_end_hook(self, epoch)
         out = []
         for w in workers:
             topos = [

@@ -1,0 +1,55 @@
+"""``python -m repro.obs`` — trace-file tooling.
+
+* ``summarize <trace.jsonl>``: per-span count/total/self/percentile table
+  (validates first; refuses malformed traces).
+* ``validate <trace.jsonl>``: schema-check every JSONL event, exit nonzero
+  on any error — the CI obs-smoke job runs this on freshly captured
+  train + serve traces.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import export
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="obs trace tooling (DESIGN.md §11)",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_sum = sub.add_parser("summarize", help="per-span time breakdown")
+    p_sum.add_argument("trace")
+    p_sum.add_argument("--json", action="store_true",
+                       help="machine-readable output")
+    p_val = sub.add_parser("validate", help="schema-check every event")
+    p_val.add_argument("trace")
+    args = ap.parse_args(argv)
+
+    events = export.read_events(args.trace)
+    errors = export.validate_events(events)
+    if args.cmd == "validate":
+        for e in errors:
+            print(f"INVALID: {e}", file=sys.stderr)
+        print(f"{len(events)} event(s), {len(errors)} error(s) -> "
+              + ("FAIL" if errors else "PASS"))
+        return 1 if errors else 0
+
+    if errors:
+        print(f"trace failed validation ({len(errors)} error(s)); "
+              "run `python -m repro.obs validate` for details",
+              file=sys.stderr)
+        return 1
+    summary = export.summarize_events(events)
+    if args.json:
+        print(json.dumps(summary, indent=2, sort_keys=True))
+    else:
+        print(export.format_summary(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

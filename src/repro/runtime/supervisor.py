@@ -52,6 +52,7 @@ from pathlib import Path
 from typing import Callable, Dict, List, Optional
 
 from repro.checkpoint.manager import CheckpointManager
+from repro import obs
 
 __all__ = [
     "ElasticPlan",
@@ -59,6 +60,7 @@ __all__ = [
     "StragglerPolicy",
     "SupervisorConfig",
     "plan_elastic_mesh",
+    "read_progress",
     "retry_step",
     "run_supervised",
     "write_progress",
@@ -140,6 +142,9 @@ class HeartbeatMonitor:
             if self.misses[w] >= self.policy.evict_after:
                 self.evicted.add(w)
                 out[w] = "evicted"
+                obs.point(
+                    "supervisor.evict", worker=w, misses=self.misses[w]
+                )
         return out
 
     @property
@@ -212,6 +217,12 @@ def retry_step(
             return fn(*args)
         except Exception as e:  # noqa: BLE001
             err = e
+            obs.point(
+                "supervisor.retry",
+                attempt=attempt,
+                error=type(e).__name__,
+                final=attempt >= retries,
+            )
             if on_failure is not None:
                 on_failure(attempt, e)
             if attempt < retries:
@@ -231,13 +242,34 @@ class SupervisorConfig:
 
 
 def write_progress(path: Optional[str], gstep: int, epoch: int) -> None:
-    """Atomic "gstep epoch" progress record — readable mid-kill."""
+    """Atomic progress record — readable mid-kill.
+
+    One line: ``gstep epoch heartbeat last_span``. The first two fields keep
+    the historical contract (``faultinject.wait_and_kill`` reads
+    ``split()[0]``); the heartbeat is a monotonic timestamp so an external
+    watcher can tell "slow step" from "hung process" by its age, and
+    ``last_span`` is the innermost open obs span (``-`` when tracing is off)
+    so a post-mortem of a kill knows *where* the run was.
+    """
     if path is None:
         return
+    span = obs.current_span_name("-").replace(" ", "_")
     p = Path(path)
     tmp = p.with_suffix(p.suffix + ".tmp")
-    tmp.write_text(f"{gstep} {epoch}\n")
+    tmp.write_text(f"{gstep} {epoch} {time.monotonic():.6f} {span}\n")
     os.replace(tmp, p)
+
+
+def read_progress(path: str) -> Dict:
+    """Parse :func:`write_progress` output (both the historical 2-field and
+    the current 4-field formats)."""
+    fields = Path(path).read_text().split()
+    out: Dict = {"gstep": int(fields[0]), "epoch": int(fields[1])}
+    if len(fields) >= 3:
+        out["heartbeat"] = float(fields[2])
+    if len(fields) >= 4:
+        out["last_span"] = fields[3]
+    return out
 
 
 def run_supervised(trainer, config: SupervisorConfig) -> Dict:
@@ -253,8 +285,14 @@ def run_supervised(trainer, config: SupervisorConfig) -> Dict:
     if manager.all_steps():
         try:
             resumed_from = trainer.restore_checkpoint(manager)
+            obs.point(
+                "supervisor.restore",
+                step=resumed_from,
+                epoch_next=int(trainer.epoch_next),
+            )
         except FileNotFoundError:
-            pass  # every existing checkpoint was corrupt: cold start
+            # every existing checkpoint was corrupt: cold start
+            obs.point("supervisor.cold_start", reason="no_valid_checkpoint")
     trainer.step_retries = config.step_retries
     trainer.retry_backoff_s = config.retry_backoff_s
 
@@ -272,6 +310,7 @@ def run_supervised(trainer, config: SupervisorConfig) -> Dict:
         last = epoch == tr.tc.epochs - 1
         if (epoch + 1) % config.save_every_epochs == 0 or last:
             tr.save_checkpoint(manager)
+            obs.point("supervisor.checkpoint", step=tr.gstep, epoch=epoch)
         write_progress(config.progress_file, tr.gstep, tr.epoch_next)
         if user_epoch_hook is not None:
             user_epoch_hook(tr, epoch)

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.importance import PruningSchedule
 from repro.core.sparsity import BlockMeta, BlockTopology, ElementTopology
@@ -253,9 +254,15 @@ class SparseInferenceEngine:
             x = np.concatenate(
                 [x, np.zeros((bucket - n,) + x.shape[1:], x.dtype)]
             )
-        fn = self._cache.get(("classify", bucket), self._build_classify)
-        logits = fn(self._params, self._topo, jnp.asarray(x))
-        return np.asarray(logits)[:n]
+        with obs.span("serve.classify", n=n, bucket=bucket):
+            m0 = self._cache.misses
+            fn = self._cache.get(("classify", bucket), self._build_classify)
+            if self._cache.misses != m0:
+                obs.point("serve.compile", op="classify", bucket=bucket)
+            logits = fn(self._params, self._topo, jnp.asarray(x))
+            # np.asarray blocks on the device result, so the span close
+            # timestamp covers the computation, not just its dispatch
+            return np.asarray(logits)[:n]
 
     def _build_classify(self):
         config = self.model.config
@@ -316,14 +323,20 @@ class SparseInferenceEngine:
         # padded rows scatter to slot id == max_slots -> dropped by the insert
         slots_arr = np.full((B,), self.cfg.max_slots, np.int32)
         slots_arr[: len(prompts)] = slots
-        fn = self._cache.get(
-            ("prefill", bucket), lambda: self._build_prefill(bucket)
-        )
-        next_tok, self._caches = fn(
-            self._params, self._topo, self._caches,
-            jnp.asarray(tokens), jnp.asarray(lens_arr), jnp.asarray(slots_arr),
-        )
-        return np.asarray(next_tok)[: len(prompts)]
+        with obs.span("serve.prefill", n=len(prompts), bucket=bucket):
+            m0 = self._cache.misses
+            fn = self._cache.get(
+                ("prefill", bucket), lambda: self._build_prefill(bucket)
+            )
+            if self._cache.misses != m0:
+                obs.point("serve.compile", op="prefill", bucket=bucket)
+            next_tok, self._caches = fn(
+                self._params, self._topo, self._caches,
+                jnp.asarray(tokens), jnp.asarray(lens_arr),
+                jnp.asarray(slots_arr),
+            )
+            # np.asarray blocks: span close covers the device work
+            return np.asarray(next_tok)[: len(prompts)]
 
     def _build_prefill(self, bucket: int, donate=None):
         model = self.model
@@ -373,12 +386,17 @@ class SparseInferenceEngine:
         each slot attends its own causal prefix at its own position."""
         assert self.kind == "lm"
         self._enter("decode")
-        fn = self._cache.get(("decode",), self._build_decode)
-        next_tok, self._caches = fn(
-            self._params, self._topo, self._caches,
-            jnp.asarray(tokens, jnp.int32), jnp.asarray(pos, jnp.int32),
-        )
-        return np.asarray(next_tok)
+        with obs.span("serve.decode_step"):
+            m0 = self._cache.misses
+            fn = self._cache.get(("decode",), self._build_decode)
+            if self._cache.misses != m0:
+                obs.point("serve.compile", op="decode")
+            next_tok, self._caches = fn(
+                self._params, self._topo, self._caches,
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(pos, jnp.int32),
+            )
+            # np.asarray blocks: span close covers the device work
+            return np.asarray(next_tok)
 
     def _build_decode(self, donate=None):
         model = self.model

@@ -51,7 +51,9 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.serve.batcher import (
+    TELEMETRY_SAMPLE_STRIDE,
     ContinuousBatcher,
     Request,
     ServeStats,
@@ -223,6 +225,7 @@ class ServingGateway(ContinuousBatcher):
     def _shed(self, req: Request, reason: str, counter: str) -> bool:
         req.rejected = reason
         self.metrics.count_shed(counter)
+        obs.point("serve.shed", rid=req.rid, reason=counter)
         return False
 
     def submit(self, req: Request) -> bool:
@@ -308,12 +311,18 @@ class ServingGateway(ContinuousBatcher):
                 self._errors.append(repr(e))
                 if attempt < gc.retry_limit:
                     self.metrics.count("retries")
+                    obs.point("serve.retry", attempt=attempt,
+                              error=type(e).__name__)
                     delay = gc.retry_backoff_s * (2.0 ** attempt)
                     delay *= 1.0 + gc.retry_jitter * float(self._rng.random())
                     time.sleep(delay)
                     continue
+                before = self.breaker.state
                 self.breaker.record_failure(self._now())
+                if self.breaker.state != before:
+                    obs.point("serve.breaker", state=self.breaker.state)
                 self.metrics.count("engine_call_failures")
+                obs.point("serve.engine_failure", error=type(e).__name__)
                 return None
             self.breaker.record_success()
             return out
@@ -361,11 +370,15 @@ class ServingGateway(ContinuousBatcher):
     # -- driver -------------------------------------------------------------
 
     def _health_tick(self) -> None:
+        before = self.health.state
         self.health.tick(
             queue_frac=len(self.queue) / max(1, self.queue_capacity),
             breaker_open=self.breaker.state != "closed",
             p95_ms=self.metrics.latency_ms.percentile(95),
         )
+        if self.health.state != before:
+            obs.point("serve.health", state=self.health.state,
+                      was=before)
 
     def run(self, trace: Sequence[Request]) -> GatewayStats:
         """Replay a trace. Same scheduling loop as the batcher, plus: expiry
@@ -381,7 +394,13 @@ class ServingGateway(ContinuousBatcher):
                 self.submit(trace[i])
                 i += 1
             self._expire(now)
-            self.metrics.queue_depth = len(self.queue)
+            # _sample_occupancy strides its own gauge writes; stride the
+            # ServeMetrics series the same way (control logic reads
+            # len(self.queue) directly, never these telemetry samples)
+            n_active = self._sample_occupancy()
+            if self._obs_tick % TELEMETRY_SAMPLE_STRIDE == 1:
+                self.metrics.queue_depth = len(self.queue)
+                self.metrics.observe_slots(n_active, len(self.slot_req))
             self._health_tick()
             allowed = self.breaker.allow(now)
             if allowed:
@@ -409,6 +428,16 @@ class ServingGateway(ContinuousBatcher):
                 queue_frac=0.0,
                 breaker_open=self.breaker.state != "closed",
             )
+        # feed the engine's compile surface into obs gauges: entry growth
+        # after warmup is a recompile event (fake engines in tests may not
+        # expose the surface)
+        entry_sizes = getattr(self.engine, "jit_entry_sizes", None)
+        if entry_sizes is not None:
+            obs.record_compile_counts(
+                {"/".join(map(str, k)): v
+                 for k, v in entry_sizes().items()},
+                prefix="serve_jit_entries",
+            )
         serve = _finalize(
             trace, wall, self.decode_steps, self.prefill_calls, self.engine
         )
@@ -430,3 +459,32 @@ class ServingGateway(ContinuousBatcher):
             last_errors=list(self._errors),
             metrics=self.metrics.snapshot(),
         )
+
+    # -- health / metrics surface (DESIGN.md §11) ----------------------------
+
+    def prometheus_text(self) -> str:
+        """Prometheus text snapshot: readiness + health level + breaker
+        state prepended to the full ``ServeMetrics`` exposition."""
+        level = {HEALTHY: 0, DEGRADED: 1, BROWNED_OUT: 2}[self.health.state]
+        breaker = {"closed": 0, "half_open": 1, "open": 2}[self.breaker.state]
+        lines = [
+            "# TYPE serve_ready gauge",
+            f"serve_ready {int(self.health.ready)}",
+            "# TYPE serve_health_level gauge",
+            f"serve_health_level {level}",
+            "# TYPE serve_breaker_state gauge",
+            f"serve_breaker_state {breaker}",
+        ]
+        return "\n".join(lines) + "\n" + self.metrics.prometheus_text()
+
+    def health_snapshot(self) -> Dict:
+        """The gateway's health surface: what a readiness probe / scrape
+        endpoint would serve."""
+        return {
+            "ready": self.health.ready,
+            "state": self.health.state,
+            "breaker": self.breaker.state,
+            "queue_depth": len(self.queue),
+            "slots_active": sum(r is not None for r in self.slot_req),
+            "prometheus": self.prometheus_text(),
+        }

@@ -3,23 +3,31 @@
 The gateway's overload decisions — deadline-feasibility admission, brownout,
 shedding — are all *measured* decisions: they read a short rolling window of
 what the engine actually did (decode rate, step time, latency percentiles,
-queue depth), never a hard-coded capacity constant. This module holds that
-measurement layer plus the health/readiness state machine it drives:
+queue depth), never a hard-coded capacity constant.
 
-* :class:`RollingWindow` — a time-bounded sample window with percentile /
-  mean / rate reads. Empty windows read as NaN, not 0 — "no data" must never
-  masquerade as "infinitely fast" (the same contract as
-  ``batcher._finalize``'s zero-completion NaN).
-* :class:`ServeMetrics` — the gateway's instrument panel: latency / TTFT /
-  decode-rate windows, a queue-depth gauge, and monotone counters for every
-  shed / retry / breaker / brownout event, snapshotted into
-  ``GatewayStats`` and ``BENCH_serve.json``.
-* :class:`HealthMonitor` — ``healthy → degraded → browned_out`` readiness.
-  Escalation is immediate (one bad signal is enough: overload compounds in
-  queue time), recovery is hysteretic (``recovery_ticks`` consecutive calm
-  observations per level, stepping down one level at a time) so the state
-  doesn't flap at the threshold and brownout relief doesn't instantly
-  re-admit the load that caused it.
+Since the obs layer landed (DESIGN.md §11), the measurement primitives live
+in ``repro.obs``: :class:`RollingWindow` is a **thin re-export** of
+``repro.obs.metrics.RollingWindow`` (same NaN-on-empty contract, now with a
+sorted view cached per mutation generation so percentile reads stop
+re-sorting the full window), and :class:`ServeMetrics` is a thin instrument
+panel over two ``obs.MetricsRegistry`` instances:
+
+* a **control** registry (ignores ``obs.disabled()``) holds the windows the
+  gateway *steers by* — latency/TTFT/decode windows. Disabling telemetry
+  must not change admission or brownout behaviour.
+* a **telemetry** registry holds the sampled queue-depth / slot-occupancy
+  gauges and windows (observability only; honours ``obs.disabled()``).
+
+``ServeMetrics.prometheus_text()`` renders both registries plus the event
+counters in Prometheus text exposition format — the gateway exposes it via
+its health surface (``ServingGateway.health_snapshot``).
+
+:class:`HealthMonitor` — ``healthy → degraded → browned_out`` readiness.
+Escalation is immediate (one bad signal is enough: overload compounds in
+queue time), recovery is hysteretic (``recovery_ticks`` consecutive calm
+observations per level, stepping down one level at a time) so the state
+doesn't flap at the threshold and brownout relief doesn't instantly
+re-admit the load that caused it.
 
 Everything takes an injectable ``clock`` so tests drive the windows and
 hysteresis deterministically.
@@ -30,9 +38,10 @@ import collections
 import dataclasses
 import math
 import time
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
-import numpy as np
+from repro.obs.export import prometheus_text as _prometheus_text
+from repro.obs.metrics import MetricsRegistry, RollingWindow
 
 __all__ = [
     "HEALTHY",
@@ -45,63 +54,10 @@ __all__ = [
 ]
 
 
-class RollingWindow:
-    """Fixed-horizon sample window: (time, value) pairs no older than
-    ``window_s`` (and at most ``maxlen``, so a burst can't grow memory).
-
-    All reads trim expired samples first; an empty window reads NaN.
-    """
-
-    def __init__(
-        self,
-        window_s: float = 5.0,
-        maxlen: int = 4096,
-        clock: Callable[[], float] = time.monotonic,
-    ):
-        self.window_s = window_s
-        self.clock = clock
-        self._q: Deque[Tuple[float, float]] = collections.deque(maxlen=maxlen)
-
-    def observe(self, value: float, t: Optional[float] = None) -> None:
-        self._q.append((self.clock() if t is None else t, float(value)))
-
-    def _trim(self) -> None:
-        cutoff = self.clock() - self.window_s
-        while self._q and self._q[0][0] < cutoff:
-            self._q.popleft()
-
-    def values(self) -> List[float]:
-        self._trim()
-        return [v for _, v in self._q]
-
-    def count(self) -> int:
-        self._trim()
-        return len(self._q)
-
-    def percentile(self, p: float) -> float:
-        vals = self.values()
-        return float(np.percentile(vals, p)) if vals else float("nan")
-
-    def mean(self) -> float:
-        vals = self.values()
-        return float(np.mean(vals)) if vals else float("nan")
-
-    def rate_per_s(self) -> float:
-        """Sum of values per second of observed span — e.g. tokens/s when
-        each decode step observes its token count. NaN until two samples
-        span a measurable interval (no data must not read as rate 0, which
-        would shed everything, nor as +inf, which would admit everything)."""
-        self._trim()
-        if len(self._q) < 2:
-            return float("nan")
-        span = self._q[-1][0] - self._q[0][0]
-        if span <= 0:
-            return float("nan")
-        return sum(v for _, v in self._q) / span
-
-
 class ServeMetrics:
-    """The gateway's instrument panel (windows + gauges + counters)."""
+    """The gateway's instrument panel (windows + gauges + counters), backed
+    by obs registries (see module docstring for the control/telemetry
+    split)."""
 
     def __init__(
         self,
@@ -109,12 +65,29 @@ class ServeMetrics:
         clock: Callable[[], float] = time.monotonic,
     ):
         self.clock = clock
-        self.latency_ms = RollingWindow(window_s, clock=clock)
-        self.ttft_ms = RollingWindow(window_s, clock=clock)
+        self._control = MetricsRegistry(control=True, clock=clock)
+        self._telemetry = MetricsRegistry(control=False, clock=clock)
+        ctl = self._control
+        self.latency_ms = ctl.window("serve_latency_ms", window_s=window_s)
+        self.ttft_ms = ctl.window("serve_ttft_ms", window_s=window_s)
         # one observation per decode step, value = tokens produced that step
-        self.decode_tokens = RollingWindow(window_s, clock=clock)
-        self.decode_step_ms = RollingWindow(window_s, clock=clock)
-        self.queue_depth = 0
+        self.decode_tokens = ctl.window("serve_decode_tokens",
+                                        window_s=window_s)
+        self.decode_step_ms = ctl.window("serve_decode_step_ms",
+                                         window_s=window_s)
+        # sampled observability series (telemetry: off under obs.disabled()).
+        # Long horizon: a whole bench sweep point must fit the window so the
+        # queue-depth-vs-QPS curve summarizes the full run, not its tail.
+        tel = self._telemetry
+        self._queue_depth = 0
+        self._queue_depth_gauge = tel.gauge("serve_queue_depth")
+        self.queue_depth_samples = tel.window(
+            "serve_queue_depth_sampled", window_s=300.0
+        )
+        self._slot_gauge = tel.gauge("serve_slot_occupancy")
+        self.slot_occupancy_samples = tel.window(
+            "serve_slot_occupancy_sampled", window_s=300.0
+        )
         self.counters: Dict[str, int] = collections.Counter()
         self.shed: Dict[str, int] = collections.Counter()
 
@@ -129,6 +102,25 @@ class ServeMetrics:
     def observe_decode(self, tokens: int, step_ms: float) -> None:
         self.decode_tokens.observe(tokens)
         self.decode_step_ms.observe(step_ms)
+
+    def observe_slots(self, active: int, total: int) -> None:
+        """Sampled slot occupancy (fraction of decode slots busy)."""
+        frac = active / total if total else 0.0
+        self._slot_gauge.set(frac)
+        self.slot_occupancy_samples.observe(frac)
+
+    @property
+    def queue_depth(self) -> int:
+        return self._queue_depth
+
+    @queue_depth.setter
+    def queue_depth(self, v: int) -> None:
+        # the gateway assigns this on admissions and on every strided
+        # scheduling tick (batcher.TELEMETRY_SAMPLE_STRIDE) — each
+        # assignment is one sample of the queue-depth series
+        self._queue_depth = int(v)
+        self._queue_depth_gauge.set(v)
+        self.queue_depth_samples.observe(v)
 
     def count(self, name: str, n: int = 1) -> None:
         self.counters[name] += n
@@ -151,9 +143,33 @@ class ServeMetrics:
             "decode_rate_tok_s": self.decode_rate_tok_s(),
             "decode_step_p50_ms": self.decode_step_ms.percentile(50),
             "queue_depth": float(self.queue_depth),
+            "queue_depth_mean": self.queue_depth_samples.mean(),
+            "queue_depth_p95": self.queue_depth_samples.percentile(95),
+            "slot_occupancy_mean": self.slot_occupancy_samples.mean(),
             **{k: float(v) for k, v in self.counters.items()},
             **{f"shed_{k}": float(v) for k, v in self.shed.items()},
         }
+
+    def prometheus_text(self) -> str:
+        """Both registries plus the event/shed counters, in Prometheus text
+        exposition format (deterministically ordered)."""
+        lines = [
+            _prometheus_text(self._control).rstrip("\n"),
+            _prometheus_text(self._telemetry).rstrip("\n"),
+        ]
+        if self.counters:
+            lines.append("# TYPE serve_events_total counter")
+            for k in sorted(self.counters):
+                lines.append(
+                    'serve_events_total{event="%s"} %d' % (k, self.counters[k])
+                )
+        if self.shed:
+            lines.append("# TYPE serve_shed_total counter")
+            for k in sorted(self.shed):
+                lines.append(
+                    'serve_shed_total{reason="%s"} %d' % (k, self.shed[k])
+                )
+        return "\n".join(line for line in lines if line) + "\n"
 
 
 # ---------------------------------------------------------------------------

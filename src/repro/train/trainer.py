@@ -63,6 +63,7 @@ from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
 from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
 from repro.runtime import donation
 from repro.runtime.supervisor import retry_step
+from repro import obs
 
 __all__ = [
     "TrainerConfig",
@@ -433,9 +434,14 @@ class SequentialTrainer:
     # -- main loop -----------------------------------------------------------
 
     def run(self, log_every: int = 0) -> Dict[str, List]:
-        if self.tc.fused_epochs:
-            return self._run_fused(log_every)
-        return self._run_per_batch(log_every)
+        mode = "fused" if self.tc.fused_epochs else "per_batch"
+        with obs.span(
+            "train.run", mode=mode, epochs=self.tc.epochs,
+            start_epoch=self.start_epoch,
+        ):
+            if self.tc.fused_epochs:
+                return self._run_fused(log_every)
+            return self._run_per_batch(log_every)
 
     def _run_fused(self, log_every: int) -> Dict[str, List]:
         tc, model = self.tc, self.model
@@ -462,93 +468,112 @@ class SequentialTrainer:
         topo_dirty = False  # device topology has diverged from model.topos
         gstep = self.gstep
         for epoch in range(self.start_epoch, tc.epochs):
-            t0 = time.perf_counter()
-            perm = jnp.asarray(
-                loader.epoch_order(epoch).astype(np.int32).reshape(
-                    steps, tc.batch_size
-                )
-            )
-            lrs = jnp.asarray(
-                [float(lr_fn(gstep + i)) for i in range(steps)], jnp.float32
-            )
-
-            def run_segment():
-                # the fault hook (kill switch / transient injector) fires
-                # before the device call, so a retry re-enters cleanly —
-                # the segment itself is pure in its inputs
-                if self.fault_hook is not None:
-                    self.fault_hook(gstep)
-                return self._segment(
-                    params, opt_state, topo, x_all, y_all, perm, lrs, self.key
-                )
-
-            if self.step_retries:
-                params, opt_state, self.key, losses = retry_step(
-                    run_segment,
-                    retries=self.step_retries,
-                    backoff_s=self.retry_backoff_s,
-                )
-            else:
-                params, opt_state, self.key, losses = run_segment()
-            gstep += steps
-            model.set_params(params)
-            self.opt_state = opt_state
-            # -- topology phase --
-            fire_pruning = (
-                sparse_impl
-                and tc.pruning is not None
-                and tc.pruning.should_prune(epoch)
-            )
-            if fire_pruning:
-                params, opt_state, topo = self._host_topology_op(
-                    topo, topo_dirty, lambda: self._importance_prune(epoch)
-                )
-                topo_dirty = False
-            if epoch < tc.epochs - 1 and tc.evolve and sparse_impl:
-                if device_evo:
-                    topo, params, opt_state = self._evolve_device(
-                        topo, params, opt_state
+            with obs.span("train.epoch", epoch=epoch) as ep_sp:
+                t0 = time.perf_counter()
+                perm = jnp.asarray(
+                    loader.epoch_order(epoch).astype(np.int32).reshape(
+                        steps, tc.batch_size
                     )
-                    model.set_params(params)
-                    self.opt_state = opt_state
-                    topo_dirty = True
-                else:
+                )
+                lrs = jnp.asarray(
+                    [float(lr_fn(gstep + i)) for i in range(steps)], jnp.float32
+                )
+
+                def run_segment():
+                    # the fault hook (kill switch / transient injector) fires
+                    # before the device call, so a retry re-enters cleanly —
+                    # the segment itself is pure in its inputs
+                    if self.fault_hook is not None:
+                        self.fault_hook(gstep)
+                    return self._segment(
+                        params, opt_state, topo, x_all, y_all, perm, lrs,
+                        self.key
+                    )
+
+                # jitted-call boundary: the span registers the segment's
+                # outputs and blocks on them only at close, so the duration
+                # covers device compute without adding a sync the
+                # uninstrumented run would not pay (it blocks on the same
+                # values below, before reading epoch_seconds)
+                with obs.span("train.segment", steps=steps) as seg_sp:
+                    if self.step_retries:
+                        params, opt_state, self.key, losses = retry_step(
+                            run_segment,
+                            retries=self.step_retries,
+                            backoff_s=self.retry_backoff_s,
+                        )
+                    else:
+                        params, opt_state, self.key, losses = run_segment()
+                    seg_sp.block_on(losses)
+                gstep += steps
+                model.set_params(params)
+                self.opt_state = opt_state
+                # -- topology phase --
+                fire_pruning = (
+                    sparse_impl
+                    and tc.pruning is not None
+                    and tc.pruning.should_prune(epoch)
+                )
+                if fire_pruning:
                     params, opt_state, topo = self._host_topology_op(
-                        topo, topo_dirty, self._evolve
+                        topo, topo_dirty, lambda: self._importance_prune(epoch)
                     )
                     topo_dirty = False
-            # dispatch is async — wait for the epoch's device work so
-            # epoch_seconds measures compute, not enqueue
-            jax.block_until_ready((params, losses))
-            dt = time.perf_counter() - t0
-            if (epoch + 1) % tc.eval_every == 0 or epoch == tc.epochs - 1:
-                acc = evaluate(
-                    model, self.data.x_test, self.data.y_test,
-                    params=params, topo_arrays=topo,
+                    obs.point(
+                        "train.prune", epoch=epoch, n_params=model.n_params
+                    )
+                if epoch < tc.epochs - 1 and tc.evolve and sparse_impl:
+                    if device_evo:
+                        topo, params, opt_state = self._evolve_device(
+                            topo, params, opt_state
+                        )
+                        model.set_params(params)
+                        self.opt_state = opt_state
+                        topo_dirty = True
+                    else:
+                        params, opt_state, topo = self._host_topology_op(
+                            topo, topo_dirty, self._evolve
+                        )
+                        topo_dirty = False
+                    obs.point("train.evolve", epoch=epoch, device=device_evo)
+                # dispatch is async — wait for the epoch's device work so
+                # epoch_seconds measures compute, not enqueue
+                jax.block_until_ready((params, losses))
+                dt = time.perf_counter() - t0
+                if (epoch + 1) % tc.eval_every == 0 or epoch == tc.epochs - 1:
+                    acc = evaluate(
+                        model, self.data.x_test, self.data.y_test,
+                        params=params, topo_arrays=topo,
+                    )
+                    obs.point("train.eval", epoch=epoch, acc=float(acc))
+                else:
+                    acc = float("nan")
+                self.history["epoch"].append(epoch)
+                self.history["train_loss"].append(
+                    float(np.asarray(losses).mean())
                 )
-            else:
-                acc = float("nan")
-            self.history["epoch"].append(epoch)
-            self.history["train_loss"].append(float(np.asarray(losses).mean()))
-            self.history["test_acc"].append(acc)
-            # element nnz is evolution-invariant, so the host mirror's count
-            # stays correct even while topo_dirty
-            self.history["n_params"].append(model.n_params)
-            self.history["epoch_seconds"].append(dt)
-            if log_every and (epoch + 1) % log_every == 0:
-                print(
-                    f"epoch {epoch:4d} loss {self.history['train_loss'][-1]:.4f} "
-                    f"acc {acc:.4f} params {model.n_params}"
-                )
-            self.gstep = gstep
-            self.epoch_next = epoch + 1
-            if self.epoch_end_hook is not None:
-                # checkpointing reads the host mirror — pay the sync only
-                # when a hook (i.e. the supervisor) is attached
-                if topo_dirty:
-                    self._sync_topology_to_host(topo)
-                    topo_dirty = False
-                self.epoch_end_hook(self, epoch)
+                self.history["test_acc"].append(acc)
+                # element nnz is evolution-invariant, so the host mirror's
+                # count stays correct even while topo_dirty
+                self.history["n_params"].append(model.n_params)
+                self.history["epoch_seconds"].append(dt)
+                ep_sp.set(loss=self.history["train_loss"][-1],
+                          n_params=model.n_params)
+                if log_every and (epoch + 1) % log_every == 0:
+                    print(
+                        f"epoch {epoch:4d} loss "
+                        f"{self.history['train_loss'][-1]:.4f} "
+                        f"acc {acc:.4f} params {model.n_params}"
+                    )
+                self.gstep = gstep
+                self.epoch_next = epoch + 1
+                if self.epoch_end_hook is not None:
+                    # checkpointing reads the host mirror — pay the sync only
+                    # when a hook (i.e. the supervisor) is attached
+                    if topo_dirty:
+                        self._sync_topology_to_host(topo)
+                        topo_dirty = False
+                    self.epoch_end_hook(self, epoch)
         if topo_dirty:
             self._sync_topology_to_host(topo)
         return self.history
@@ -561,64 +586,78 @@ class SequentialTrainer:
         lr_fn = tc.lr_schedule or (lambda step: tc.lr)
         gstep = self.gstep
         for epoch in range(self.start_epoch, tc.epochs):
-            t0 = time.perf_counter()
-            params = model.params()
-            topo = model.topo_arrays()
-            losses = []
-            for xb, yb in loader.epoch(epoch):
-                self.key, sub = jax.random.split(self.key)
+            with obs.span("train.epoch", epoch=epoch) as ep_sp:
+                t0 = time.perf_counter()
+                params = model.params()
+                topo = model.topo_arrays()
+                losses = []
+                # one span per epoch's worth of per-batch dispatches — NOT
+                # per minibatch, which is exactly the dispatch-bound hot loop
+                # this legacy mode exists to measure
+                with obs.span("train.segment", mode="per_batch") as seg_sp:
+                    for xb, yb in loader.epoch(epoch):
+                        self.key, sub = jax.random.split(self.key)
 
-                def do_step():
-                    # hook first: a kill/transient fires before the pure
-                    # jitted step, so retry_step re-enters with identical
-                    # inputs (sub is split once, outside)
-                    if self.fault_hook is not None:
-                        self.fault_hook(gstep)
-                    return self._step(
-                        params,
-                        self.opt_state,
-                        topo,
-                        jnp.asarray(xb),
-                        jnp.asarray(yb),
-                        jnp.asarray(lr_fn(gstep), jnp.float32),
-                        sub,
-                    )
+                        def do_step():
+                            # hook first: a kill/transient fires before the
+                            # pure jitted step, so retry_step re-enters with
+                            # identical inputs (sub is split once, outside)
+                            if self.fault_hook is not None:
+                                self.fault_hook(gstep)
+                            return self._step(
+                                params,
+                                self.opt_state,
+                                topo,
+                                jnp.asarray(xb),
+                                jnp.asarray(yb),
+                                jnp.asarray(lr_fn(gstep), jnp.float32),
+                                sub,
+                            )
 
-                if self.step_retries:
-                    params, self.opt_state, loss = retry_step(
-                        do_step,
-                        retries=self.step_retries,
-                        backoff_s=self.retry_backoff_s,
-                    )
+                        if self.step_retries:
+                            params, self.opt_state, loss = retry_step(
+                                do_step,
+                                retries=self.step_retries,
+                                backoff_s=self.retry_backoff_s,
+                            )
+                        else:
+                            params, self.opt_state, loss = do_step()
+                        losses.append(loss)
+                        gstep += 1
+                    seg_sp.set(steps=len(losses))
+                    seg_sp.block_on(params)
+                model.set_params(params)
+                # topology phase (host)
+                self._importance_prune(epoch)
+                if epoch < tc.epochs - 1:  # paper: no evolution after final
+                    self._evolve()
+                    obs.point("train.evolve", epoch=epoch, device=False)
+                jax.block_until_ready(model.params())
+                dt = time.perf_counter() - t0
+                if (epoch + 1) % tc.eval_every == 0 or epoch == tc.epochs - 1:
+                    acc = evaluate(model, self.data.x_test, self.data.y_test)
+                    obs.point("train.eval", epoch=epoch, acc=float(acc))
                 else:
-                    params, self.opt_state, loss = do_step()
-                losses.append(loss)
-                gstep += 1
-            model.set_params(params)
-            # topology phase (host)
-            self._importance_prune(epoch)
-            if epoch < tc.epochs - 1:  # paper: no evolution after final epoch
-                self._evolve()
-            jax.block_until_ready(model.params())
-            dt = time.perf_counter() - t0
-            if (epoch + 1) % tc.eval_every == 0 or epoch == tc.epochs - 1:
-                acc = evaluate(model, self.data.x_test, self.data.y_test)
-            else:
-                acc = float("nan")
-            self.history["epoch"].append(epoch)
-            self.history["train_loss"].append(float(np.mean([float(l) for l in losses])))
-            self.history["test_acc"].append(acc)
-            self.history["n_params"].append(model.n_params)
-            self.history["epoch_seconds"].append(dt)
-            if log_every and (epoch + 1) % log_every == 0:
-                print(
-                    f"epoch {epoch:4d} loss {self.history['train_loss'][-1]:.4f} "
-                    f"acc {acc:.4f} params {model.n_params}"
+                    acc = float("nan")
+                self.history["epoch"].append(epoch)
+                self.history["train_loss"].append(
+                    float(np.mean([float(l) for l in losses]))
                 )
-            self.gstep = gstep
-            self.epoch_next = epoch + 1
-            if self.epoch_end_hook is not None:
-                self.epoch_end_hook(self, epoch)
+                self.history["test_acc"].append(acc)
+                self.history["n_params"].append(model.n_params)
+                self.history["epoch_seconds"].append(dt)
+                ep_sp.set(loss=self.history["train_loss"][-1],
+                          n_params=model.n_params)
+                if log_every and (epoch + 1) % log_every == 0:
+                    print(
+                        f"epoch {epoch:4d} loss "
+                        f"{self.history['train_loss'][-1]:.4f} "
+                        f"acc {acc:.4f} params {model.n_params}"
+                    )
+                self.gstep = gstep
+                self.epoch_next = epoch + 1
+                if self.epoch_end_hook is not None:
+                    self.epoch_end_hook(self, epoch)
         return self.history
 
 
@@ -771,7 +810,7 @@ class XLTrainer:
         return trainer
 
     def run(self, log_every: int = 0) -> Dict[str, List]:
-        from repro.xl import evolve_model_streamed
+        from repro.xl import compile_counts, evolve_model_streamed
 
         tc = self.tc
         loader = ShardedLoader(
@@ -782,54 +821,78 @@ class XLTrainer:
             raise ValueError("batch_size larger than the training shard")
         lr_fn = tc.lr_schedule or (lambda step: tc.lr)
         gstep = self.gstep
-        for epoch in range(self.start_epoch, tc.epochs):
-            t0 = time.perf_counter()
-            losses = []
-            for xb, yb in loader.epoch(epoch):
+        with obs.span(
+            "train.run", mode="xl", epochs=tc.epochs,
+            start_epoch=self.start_epoch,
+        ):
+            for epoch in range(self.start_epoch, tc.epochs):
+                with obs.span("train.epoch", epoch=epoch) as ep_sp:
+                    t0 = time.perf_counter()
+                    losses = []
+                    # one span over the epoch's streamed steps, not one per
+                    # shard — StreamExecutor syncs internally, so there is no
+                    # async device result to register here
+                    with obs.span("train.segment", mode="xl"):
+                        for xb, yb in loader.epoch(epoch):
 
-                def do_step():
-                    # hook fires before the streamed step mutates host state,
-                    # so a transient raised here retries cleanly
-                    if self.fault_hook is not None:
-                        self.fault_hook(gstep)
-                    return self.executor.train_step(
-                        xb, yb, float(lr_fn(gstep)),
-                        momentum=tc.momentum, weight_decay=tc.weight_decay,
+                            def do_step():
+                                # hook fires before the streamed step mutates
+                                # host state, so a transient raised here
+                                # retries cleanly
+                                if self.fault_hook is not None:
+                                    self.fault_hook(gstep)
+                                return self.executor.train_step(
+                                    xb, yb, float(lr_fn(gstep)),
+                                    momentum=tc.momentum,
+                                    weight_decay=tc.weight_decay,
+                                )
+
+                            if self.step_retries:
+                                losses.append(
+                                    retry_step(
+                                        do_step,
+                                        retries=self.step_retries,
+                                        backoff_s=self.retry_backoff_s,
+                                    )
+                                )
+                            else:
+                                losses.append(do_step())
+                            gstep += 1
+                    if epoch < tc.epochs - 1 and tc.evolve:
+                        evolve_model_streamed(self.state, tc.zeta, self.rng)
+                        obs.point("train.evolve", epoch=epoch, device=False)
+                    dt = time.perf_counter() - t0
+                    if (epoch + 1) % tc.eval_every == 0 \
+                            or epoch == tc.epochs - 1:
+                        acc = self.evaluate(self.data.x_test, self.data.y_test)
+                        obs.point("train.eval", epoch=epoch, acc=float(acc))
+                    else:
+                        acc = float("nan")
+                    self.history["epoch"].append(epoch)
+                    self.history["train_loss"].append(float(np.mean(losses)))
+                    self.history["test_acc"].append(acc)
+                    self.history["n_params"].append(self.n_params)
+                    self.history["epoch_seconds"].append(dt)
+                    ep_sp.set(
+                        loss=self.history["train_loss"][-1],
+                        peak_dev_bytes=int(self.executor.measured_peak_bytes),
                     )
-
-                if self.step_retries:
-                    losses.append(
-                        retry_step(
-                            do_step,
-                            retries=self.step_retries,
-                            backoff_s=self.retry_backoff_s,
+                    if log_every and (epoch + 1) % log_every == 0:
+                        print(
+                            f"epoch {epoch:4d} loss "
+                            f"{self.history['train_loss'][-1]:.4f} "
+                            f"acc {acc:.4f} params {self.n_params} "
+                            f"peak_dev {self.executor.measured_peak_bytes}"
                         )
-                    )
-                else:
-                    losses.append(do_step())
-                gstep += 1
-            if epoch < tc.epochs - 1 and tc.evolve:
-                evolve_model_streamed(self.state, tc.zeta, self.rng)
-            dt = time.perf_counter() - t0
-            if (epoch + 1) % tc.eval_every == 0 or epoch == tc.epochs - 1:
-                acc = self.evaluate(self.data.x_test, self.data.y_test)
-            else:
-                acc = float("nan")
-            self.history["epoch"].append(epoch)
-            self.history["train_loss"].append(float(np.mean(losses)))
-            self.history["test_acc"].append(acc)
-            self.history["n_params"].append(self.n_params)
-            self.history["epoch_seconds"].append(dt)
-            if log_every and (epoch + 1) % log_every == 0:
-                print(
-                    f"epoch {epoch:4d} loss {self.history['train_loss'][-1]:.4f} "
-                    f"acc {acc:.4f} params {self.n_params} "
-                    f"peak_dev {self.executor.measured_peak_bytes}"
-                )
-            self.gstep = gstep
-            self.epoch_next = epoch + 1
-            if self.epoch_end_hook is not None:
-                self.epoch_end_hook(self, epoch)
+                    self.gstep = gstep
+                    self.epoch_next = epoch + 1
+                    if self.epoch_end_hook is not None:
+                        self.epoch_end_hook(self, epoch)
+            # the substrate's whole jit surface as gauges — a cache that grew
+            # with scale shows up in the Prometheus snapshot
+            obs.record_compile_counts(
+                compile_counts(), prefix="xl_compile_cache"
+            )
         return self.history
 
 

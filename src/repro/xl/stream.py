@@ -55,6 +55,7 @@ from repro.kernels.ops import (
 )
 from repro.runtime import donation
 from repro.xl.planner import XLPlan
+from repro import obs
 
 __all__ = [
     "XLLayerState",
@@ -556,23 +557,27 @@ class StreamExecutor:
         """Streamed forward. Returns (logitsT-as-z buffer, x_dev, [z per
         layer]); with ``keep_preacts=False`` only the final z survives."""
         n = self.state.n_layers
-        x_dev = self._pad_input(xb)
-        h = x_dev
-        zs: List[jax.Array] = []
-        for l in range(n):
-            shards = self._device_shards(
-                self._fwd_host_shards(l), self._layer_resident(l)
-            )
-            acc = self._stream_matmul(l, h, shards)
-            z = _bias_add(acc, self._bias_pad(l))
-            if keep_preacts:
-                zs.append(z)
-            if l < n - 1:
-                h = _act(z, self._slopes[l])
-            else:
-                h = z
-        self._note_bytes((len(zs) if keep_preacts else 1) + 3)
-        return h, x_dev, zs
+        # one span per streamed forward, NOT per shard — the shard loop is
+        # the substrate's hot path and its dispatches are async; nothing is
+        # registered on the span, so it measures enqueue, not device time
+        with obs.span("xl.forward", layers=n):
+            x_dev = self._pad_input(xb)
+            h = x_dev
+            zs: List[jax.Array] = []
+            for l in range(n):
+                shards = self._device_shards(
+                    self._fwd_host_shards(l), self._layer_resident(l)
+                )
+                acc = self._stream_matmul(l, h, shards)
+                z = _bias_add(acc, self._bias_pad(l))
+                if keep_preacts:
+                    zs.append(z)
+                if l < n - 1:
+                    h = _act(z, self._slopes[l])
+                else:
+                    h = z
+            self._note_bytes((len(zs) if keep_preacts else 1) + 3)
+            return h, x_dev, zs
 
     def logits(self, xb: np.ndarray) -> np.ndarray:
         """Streamed inference logits for up to ``plan.batch`` rows."""
@@ -598,6 +603,14 @@ class StreamExecutor:
             )
         mu, wd = np.float32(momentum), np.float32(weight_decay)
         lr = np.float32(lr)
+        # the step ends with float(loss) — fully synced, so span close
+        # needs no block_on
+        with obs.span("xl.train_step"):
+            return self._train_step_inner(xb, yb, lr, mu, wd)
+
+    def _train_step_inner(self, xb, yb, lr, mu, wd):
+        st = self.state
+        n = st.n_layers
         _, x_dev, zs = self.forward(xb, keep_preacts=True)
         y_dev = jax.device_put(np.asarray(yb, np.int32))
         loss, dz = _loss_and_dz(zs[-1], y_dev, n_classes=st.layer_dims[-1])

@@ -345,6 +345,61 @@ def test_lint_nested_def_inherits_traced_region():
     assert findings[0].qualname == "outer.inner"
 
 
+def test_lint_obs_span_in_jitted_fn():
+    rules, findings = _rules(
+        """
+        import jax
+        from repro import obs
+
+        @jax.jit
+        def f(x):
+            with obs.span("step"):
+                return x * 2
+        """
+    )
+    assert rules == ["obs-in-jit"]
+    assert findings[0].waiver_id == (
+        "lint:obs-in-jit:src/repro/models/thing.py:f"
+    )
+
+
+def test_lint_obs_bare_point_in_scan_body():
+    rules, findings = _rules(
+        """
+        import jax
+        from jax import lax
+        from repro.obs import point
+
+        def step(carry, x):
+            point("tick", i=0)
+            return carry + x, x
+
+        def run(xs):
+            return lax.scan(step, 0.0, xs)
+        """
+    )
+    assert rules == ["obs-in-jit"]
+    assert findings[0].qualname == "step"
+
+
+def test_lint_obs_host_side_span_around_jit_is_clean():
+    rules, _ = _rules(
+        """
+        import jax
+        from repro import obs
+
+        @jax.jit
+        def f(x):
+            return x * 2
+
+        def epoch(x):
+            with obs.span("epoch") as sp:
+                return sp.block_on(f(x))
+        """
+    )
+    assert rules == []
+
+
 def test_lint_missing_donation_hot_file_only():
     src = """
         import jax
