@@ -1,5 +1,11 @@
 """Paper Fig 5: gradient flow (squared grad norm, the first-order loss
-decrease) for All-ReLU vs ReLU during sparse training."""
+decrease) for All-ReLU vs ReLU during sparse training.
+
+The statistic itself is ``obs.probes.grad_sq_norm_tree`` — the same
+jit-legal reduction the training-dynamics probes compose into the segment
+programs (DESIGN.md §12) — so the figure and the probe timeline can never
+drift apart on the definition.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +13,7 @@ import numpy as np
 from benchmarks.common import SCALES, row
 from repro.data import datasets
 from repro.models.mlp import SparseMLP, SparseMLPConfig, cross_entropy_loss, mlp_forward
+from repro.obs import probes
 
 
 def gradient_flow(model, data, n_batches=4, batch=64, seed=0):
@@ -20,7 +27,7 @@ def gradient_flow(model, data, n_batches=4, batch=64, seed=0):
             return cross_entropy_loss(mlp_forward(p, topo, x, cfg, train=False), y)
 
         g = jax.grad(loss_fn)(params)
-        return sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(g))
+        return probes.grad_sq_norm_tree(g)
 
     rng = np.random.default_rng(seed)
     vals = []

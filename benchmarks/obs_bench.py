@@ -44,6 +44,21 @@ the hot path, which is exactly where the events are *recorded*.
 ``run.py --compare`` applies both gates on the FRESH run's summary
 (baseline-independent — an overhead budget is an absolute contract, not a
 relative-to-last-commit one). NaN (collapsed run) fails the gate.
+
+**Dynamics section (DESIGN.md §12).** The training-dynamics probes add one
+extra half-batch forward/backward plus O(n_layers) stat reductions to each
+fused epoch segment, and one host-side ``record_snapshot`` per epoch. The
+same noise logic applies, so the gated number is again composed from
+high-SNR parts: ``probe_overhead_frac = (seg_on - seg_off + record_cost) /
+seg_off`` where ``seg_on``/``seg_off`` are min-of-N wall times of the
+*compiled* probe-on/probe-off segment programs on fresh uploads (donation
+retires the inputs, and the identical upload cost cancels in the
+difference) and ``record_cost`` is a microbenched ``record_snapshot``
+(timeline write + detector observe). Paired full-trainer probe-on vs
+probe-off runs feed the same ``WALL_RATIO_BACKSTOP``. A sanity row
+cross-checks the probe's own numbers against numpy oracles on the segment
+outputs — a probe that silently reports garbage must fail the gate, not
+just a slow one.
 """
 import dataclasses
 import os
@@ -52,12 +67,17 @@ import time
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from benchmarks.common import SCALES, row
 from repro import configs, obs
 from repro.core.importance import PruningSchedule
 from repro.data import datasets
 from repro.models.mlp import SparseMLP, SparseMLPConfig
 from repro.models.transformer import PatternLM
+from repro.obs import detect, probes, timeline
+from repro.optim.sgd import MomentumSGD
 from repro.serve import (
     EngineConfig,
     GatewayConfig,
@@ -66,7 +86,7 @@ from repro.serve import (
     SparseInferenceEngine,
     poisson_trace,
 )
-from repro.train.trainer import SequentialTrainer, TrainerConfig
+from repro.train.trainer import SequentialTrainer, TrainerConfig, make_segment_fn
 
 OVERHEAD_BUDGET_FRAC = 0.02  # instrumented may cost at most 2% over disabled
 WALL_RATIO_BACKSTOP = 1.25   # raw paired wall A/B must stay under this
@@ -287,6 +307,162 @@ def _serve_section(scale, tmpdir, per_op_s):
     }
 
 
+# ---------------------------------------------------------------------------
+# training-dynamics probes (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+DYN_REPEATS = 3       # paired probe-on/probe-off trainer runs (backstop)
+SEG_CALLS = 7         # min-of-N compiled segment calls for the diff
+
+
+def _probe_sanity(stats, out_params, model) -> dict:
+    """Cross-check a probe-on segment's device stats against numpy oracles
+    on the segment's own outputs (the probes compute on post-segment
+    weights). Returns {ok, checked, failures}."""
+    failures = []
+    n_layers = model.config.n_layers
+    for l in range(n_layers):
+        v = np.asarray(out_params["values"][l], np.float64)
+        want_l2 = float(np.sqrt(np.sum(v * v)))
+        got_l2 = float(np.asarray(stats["value_l2"][l]))
+        if not np.isclose(got_l2, want_l2, rtol=1e-4):
+            failures.append(f"value_l2[{l}]: {got_l2} != {want_l2}")
+        want_zero = float(np.mean(v == 0))
+        got_zero = float(np.asarray(stats["value_zero_frac"][l]))
+        if not np.isclose(got_zero, want_zero, atol=1e-6):
+            failures.append(f"value_zero_frac[{l}]: {got_zero} != {want_zero}")
+        for key in ("grad_l2", "saturation", "imp_q50", "dead_out_frac"):
+            x = float(np.asarray(stats[key][l]))
+            if not np.isfinite(x) or x < 0:
+                failures.append(f"{key}[{l}] not a finite stat: {x}")
+        out_dim = model.config.layer_dims[l + 1]
+        hist = np.asarray(stats["in_deg_hist"][l])
+        if int(hist.sum()) != out_dim:
+            failures.append(
+                f"in_deg_hist[{l}] sums {int(hist.sum())} != {out_dim}"
+            )
+    return {
+        "ok": not failures,
+        "checked": 6 * n_layers,
+        "failures": failures,
+    }
+
+
+def _dynamics_run(scale, seed, probe, tl_path):
+    """One fresh full-trainer run -> steady-epoch seconds. Probe-on runs
+    record to a live timeline + anomaly monitor (the realistic cost).
+
+    Pruning is disabled for these pairs: a shrinking nnz recompiles the
+    segment every epoch, and since probe-on/probe-off are *different*
+    programs the (dominant) compile time would not cancel in the pair —
+    the wall ratio would gate compile speed, not hot-path speed. Fixed-
+    capacity evolution stays on and is recompile-free by design."""
+    model, data, tc = _make_trainer(scale, seed=seed)
+    tc = dataclasses.replace(tc, probe=probe, pruning=None)
+    trainer = SequentialTrainer(model, data, tc)
+    if probe:
+        detect.configure(detect.AnomalyMonitor())
+        try:
+            with timeline.timeline_to(tl_path, run_id="obs-bench-dyn"):
+                hist = trainer.run()
+        finally:
+            detect.configure(None)
+    else:
+        hist = trainer.run()
+    return float(np.sum(hist["epoch_seconds"][1:]))
+
+
+def _dynamics_section(scale, tmpdir, per_op_s):
+    model, data, tc = _make_trainer(scale)
+    cfg = model.config
+    opt = MomentumSGD(momentum=tc.momentum, weight_decay=tc.weight_decay)
+    seg_off = make_segment_fn(cfg, opt)
+    seg_on = make_segment_fn(cfg, opt, True)
+    x_all = jnp.asarray(data.x_train)
+    y_all = jnp.asarray(data.y_train)
+    steps = data.x_train.shape[0] // tc.batch_size
+    perm = jnp.arange(steps * tc.batch_size, dtype=jnp.int32).reshape(
+        steps, tc.batch_size
+    )
+    lrs = jnp.full((steps,), tc.lr, jnp.float32)
+    topo = model.topo_arrays()
+    base_params = model.params()
+    key = jax.random.PRNGKey(0)
+
+    def seg_call(fn):
+        # fresh uploads OUTSIDE the timed region: the segment donates its
+        # params/opt_state buffers, and the identical upload cost cancels
+        # in the on-off difference anyway
+        params = jax.tree.map(jnp.array, base_params)
+        opt_state = opt.init(params)
+        jax.block_until_ready((params, opt_state))
+        t0 = time.perf_counter()
+        out = fn(params, opt_state, topo, x_all, y_all, perm, lrs, key)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0, out
+
+    seg_call(seg_off)  # warmup: compile both programs before timing
+    _, probe_out = seg_call(seg_on)
+    stats = probe_out[4]
+    sanity = _probe_sanity(stats, probe_out[0], model)
+    offs, ons = [], []
+    for _ in range(SEG_CALLS):  # interleaved so drift hits both equally
+        offs.append(seg_call(seg_off)[0])
+        ons.append(seg_call(seg_on)[0])
+    t_off, t_on = min(offs), min(ons)
+    probe_s = max(0.0, t_on - t_off)  # negative diff = noise floor
+
+    # record_snapshot microbench: timeline JSONL write + detector observe
+    n_rec = 200
+    detect.configure(detect.AnomalyMonitor())
+    try:
+        with timeline.timeline_to(
+            os.path.join(tmpdir, "dyn_record.jsonl"), run_id="obs-bench-rec"
+        ):
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                for i in range(n_rec):
+                    probes.record_snapshot(i, "train", stats)
+                best = min(best, (time.perf_counter() - t0) / n_rec)
+    finally:
+        detect.configure(None)
+    record_s = best
+
+    frac = (probe_s + record_s) / t_off if t_off > 0 else float("nan")
+
+    # paired full-trainer backstop (probe-on records live, probe-off doesn't)
+    on, off = [], []
+    for rep in range(DYN_REPEATS):
+        on.append(_dynamics_run(
+            scale, rep, True, os.path.join(tmpdir, f"dyn_{rep}.jsonl")
+        ))
+        off.append(_dynamics_run(scale, rep, False, None))
+    ratio = _paired_ratio(on, off)
+
+    row("obs/dynamics/probe_on_run", float(np.median(on)) * 1e6,
+        f"repeats={DYN_REPEATS};epochs={tc.epochs}")
+    row("obs/dynamics/probe_off_run", float(np.median(off)) * 1e6, "")
+    row("obs/dynamics/probe_overhead", 0.0,
+        f"frac={frac:.5f};budget={OVERHEAD_BUDGET_FRAC};"
+        f"wall_ratio={ratio:.3f};seg_on_s={t_on:.4f};seg_off_s={t_off:.4f};"
+        f"record_us={record_s * 1e6:.1f}")
+    row("obs/dynamics/probe_stats_sanity", 0.0,
+        f"ok={sanity['ok']};checked={sanity['checked']};"
+        f"failures={len(sanity['failures'])}")
+    return {
+        "probe_on_run_s": float(np.median(on)),
+        "probe_off_run_s": float(np.median(off)),
+        "seg_on_s": t_on,
+        "seg_off_s": t_off,
+        "record_cost_s": record_s,
+        "probe_overhead_frac": frac,
+        "probe_wall_ratio": ratio,
+        "probe_stats_ok": sanity["ok"],
+        "sanity_failures": sanity["failures"],
+    }
+
+
 def run(scale_name="ci"):
     scale = SCALES[scale_name]
     with tempfile.TemporaryDirectory(prefix="obs_bench_") as tmpdir:
@@ -294,21 +470,33 @@ def run(scale_name="ci"):
         row("obs/per_op_cost", per_op_s * 1e6, "min-of-5-trials")
         train = _train_section(scale, tmpdir, per_op_s)
         serve = _serve_section(scale, tmpdir, per_op_s)
-    fracs = (train["overhead_frac"], serve["overhead_frac"])
-    ratios = (train["wall_ratio"], serve["wall_ratio"])
+        dynamics = _dynamics_section(scale, tmpdir, per_op_s)
+    fracs = (
+        train["overhead_frac"], serve["overhead_frac"],
+        dynamics["probe_overhead_frac"],
+    )
+    ratios = (
+        train["wall_ratio"], serve["wall_ratio"],
+        dynamics["probe_wall_ratio"],
+    )
     within = bool(
         all(np.isfinite(f) and f <= OVERHEAD_BUDGET_FRAC for f in fracs)
         and all(np.isfinite(r) and r <= WALL_RATIO_BACKSTOP for r in ratios)
+        and dynamics["probe_stats_ok"]
     )
     out = {
         "train_fused": train,
         "serve_gateway": serve,
+        "dynamics": dynamics,
         "summary": {
             "per_op_cost_us": per_op_s * 1e6,
             "train_overhead_frac": train["overhead_frac"],
             "serve_overhead_frac": serve["overhead_frac"],
             "train_wall_ratio": train["wall_ratio"],
             "serve_wall_ratio": serve["wall_ratio"],
+            "probe_overhead_frac": dynamics["probe_overhead_frac"],
+            "probe_wall_ratio": dynamics["probe_wall_ratio"],
+            "probe_stats_ok": dynamics["probe_stats_ok"],
             "overhead_budget_frac": OVERHEAD_BUDGET_FRAC,
             "wall_ratio_backstop": WALL_RATIO_BACKSTOP,
             "within_budget": within,
@@ -316,7 +504,8 @@ def run(scale_name="ci"):
     }
     row("obs/within_budget", 0.0,
         f"ok={within};train={train['overhead_frac']:.5f};"
-        f"serve={serve['overhead_frac']:.5f}")
+        f"serve={serve['overhead_frac']:.5f};"
+        f"probe={dynamics['probe_overhead_frac']:.5f}")
     return out
 
 

@@ -53,6 +53,7 @@ HOT_PATH_ROWS = {
     "obs": [
         "obs/train_fused/instrumented_run",
         "obs/serve_gateway/instrumented_run",
+        "obs/dynamics/probe_on_run",
     ],
 }
 REGRESSION_TOLERANCE = 1.25  # fresh > 1.25x baseline => fail
@@ -64,8 +65,10 @@ REGRESSION_TOLERANCE = 1.25  # fresh > 1.25x baseline => fail
 OBS_GATES = (
     ("train_overhead_frac", "overhead_budget_frac"),
     ("serve_overhead_frac", "overhead_budget_frac"),
+    ("probe_overhead_frac", "overhead_budget_frac"),
     ("train_wall_ratio", "wall_ratio_backstop"),
     ("serve_wall_ratio", "wall_ratio_backstop"),
+    ("probe_wall_ratio", "wall_ratio_backstop"),
 )
 
 
@@ -88,6 +91,17 @@ def check_obs_budget(payload: dict) -> int:
             violations += 1
         else:
             print(f"obs budget {key}={value:.5f} <= {budget} ok")
+    # the probe sanity row is a hard boolean: a probe that reports garbage
+    # numbers must fail the gate even if it is fast (DESIGN.md §12)
+    if summary.get("probe_stats_ok") is not True:
+        print(
+            f"OBS BUDGET VIOLATION probe_stats_ok="
+            f"{summary.get('probe_stats_ok')} (must be true)",
+            file=sys.stderr,
+        )
+        violations += 1
+    else:
+        print("obs budget probe_stats_ok=true ok")
     return violations
 
 

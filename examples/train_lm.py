@@ -10,6 +10,7 @@ driver; expect hours on 1 CPU core, minutes on a real accelerator).
 """
 import argparse
 import contextlib
+import json
 import time
 
 import jax
@@ -53,6 +54,14 @@ def main():
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a JSONL obs trace (DESIGN.md §11) and print "
                     "the per-span summary at the end")
+    ap.add_argument("--probe", action="store_true",
+                    help="record per-layer training-dynamics snapshots at "
+                    "evolution boundaries (DESIGN.md §12) and print the "
+                    "end-of-run health table + any anomaly alerts")
+    ap.add_argument("--timeline", default=None, metavar="PATH",
+                    help="with --probe: also persist the snapshot timeline "
+                    "as JSONL (render later with `python -m repro.obs "
+                    "report`)")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -85,6 +94,47 @@ def main():
                               args.batch, args.seq + 1)
     rng = np.random.default_rng(7)
     topo = model.topo_arrays()
+
+    monitor = None
+    timeline_sink = None
+    if args.probe:
+        import io
+
+        from repro.obs import detect, probes, timeline
+
+        monitor = detect.configure(detect.AnomalyMonitor())
+        # render_report wants the event stream; keep it in memory unless
+        # the user asked for a file too
+        timeline_sink = (
+            open(args.timeline, "w", encoding="utf-8") if args.timeline
+            else io.StringIO()
+        )
+        timeline.configure(timeline_sink, run_id=f"train_lm-{args.preset}",
+                           attrs={"preset": args.preset})
+
+        def record_probe(step, params, loss, churn=None):
+            """Host-side FFN weight stats per transformer slot — the block-
+            sparse win/wout values live in params; grads are not retained
+            across the jitted step, so this surface is value/churn only."""
+            layers = []
+            for si, slot in enumerate(sorted(model.topologies)):
+                ffn = params["stack"][slot]["ffn"]
+                st = {}
+                for name in ("win", "wout"):
+                    v = np.asarray(ffn[name]).ravel()
+                    s = probes.streamed_value_stats(v)
+                    st[name] = (s, v.size)
+                (a, na), (b, nb) = st["win"], st["wout"]
+                layers.append({
+                    "value_l2": float(np.sqrt(
+                        a["value_l2"] ** 2 + b["value_l2"] ** 2)),
+                    "value_zero_frac": (
+                        a["value_zero_frac"] * na + b["value_zero_frac"] * nb
+                    ) / max(1, na + nb),
+                })
+            probes.record_snapshot(step, "lm", layers=layers, churn=churn,
+                                   extra={"loss": float(loss)})
+
     trace_ctx = (
         obs.trace_to(args.trace, meta={"example": "train_lm",
                                        "preset": args.preset})
@@ -99,6 +149,7 @@ def main():
                 sp.block_on(loss)  # span close waits for the device result
             if (i + 1) % args.evolve_every == 0:
                 # SET evolution on every sparse FFN (host-side, Algorithm 2)
+                churn = {}
                 with obs.span("train.evolve", step=i + 1):
                     for slot, topos in model.topologies.items():
                         vals_in = np.asarray(
@@ -106,6 +157,7 @@ def main():
                         vals_out = np.asarray(
                             params["stack"][slot]["ffn"]["wout"])
                         new_in, new_out = [], []
+                        pruned = blocks = 0
                         for r, (t_in, t_out) in enumerate(topos):
                             res_i = evolve_block(
                                 t_in, vals_in[r], args.zeta, rng)
@@ -115,18 +167,43 @@ def main():
                                 res_i.topology, res_o.topology)
                             new_in.append(res_i.values)
                             new_out.append(res_o.values)
+                            pruned += res_i.n_pruned + res_o.n_pruned
+                            blocks += vals_in[r].shape[0] \
+                                + vals_out[r].shape[0]
                         params["stack"][slot]["ffn"]["win"] = jnp.asarray(
                             np.stack(new_in))
                         params["stack"][slot]["ffn"]["wout"] = jnp.asarray(
                             np.stack(new_out))
+                        churn[slot] = pruned / max(1, blocks)
                     topo = model.topo_arrays()
                 print(f"  [evolve] step {i+1}: SET prune/regrow done")
+                if monitor is not None:
+                    record_probe(
+                        i + 1, params, loss,
+                        churn=[churn[s] for s in sorted(churn)],
+                    )
             if i % 20 == 0 or i == args.steps - 1:
                 print(f"step {i:4d} loss={float(loss):.4f} "
                       f"({time.perf_counter()-t0:.1f}s)")
     ckpt.save(args.steps, params, meta={"preset": args.preset})
     ckpt.wait()
     print(f"checkpoint saved to {args.ckpt_dir}")
+    if monitor is not None:
+        from repro.obs import detect, timeline
+
+        record_probe(args.steps, params, loss)  # end-of-run snapshot
+        timeline.configure(None)
+        detect.configure(None)
+        if args.timeline:
+            timeline_sink.close()  # writer doesn't own handles it's given
+            events = timeline.read_timeline(args.timeline)
+        else:
+            events = [json.loads(line) for line
+                      in timeline_sink.getvalue().splitlines()]
+        print("\n== training-dynamics health (DESIGN.md §12) ==")
+        print(timeline.render_report(events))
+        if args.timeline:
+            print(f"timeline written to {args.timeline}")
     if args.trace:
         summary = obs.summarize_events(obs.read_events(args.trace))
         print(f"\ntrace written to {args.trace} "

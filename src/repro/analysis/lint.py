@@ -25,6 +25,11 @@ Rules (each finding carries a stable waiver id
   host-side *between* jitted calls: inside a trace it would either fail
   (side-effecting Python under jit) or silently run only at trace time —
   a span that never measures, a counter that bumps once per compile.
+  One carve-out (DESIGN.md §12): the *pure stat reductions* of
+  ``repro.obs.probes`` (``segment_probe``, ``value_l2``, ...) are
+  jit-legal by design — they are jnp-only functions composed into probe
+  program variants — and are allowlisted. The module's host-side halves
+  (``record_*``/``set_*`` names) stay hard failures inside a trace.
 
 Traced regions are detected syntactically: functions decorated with
 ``jax.jit`` (directly or through ``functools.partial``), functions passed
@@ -160,18 +165,29 @@ class _TracedRegionFinder(ast.NodeVisitor):
         self.generic_visit(node)
 
 
-def _obs_bindings(tree: ast.AST) -> Tuple[Set[str], Set[str]]:
-    """Names this module binds to ``repro.obs``: (module aliases, bare
-    function names). ``from repro import obs`` / ``import repro.obs as o``
-    populate the first; ``from repro.obs import span`` the second."""
+def _obs_bindings(
+    tree: ast.AST,
+) -> Tuple[Set[str], Set[str], Set[str], Dict[str, str]]:
+    """Names this module binds to ``repro.obs``: ``(module aliases, bare
+    function names, probes-module aliases, probe name -> original)``.
+    ``from repro import obs`` / ``import repro.obs as o`` populate the
+    first; ``from repro.obs import span`` the second. The probe sets track
+    bindings of ``repro.obs.probes`` specifically — its pure reductions
+    are jit-legal (DESIGN.md §12) while its ``record_*``/``set_*`` halves
+    are not, so the rule needs to tell a probes binding apart."""
     aliases: Set[str] = set()
     names: Set[str] = set()
+    probe_aliases: Set[str] = set()
+    probe_names: Dict[str, str] = {}
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
             for a in node.names:
                 if a.name == "repro.obs" or a.name.startswith("repro.obs."):
                     if a.asname:
-                        aliases.add(a.asname)
+                        if a.name == "repro.obs.probes":
+                            probe_aliases.add(a.asname)
+                        else:
+                            aliases.add(a.asname)
                     # un-aliased: calls spell repro.obs.* — matched by the
                     # dotted-prefix check in the rule itself
         elif isinstance(node, ast.ImportFrom):
@@ -180,10 +196,24 @@ def _obs_bindings(tree: ast.AST) -> Tuple[Set[str], Set[str]]:
                 for a in node.names:
                     if a.name == "obs":
                         aliases.add(a.asname or "obs")
-            elif mod == "repro.obs" or mod.startswith("repro.obs."):
+            elif mod == "repro.obs":
+                for a in node.names:
+                    if a.name == "probes":
+                        probe_aliases.add(a.asname or "probes")
+                    else:
+                        names.add(a.asname or a.name)
+            elif mod == "repro.obs.probes":
+                for a in node.names:
+                    probe_names[a.asname or a.name] = a.name
+            elif mod.startswith("repro.obs."):
                 for a in node.names:
                     names.add(a.asname or a.name)
-    return aliases, names
+    return aliases, names, probe_aliases, probe_names
+
+
+def _probe_host_side(name: str) -> bool:
+    """Probes-module names that must stay host-side (never jit-legal)."""
+    return name.startswith("record_") or name.startswith("set_")
 
 
 def _param_names(fn: ast.AST) -> Tuple[Set[str], Set[str]]:
@@ -224,6 +254,8 @@ class _RuleVisitor(ast.NodeVisitor):
         defs: Dict[str, ast.AST],
         obs_aliases: Set[str] = frozenset(),
         obs_names: Set[str] = frozenset(),
+        probe_aliases: Set[str] = frozenset(),
+        probe_names: Optional[Dict[str, str]] = None,
     ) -> None:
         self.path = path
         self.traced = traced
@@ -231,6 +263,8 @@ class _RuleVisitor(ast.NodeVisitor):
         self.defs = defs
         self.obs_aliases = set(obs_aliases)
         self.obs_names = set(obs_names)
+        self.probe_aliases = set(probe_aliases)
+        self.probe_names = dict(probe_names or {})
         self.findings: List[LintFinding] = []
         # stack of (fn node, traced param names) for enclosing traced regions
         self._stack: List[Tuple[ast.AST, Set[str]]] = []
@@ -347,17 +381,36 @@ class _RuleVisitor(ast.NodeVisitor):
         if self._in_traced():
             callee_full = _dotted(node.func)
             root = callee_full.split(".")[0]
-            if (
+            tail = callee_full.split(".")[-1]
+            # a binding of repro.obs.probes specifically? (alias attribute
+            # call, fully dotted, or a bare from-import of the module)
+            if "." not in callee_full and callee_full in self.probe_names:
+                probe_binding, probe_orig = True, self.probe_names[callee_full]
+            elif "." in callee_full and (
+                root in self.probe_aliases
+                or callee_full.startswith("repro.obs.probes.")
+            ):
+                probe_binding, probe_orig = True, tail
+            else:
+                probe_binding, probe_orig = False, tail
+            is_obs = (
                 root in self.obs_aliases
                 or callee_full.startswith("repro.obs.")
                 or ("." not in callee_full and callee_full in self.obs_names)
-            ):
-                self._emit(
-                    node, "obs-in-jit",
-                    f"{callee_full}() reachable inside a traced region — "
-                    "obs instrumentation must stay host-side between "
-                    "jitted calls (DESIGN.md §11)",
-                )
+                or probe_binding
+            )
+            if is_obs:
+                if probe_binding and not _probe_host_side(probe_orig):
+                    # allowlisted: pure jnp stat reduction composed into a
+                    # probe program variant (DESIGN.md §12)
+                    pass
+                else:
+                    self._emit(
+                        node, "obs-in-jit",
+                        f"{callee_full}() reachable inside a traced region — "
+                        "obs instrumentation must stay host-side between "
+                        "jitted calls (DESIGN.md §11)",
+                    )
         # host-sync inside traced regions
         if self._in_traced():
             callee = _dotted(node.func)
@@ -442,7 +495,7 @@ def lint_source(source: str, relpath: str) -> List[LintFinding]:
     tree = ast.parse(source, filename=relpath)
     finder = _TracedRegionFinder()
     finder.visit(tree)
-    obs_aliases, obs_names = _obs_bindings(tree)
+    obs_aliases, obs_names, probe_aliases, probe_names = _obs_bindings(tree)
     visitor = _RuleVisitor(
         path=relpath.replace(os.sep, "/"),
         traced=finder.traced,
@@ -450,6 +503,8 @@ def lint_source(source: str, relpath: str) -> List[LintFinding]:
         defs=finder._defs,
         obs_aliases=obs_aliases,
         obs_names=obs_names,
+        probe_aliases=probe_aliases,
+        probe_names=probe_names,
     )
     visitor.visit(tree)
     return visitor.findings

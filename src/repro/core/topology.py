@@ -518,7 +518,7 @@ def evolve_block_device(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("layer_dims", "zeta", "init_scheme")
+    jax.jit, static_argnames=("layer_dims", "zeta", "init_scheme", "probe")
 )
 def evolve_element_layers_device(
     topo_arrays,
@@ -529,6 +529,7 @@ def evolve_element_layers_device(
     layer_dims,
     zeta: float,
     init_scheme: str = "he_uniform",
+    probe: bool = False,
 ):
     """Device-resident SET evolution for a whole element-sparse MLP.
 
@@ -540,13 +541,18 @@ def evolve_element_layers_device(
     overhead dominated the whole step at small nnz). Returns
     ``(new_topo_arrays, new_values, new_velocity)`` with the dual-order
     views rebuilt on device — no host sync anywhere.
+
+    ``probe=True`` (static; default emits the identical pre-probe program)
+    additionally returns the per-layer pruned-link counts as a 4th output
+    ``(n_layers,)`` int32 — :func:`evolve_element_device` computes the
+    count anyway, so the churn-rate probe (DESIGN.md §12) is free.
     """
     n_layers = len(topo_arrays)
     keys = jax.random.split(key, n_layers)
-    new_topo, new_vals, new_vel = [], [], []
+    new_topo, new_vals, new_vel, n_pruned = [], [], [], []
     for l in range(n_layers):
         n_in, n_out = layer_dims[l], layer_dims[l + 1]
-        rows, cols, vals, mom, _ = evolve_element_device(
+        rows, cols, vals, mom, pruned = evolve_element_device(
             topo_arrays[l].rows, topo_arrays[l].cols, values[l], velocity[l],
             keys[l], in_dim=n_in, out_dim=n_out, zeta=zeta,
             init_scheme=init_scheme,
@@ -556,6 +562,12 @@ def evolve_element_layers_device(
         )
         new_vals.append(vals)
         new_vel.append(mom)
+        n_pruned.append(pruned)
+    if probe:
+        return (
+            tuple(new_topo), tuple(new_vals), tuple(new_vel),
+            jnp.stack(n_pruned),
+        )
     return tuple(new_topo), tuple(new_vals), tuple(new_vel)
 
 

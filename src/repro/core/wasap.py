@@ -64,12 +64,18 @@ from repro.data.loader import ShardedLoader
 from repro.data.synthetic import Dataset
 from repro.launch.mesh import make_worker_mesh
 from repro.launch.steps import make_mlp_step_core, scan_masked_segment
-from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.models.mlp import (
+    SparseMLP,
+    SparseMLPConfig,
+    cross_entropy_loss,
+    mlp_forward,
+)
 from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
 from repro.runtime import donation
 from repro.runtime.supervisor import retry_step
 from repro.train.trainer import evaluate, make_segment_fn, make_step_fn
 from repro import obs
+from repro.obs import probes
 
 __all__ = [
     "WASAPConfig",
@@ -98,6 +104,7 @@ class WASAPConfig:
     average_momentum: bool = True
     fused: bool = True           # one jitted call per epoch (False: seed loop)
     worker_axis: str = "vmap"    # vmap | shard_map
+    probe: bool = False          # training-dynamics probes (obs.probes, §12)
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +152,7 @@ def make_phase1_epoch_fn(
     mesh=None,
     weighted: bool = False,
     donate=None,
+    probe: bool = False,
 ):
     """Build the jitted phase-1 epoch: one device call scanning sync rounds.
 
@@ -176,6 +184,13 @@ def make_phase1_epoch_fn(
     ``donate`` overrides the central donation policy
     (``repro.runtime.donation``) — the contract auditor passes explicit
     argnums to force-build donated/undonated variants.
+
+    ``probe=True`` (static — the default build's traced program is exactly
+    the pre-probe program) appends a fourth output: the per-layer
+    training-dynamics stats of ``obs.probes.segment_probe``, computed on
+    the epoch's first batch (round 0, worker 0 — always a valid, unpadded
+    step) AFTER the sync-round scan. Stats stay on device; the trainer
+    records them host-side after its ``block_on`` (DESIGN.md §12).
     """
     if worker_axis not in ("vmap", "shard_map"):
         raise ValueError(f"worker_axis must be vmap|shard_map, got {worker_axis!r}")
@@ -232,7 +247,26 @@ def make_phase1_epoch_fn(
         (params, opt_state), loss_sums = jax.lax.scan(
             round_body, (params, opt_state), (idx, lrs, valid, keys)
         )
-        return params, opt_state, loss_sums
+        if not probe:
+            return params, opt_state, loss_sums
+        # post-scan probe on the epoch's first batch (round 0, worker 0 —
+        # always valid; padding only reaches tail rounds)
+        xb = jnp.take(x_all, idx[0, 0, 0], axis=0, mode="clip")
+        yb = jnp.take(y_all, idx[0, 0, 0], axis=0, mode="clip")
+
+        def probe_loss(p):
+            logits, preacts = mlp_forward(
+                p, topo, xb, config, train=False, return_preacts=True
+            )
+            return cross_entropy_loss(logits, yb), preacts
+
+        (_, preacts), grads = jax.value_and_grad(probe_loss, has_aux=True)(
+            params
+        )
+        stats = probes.segment_probe(
+            params, grads, topo, preacts, config.layer_dims
+        )
+        return params, opt_state, loss_sums, stats
 
     if not weighted:
         # keep the historical 9-arg signature (and its exact averaging
@@ -251,11 +285,12 @@ def make_phase1_epoch_fn(
         ]
         if weighted:
             in_specs.append(P())              # worker_w (K,) replicated
+        out_specs = (P(), P(), P(), P()) if probe else (P(), P(), P())
         fn = shard_map(
             program,
             mesh=mesh,
             in_specs=tuple(in_specs),
-            out_specs=(P(), P(), P()),
+            out_specs=out_specs,  # P() prefixes the probe-stats dict leaves
             check_rep=False,  # all_gather + mean makes every output replicated
         )
     return jax.jit(fn, donate_argnums=donation.donate_argnums(0, 1, override=donate))
@@ -398,8 +433,14 @@ class WASAPTrainer:
                 average_momentum=wc.average_momentum,
                 worker_axis=wc.worker_axis,
                 mesh=self._mesh,
+                probe=wc.probe,
             )
             self._segment = make_segment_fn(cfg, self.opt)
+            # phase-2 probe segment for worker 0 only (never pass an
+            # explicit False — the 2-arg call is the shared cache key)
+            self._probe_segment = (
+                make_segment_fn(cfg, self.opt, True) if wc.probe else None
+            )
         else:
             self._round = _make_worker_round(cfg, self.opt)
         self.loaders = [
@@ -433,6 +474,7 @@ class WASAPTrainer:
         self._p1_state = None           # (params, opt_state, topo) boundary
         self._p2_workers = None         # phase-2 replicas at a boundary
         self._epoch_fn_weighted = None  # built lazily when a monitor attaches
+        self._last_churn = None         # (n_pruned, nnz) from master evolve
 
     def _data_on_device(self):
         if self._device_data is None:
@@ -549,13 +591,20 @@ class WASAPTrainer:
                     elastic=weights is not None,
                 ) as sr_sp:
                     if self.step_retries:
-                        params, opt_state, loss_sums = retry_step(
+                        out = retry_step(
                             run_epoch,
                             retries=self.step_retries,
                             backoff_s=self.retry_backoff_s,
                         )
                     else:
-                        params, opt_state, loss_sums = run_epoch()
+                        out = run_epoch()
+                    # the elastic (weighted) program stays probe-off: its
+                    # epochs simply record no snapshot
+                    if wc.probe and weights is None:
+                        params, opt_state, loss_sums, probe_dev = out
+                    else:
+                        params, opt_state, loss_sums = out
+                        probe_dev = None
                     sr_sp.block_on(loss_sums)
                 gstep += steps
                 # master topology evolution on the averaged model; momentum
@@ -574,6 +623,23 @@ class WASAPTrainer:
                     model, self.data.x_test, self.data.y_test,
                     params=params, topo_arrays=topo,
                 )
+                # host-side recording after the block (§11 obs-in-jit)
+                if probe_dev is not None:
+                    churn = None
+                    if self._last_churn is not None:
+                        counts, nnz = self._last_churn
+                        churn = [
+                            float(c) / max(1, n)
+                            for c, n in zip(np.asarray(counts), nnz)
+                        ]
+                        self._last_churn = None
+                    probes.record_snapshot(
+                        gstep, "wasap", probe_dev, churn=churn,
+                        extra={
+                            "epoch": epoch, "phase": 1,
+                            "loss": train_loss, "acc": float(acc),
+                        },
+                    )
                 ep_sp.set(loss=train_loss, acc=float(acc))
                 self._log(epoch, 1, train_loss, dt, acc)
                 self._p1_state = (params, opt_state, topo)
@@ -672,6 +738,8 @@ class WASAPTrainer:
                 if self.fault_hook is not None:
                     self.fault_hook(epoch * steps_per_epoch)
                 losses = []
+                p2_probe = None       # worker 0's device probe stats
+                p2_churn = None       # worker 0's (n_pruned, nnz)
                 # one span over all K worker segments+evolutions: the calls
                 # are enqueued asynchronously across workers and blocked on
                 # once, so a per-worker span would serialize the device queue
@@ -686,19 +754,42 @@ class WASAPTrainer:
                             )
                         )
                         lrs = jnp.full((steps,), wc.lr, jnp.float32)
-                        w["params"], w["opt"], w["key"], ls = self._segment(
+                        # worker 0 carries the probes: one representative
+                        # replica is enough for phase-2 dynamics and keeps
+                        # the other K-1 programs byte-identical to probe-off
+                        probing = self._probe_segment is not None and wk == 0
+                        seg = self._probe_segment if probing else self._segment
+                        out = seg(
                             w["params"], w["opt"], w["topo"], x_all, y_all,
                             perm, lrs, w["key"],
                         )
+                        if probing:
+                            w["params"], w["opt"], w["key"], ls, p2_probe = out
+                        else:
+                            w["params"], w["opt"], w["key"], ls = out
                         losses.append(ls)
                         # per-worker evolution (divergent topologies)
                         w["key"], sub = jax.random.split(w["key"])
-                        w["topo"], vals, vel = evolve_element_layers_device(
-                            w["topo"], list(w["params"]["values"]),
-                            list(w["opt"].velocity["values"]), sub,
-                            layer_dims=cfg.layer_dims, zeta=wc.zeta,
-                            init_scheme=cfg.init,
-                        )
+                        if probing:
+                            w["topo"], vals, vel, pruned = (
+                                evolve_element_layers_device(
+                                    w["topo"], list(w["params"]["values"]),
+                                    list(w["opt"].velocity["values"]), sub,
+                                    layer_dims=cfg.layer_dims, zeta=wc.zeta,
+                                    init_scheme=cfg.init, probe=True,
+                                )
+                            )
+                            p2_churn = (
+                                pruned,
+                                [int(t.rows.shape[0]) for t in w["topo"]],
+                            )
+                        else:
+                            w["topo"], vals, vel = evolve_element_layers_device(
+                                w["topo"], list(w["params"]["values"]),
+                                list(w["opt"].velocity["values"]), sub,
+                                layer_dims=cfg.layer_dims, zeta=wc.zeta,
+                                init_scheme=cfg.init,
+                            )
                         w["params"] = {
                             "values": tuple(vals),
                             "biases": w["params"]["biases"],
@@ -708,6 +799,20 @@ class WASAPTrainer:
                 jax.block_until_ready([w["params"] for w in workers])
                 dt = time.perf_counter() - t0
                 loss = float(np.mean([np.asarray(l).mean() for l in losses]))
+                # host-side recording after the block (§11 obs-in-jit)
+                if p2_probe is not None:
+                    churn = None
+                    if p2_churn is not None:
+                        counts, nnz = p2_churn
+                        churn = [
+                            float(c) / max(1, n)
+                            for c, n in zip(np.asarray(counts), nnz)
+                        ]
+                    probes.record_snapshot(
+                        (epoch + 1) * steps_per_epoch, "wasap", p2_probe,
+                        churn=churn,
+                        extra={"epoch": epoch, "phase": 2, "loss": loss},
+                    )
                 ep_sp.set(loss=loss)
                 self._log(epoch, 2, loss, dt, float("nan"))
                 self._p2_workers = workers
@@ -1010,10 +1115,22 @@ class WASAPTrainer:
 
     def _evolve_master_device(self, topo, params, opt_state, key):
         cfg, wc = self.model.config, self.wc
-        topo, values, vel = evolve_element_layers_device(
-            topo, list(params["values"]), list(opt_state.velocity["values"]),
-            key, layer_dims=cfg.layer_dims, zeta=wc.zeta, init_scheme=cfg.init,
-        )
+        if wc.probe:
+            topo, values, vel, pruned = evolve_element_layers_device(
+                topo, list(params["values"]),
+                list(opt_state.velocity["values"]), key,
+                layer_dims=cfg.layer_dims, zeta=wc.zeta,
+                init_scheme=cfg.init, probe=True,
+            )
+            self._last_churn = (
+                pruned, [int(t.rows.shape[0]) for t in topo]
+            )
+        else:
+            topo, values, vel = evolve_element_layers_device(
+                topo, list(params["values"]),
+                list(opt_state.velocity["values"]), key,
+                layer_dims=cfg.layer_dims, zeta=wc.zeta, init_scheme=cfg.init,
+            )
         params = {"values": tuple(values), "biases": params["biases"]}
         return topo, params, replace_values_velocity(opt_state, vel)
 

@@ -165,14 +165,22 @@ def mlp_forward(
     train: bool = False,
     rng: Optional[jax.Array] = None,
     infer: bool = False,
-) -> jax.Array:
+    return_preacts: bool = False,
+):
     """Pure forward; returns logits.
 
     ``infer=True`` is the serving-engine entry: the element path goes through
     ``kops.espmm_infer`` — forward-only dispatch thresholds, no custom-VJP
-    wrapper traced — instead of the training-calibrated ``espmm``."""
+    wrapper traced — instead of the training-calibrated ``espmm``.
+
+    ``return_preacts=True`` (a static python flag — the default path's
+    trace is untouched) additionally returns the per-layer pre-activation
+    list ``(logits, [z_0, ..., z_{L-1}])`` for the training-dynamics
+    probes (``obs.probes``, DESIGN.md §12); the output layer's entry is
+    the logits themselves."""
     act = activation_fn(config.activation, alpha=config.alpha)
     h = x
+    preacts = []
     n_layers = config.n_layers
     for l in range(n_layers):
         vals = params["values"][l]
@@ -197,6 +205,8 @@ def mlp_forward(
             h = h @ (vals * topo_arrays[l]) + bias
         else:  # dense
             h = h @ vals + bias
+        if return_preacts:
+            preacts.append(h)
         if l < n_layers - 1:  # hidden layers only (paper: exclude output)
             h = act(h, l + 1)  # paper's 1-based layer parity
             if train and config.dropout > 0:
@@ -205,6 +215,8 @@ def mlp_forward(
                 keep = 1.0 - config.dropout
                 mask = jax.random.bernoulli(sub, keep, h.shape)
                 h = jnp.where(mask, h / keep, 0.0)
+    if return_preacts:
+        return h, preacts
     return h
 
 

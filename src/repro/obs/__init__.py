@@ -28,6 +28,12 @@ from repro.obs._state import (
     is_enabled,
     set_enabled,
 )
+from repro.obs.detect import (
+    Alert,
+    AnomalyMonitor,
+    DetectorThresholds,
+    health_block,
+)
 from repro.obs.export import (
     format_summary,
     prometheus_text,
@@ -48,6 +54,19 @@ from repro.obs.profiling import (
     profile_trace,
     record_compile_counts,
     sample_device_memory,
+)
+from repro.obs.probes import (
+    record_snapshot,
+    set_snapshot_transform,
+)
+from repro.obs.timeline import (
+    TIMELINE_SCHEMA_VERSION,
+    TimelineWriter,
+    read_timeline,
+    render_diff,
+    render_report,
+    timeline_to,
+    validate_timeline,
 )
 from repro.obs.trace import (
     SCHEMA_VERSION,
@@ -78,4 +97,9 @@ __all__ = [
     # export
     "prometheus_text", "read_events", "validate_events",
     "summarize_events", "format_summary",
+    # training-dynamics probes / timeline / anomaly detection (§12)
+    "record_snapshot", "set_snapshot_transform",
+    "TIMELINE_SCHEMA_VERSION", "TimelineWriter", "timeline_to",
+    "read_timeline", "validate_timeline", "render_report", "render_diff",
+    "AnomalyMonitor", "DetectorThresholds", "Alert", "health_block",
 ]

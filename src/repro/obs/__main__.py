@@ -1,10 +1,15 @@
-"""``python -m repro.obs`` — trace-file tooling.
+"""``python -m repro.obs`` — trace- and timeline-file tooling.
 
 * ``summarize <trace.jsonl>``: per-span count/total/self/percentile table
   (validates first; refuses malformed traces).
 * ``validate <trace.jsonl>``: schema-check every JSONL event, exit nonzero
   on any error — the CI obs-smoke job runs this on freshly captured
   train + serve traces.
+* ``report <timeline.jsonl>``: per-layer training-dynamics health tables
+  from a probe timeline (validates first); ``--validate-only`` schema-
+  checks and exits — the CI dynamics-smoke job runs both modes.
+* ``diff <timeline_a> <timeline_b>``: per-layer B/A stat ratios between
+  two runs' final snapshots, for regression triage.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import argparse
 import json
 import sys
 
-from repro.obs import export
+from repro.obs import export, timeline
 
 
 def main(argv=None) -> int:
@@ -27,7 +32,42 @@ def main(argv=None) -> int:
                        help="machine-readable output")
     p_val = sub.add_parser("validate", help="schema-check every event")
     p_val.add_argument("trace")
+    p_rep = sub.add_parser(
+        "report", help="per-layer health table from a probe timeline"
+    )
+    p_rep.add_argument("timeline")
+    p_rep.add_argument("--validate-only", action="store_true",
+                       help="schema-check the timeline and exit")
+    p_diff = sub.add_parser(
+        "diff", help="compare two probe timelines (B/A stat ratios)"
+    )
+    p_diff.add_argument("timeline_a")
+    p_diff.add_argument("timeline_b")
     args = ap.parse_args(argv)
+
+    if args.cmd == "report":
+        events = timeline.read_timeline(args.timeline)
+        errors = timeline.validate_timeline(events)
+        for e in errors:
+            print(f"INVALID: {e}", file=sys.stderr)
+        if args.validate_only:
+            print(f"{len(events)} event(s), {len(errors)} error(s) -> "
+                  + ("FAIL" if errors else "PASS"))
+            return 1 if errors else 0
+        if errors:
+            return 1
+        print(timeline.render_report(events))
+        return 0
+    if args.cmd == "diff":
+        ev_a = timeline.read_timeline(args.timeline_a)
+        ev_b = timeline.read_timeline(args.timeline_b)
+        bad = timeline.validate_timeline(ev_a) + timeline.validate_timeline(ev_b)
+        for e in bad:
+            print(f"INVALID: {e}", file=sys.stderr)
+        if bad:
+            return 1
+        print(timeline.render_diff(ev_a, ev_b))
+        return 0
 
     events = export.read_events(args.trace)
     errors = export.validate_events(events)

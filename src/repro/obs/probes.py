@@ -1,0 +1,382 @@
+"""On-device training-dynamics probes (DESIGN.md §12).
+
+PR 9's substrate observes the *machinery* (spans, queues, compile counts);
+this module observes the *model*: per-layer gradient and value norms,
+zero-fractions, AllReLU pre-activation saturation, in/out-degree
+histograms, prune/regrow churn, and neuron-importance quantiles — the
+distributional signals whose silent drift is how sparse training fails
+(dead layers, regrowth collapse, importance concentration).
+
+Two strictly separated halves:
+
+* **Jit-legal stat reductions** (everything above :func:`record_snapshot`)
+  — pure ``jnp`` functions over arrays already resident in a jitted
+  program. They are *composed into* the existing segment/round programs
+  behind a static ``probe=`` flag (``train.trainer.make_segment_program``,
+  ``core.wasap.make_phase1_epoch_fn``), adding O(n_layers) scalar outputs.
+  With ``probe=False`` the builders emit the exact pre-probe program —
+  byte-identical HLO, zero extra compiles (asserted in tests). The
+  ``analysis/lint.py`` ``obs-in-jit`` rule explicitly allowlists these
+  reductions inside traced regions; they allocate no host objects and
+  touch no global state.
+* **Host-side recording** (:func:`record_snapshot` and below) — converts a
+  device probe pytree to plain floats, writes it to the active
+  :mod:`repro.obs.timeline`, and feeds the :mod:`repro.obs.detect`
+  monitor. ``record_*`` must only run *between* jitted calls, after the
+  surrounding span's ``block_on`` (the §11 obs-in-jit rule keeps it a hard
+  lint failure inside traced regions).
+
+Stat taxonomy (per layer; keys are the timeline schema):
+
+====================  =====================================================
+``grad_l2``           L2 norm of the sparse-weight gradient (probe batch)
+``grad_zero_frac``    fraction of exactly-zero gradient entries
+``value_l2``          L2 norm of the live sparse weights
+``value_zero_frac``   fraction of exactly-zero live weights
+``saturation``        fraction of pre-activations <= 0 (AllReLU negative
+                      branch / ReLU dead zone; logit sign balance for the
+                      output layer)
+``imp_q10/q50/q90``   quantiles of the paper's neuron importance
+                      (sum_j |w_ij| per output neuron)
+``dead_out_frac``     output neurons with zero in-degree
+``dead_in_frac``      input neurons with zero out-degree
+``in_deg_hist``       log2-bucketed in-degree histogram (len = HIST_BINS)
+``out_deg_hist``      log2-bucketed out-degree histogram
+``churn_frac``        pruned links / nnz at the last evolution (host-merged
+                      by :func:`record_snapshot`, not computed here)
+====================  =====================================================
+
+Degree/importance stats need COO coordinates, so they are emitted for the
+``element`` impl only; block/masked/dense layers carry the value/grad/
+saturation subset.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import _state, detect, timeline
+
+__all__ = [
+    "IMPORTANCE_QS",
+    "HIST_BINS",
+    "value_l2",
+    "zero_fraction",
+    "saturation_fraction",
+    "grad_sq_norm_tree",
+    "importance_quantiles",
+    "degree_histogram",
+    "dead_fraction",
+    "layer_value_stats",
+    "segment_probe",
+    "padded_buffer_probe",
+    "probe_compile_counts",
+    "snapshot_layers",
+    "streamed_value_stats",
+    "streamed_importance_quantiles",
+    "record_snapshot",
+    "set_snapshot_transform",
+    "zero_layer_transform",
+    "scale_grads_transform",
+]
+
+IMPORTANCE_QS = (0.1, 0.5, 0.9)
+HIST_BINS = 8  # log2 degree buckets: [0], [1], [2-3], [4-7], ... [128+]
+
+
+# ---------------------------------------------------------------------------
+# jit-legal stat reductions (allowlisted by the obs-in-jit lint rule)
+# ---------------------------------------------------------------------------
+
+
+def value_l2(v: jax.Array) -> jax.Array:
+    """L2 norm, accumulated in f32 regardless of storage dtype."""
+    return jnp.sqrt(jnp.sum(jnp.square(v.astype(jnp.float32))))
+
+
+def zero_fraction(v: jax.Array) -> jax.Array:
+    """Fraction of exactly-zero entries (pruned-but-resident slots)."""
+    return jnp.mean((v == 0).astype(jnp.float32))
+
+
+def saturation_fraction(z: jax.Array) -> jax.Array:
+    """Fraction of pre-activations in the non-positive branch."""
+    return jnp.mean((z <= 0).astype(jnp.float32))
+
+
+def grad_sq_norm_tree(grads: Any) -> jax.Array:
+    """Total squared gradient norm over a pytree — the paper's Fig 5
+    gradient-flow statistic (first-order loss decrease)."""
+    leaves = jax.tree.leaves(grads)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def importance_quantiles(
+    values: jax.Array, cols: jax.Array, out_dim: int,
+    qs: Sequence[float] = IMPORTANCE_QS,
+) -> jax.Array:
+    """Quantiles of the paper's neuron importance: sum of |w| into each
+    output neuron (matches ``core.importance.neuron_importance_jnp``,
+    re-derived inline so this module stays import-light)."""
+    imp = jnp.zeros((out_dim,), jnp.float32).at[cols].add(
+        jnp.abs(values.astype(jnp.float32))
+    )
+    return jnp.quantile(imp, jnp.asarray(qs, jnp.float32))
+
+
+def degree_histogram(
+    idx: jax.Array, dim: int, bins: int = HIST_BINS
+) -> jax.Array:
+    """Log2-bucketed degree histogram over ``dim`` neurons: bucket 0 holds
+    degree-0 (dead) neurons, bucket b holds degrees in [2^(b-1), 2^b)."""
+    deg = jnp.zeros((dim,), jnp.int32).at[idx].add(1)
+    bucket = jnp.where(
+        deg == 0,
+        0,
+        1 + jnp.floor(jnp.log2(deg.astype(jnp.float32))).astype(jnp.int32),
+    )
+    bucket = jnp.clip(bucket, 0, bins - 1)
+    return jnp.zeros((bins,), jnp.int32).at[bucket].add(1)
+
+
+def dead_fraction(idx: jax.Array, dim: int) -> jax.Array:
+    """Fraction of ``dim`` neurons no link touches (degree zero)."""
+    deg = jnp.zeros((dim,), jnp.int32).at[idx].add(1)
+    return jnp.mean((deg == 0).astype(jnp.float32))
+
+
+def layer_value_stats(v: jax.Array) -> Dict[str, jax.Array]:
+    """The value-only stat subset, for paths without grads/topology."""
+    return {"value_l2": value_l2(v), "value_zero_frac": zero_fraction(v)}
+
+
+def segment_probe(
+    params: Dict[str, Any],
+    grads: Dict[str, Any],
+    topo_arrays: Sequence[Any],
+    preacts: Sequence[jax.Array],
+    layer_dims: Sequence[int],
+) -> Dict[str, jax.Array]:
+    """Composed per-layer probe, called INSIDE the ``probe=True`` variants
+    of the jitted segment/round programs. Returns a dict of stacked
+    ``(n_layers,)`` scalars (plus ``(n_layers, HIST_BINS)`` histograms for
+    the element impl) — O(n_layers) extra program outputs.
+    """
+    n_layers = len(layer_dims) - 1
+    element = all(
+        hasattr(t, "rows") and hasattr(t, "cols")
+        for t in topo_arrays if t is not None
+    ) and all(t is not None for t in topo_arrays)
+    out: Dict[str, List[jax.Array]] = {
+        "grad_l2": [], "grad_zero_frac": [],
+        "value_l2": [], "value_zero_frac": [], "saturation": [],
+    }
+    if element:
+        for k in ("imp_q10", "imp_q50", "imp_q90", "dead_out_frac",
+                  "dead_in_frac", "in_deg_hist", "out_deg_hist"):
+            out[k] = []
+    for l in range(n_layers):
+        v = params["values"][l]
+        g = grads["values"][l]
+        out["grad_l2"].append(value_l2(g))
+        out["grad_zero_frac"].append(zero_fraction(g))
+        out["value_l2"].append(value_l2(v))
+        out["value_zero_frac"].append(zero_fraction(v))
+        out["saturation"].append(saturation_fraction(preacts[l]))
+        if element:
+            rows, cols = topo_arrays[l].rows, topo_arrays[l].cols
+            in_dim, out_dim = layer_dims[l], layer_dims[l + 1]
+            q = importance_quantiles(v, cols, out_dim)
+            out["imp_q10"].append(q[0])
+            out["imp_q50"].append(q[1])
+            out["imp_q90"].append(q[2])
+            out["dead_out_frac"].append(dead_fraction(cols, out_dim))
+            out["dead_in_frac"].append(dead_fraction(rows, in_dim))
+            out["in_deg_hist"].append(degree_histogram(cols, out_dim))
+            out["out_deg_hist"].append(degree_histogram(rows, in_dim))
+    return {k: jnp.stack(vs) for k, vs in out.items()}
+
+
+@jax.jit
+def padded_buffer_probe(z: jax.Array, n_valid_rows: jax.Array):
+    """Stats over a ``(d_max, batch)`` padded XL buffer, masking the
+    padding rows. ``n_valid_rows`` is a traced scalar so one compile
+    serves every layer of a run (shapes are uniform at ``d_max``).
+    Returns ``(saturation, l2, zero_frac)`` over the valid region."""
+    valid = (
+        jnp.arange(z.shape[0])[:, None] < n_valid_rows
+    )
+    zf = z.astype(jnp.float32)
+    denom = (n_valid_rows * z.shape[1]).astype(jnp.float32)
+    sat = jnp.sum((zf <= 0) & valid) / denom
+    l2 = jnp.sqrt(jnp.sum(jnp.where(valid, jnp.square(zf), 0.0)))
+    zero = jnp.sum((zf == 0) & valid) / denom
+    return sat, l2, zero
+
+
+def probe_compile_counts() -> Dict[str, int]:
+    """Jit-cache sizes of this module's standalone jitted probes — the XL
+    compile surface pins these alongside ``xl.stream.compile_counts``."""
+    return {"obs_padded_buffer_probe": padded_buffer_probe._cache_size()}
+
+
+# ---------------------------------------------------------------------------
+# host-side numpy probes (XL shard streaming, LM example)
+# ---------------------------------------------------------------------------
+
+
+def streamed_value_stats(
+    values: np.ndarray, shard_rows: int = 1 << 20
+) -> Dict[str, float]:
+    """Host pass over a (possibly huge) value vector in bounded slices —
+    the XL path's values live host-side, so the O(capacity) working set
+    must never be materialized as a float64 temp all at once."""
+    sq = 0.0
+    zeros = 0
+    n = int(values.shape[0])
+    for lo in range(0, n, shard_rows):
+        v = np.asarray(values[lo:lo + shard_rows], dtype=np.float64)
+        sq += float(np.sum(v * v))
+        zeros += int(np.count_nonzero(v == 0))
+    return {
+        "value_l2": float(np.sqrt(sq)),
+        "value_zero_frac": zeros / max(1, n),
+    }
+
+
+def streamed_importance_quantiles(
+    values: np.ndarray, cols: np.ndarray, out_dim: int,
+    qs: Sequence[float] = IMPORTANCE_QS, shard_rows: int = 1 << 20,
+) -> Dict[str, float]:
+    """Shard-streamed neuron importance (|w| bincount by output column) +
+    quantiles, host-side for XL layers."""
+    imp = np.zeros((out_dim,), np.float64)
+    n = int(values.shape[0])
+    for lo in range(0, n, shard_rows):
+        v = np.abs(np.asarray(values[lo:lo + shard_rows], np.float64))
+        c = np.asarray(cols[lo:lo + shard_rows], np.int64)
+        imp += np.bincount(c, weights=v, minlength=out_dim)
+    q10, q50, q90 = (float(np.quantile(imp, q)) for q in qs)
+    return {"imp_q10": q10, "imp_q50": q50, "imp_q90": q90,
+            "dead_out_frac": float(np.mean(imp == 0))}
+
+
+# ---------------------------------------------------------------------------
+# host-side recording — NEVER inside a traced region (obs-in-jit)
+# ---------------------------------------------------------------------------
+
+
+_snapshot_transform: Optional[Callable[[str, int, List[dict]], List[dict]]] \
+    = None
+
+
+def set_snapshot_transform(
+    fn: Optional[Callable[[str, int, List[dict]], List[dict]]]
+) -> None:
+    """Install a host-side transform applied to every snapshot's layer
+    stats before recording — the CI pathology harness uses this to inject
+    dead layers / exploded gradients into an otherwise-healthy run without
+    touching the training math. ``fn(kind, step, layers) -> layers``;
+    ``None`` removes it."""
+    global _snapshot_transform
+    _snapshot_transform = fn
+
+
+def zero_layer_transform(layer: int = 0):
+    """Pathology: report layer ``layer`` as dead (zero value/grad mass)."""
+    def fn(kind, step, layers):
+        if 0 <= layer < len(layers):
+            st = dict(layers[layer])
+            for k in ("value_l2", "grad_l2", "imp_q10", "imp_q50", "imp_q90"):
+                if k in st:
+                    st[k] = 0.0
+            layers = list(layers)
+            layers[layer] = st
+        return layers
+    return fn
+
+
+def scale_grads_transform(factor: float = 1e6):
+    """Pathology: report every layer's gradient norm scaled by ``factor``
+    (a loss-scale blow-up / fp overflow signature)."""
+    def fn(kind, step, layers):
+        out = []
+        for st in layers:
+            st = dict(st)
+            if "grad_l2" in st:
+                st["grad_l2"] = float(st["grad_l2"]) * factor
+            out.append(st)
+        return out
+    return fn
+
+
+def snapshot_layers(probe: Dict[str, Any]) -> List[dict]:
+    """Convert a device probe dict (stacked ``(L,)`` / ``(L, bins)``
+    arrays) into a list of per-layer plain-python stat dicts."""
+    host = {k: np.asarray(v) for k, v in probe.items()}
+    n_layers = next(iter(host.values())).shape[0]
+    layers: List[dict] = []
+    for l in range(n_layers):
+        st: Dict[str, Any] = {}
+        for k, a in host.items():
+            if a.ndim == 1:
+                st[k] = float(a[l])
+            else:
+                st[k] = [int(x) for x in a[l]]
+        layers.append(st)
+    return layers
+
+
+def record_snapshot(
+    step: int,
+    kind: str,
+    probe: Optional[Dict[str, Any]] = None,
+    *,
+    layers: Optional[List[dict]] = None,
+    churn: Optional[Sequence[float]] = None,
+    extra: Optional[Dict[str, Any]] = None,
+) -> Optional[dict]:
+    """Record one training-dynamics snapshot, host-side.
+
+    Accepts either a device probe dict (converted via
+    :func:`snapshot_layers` — this is the one host sync, so call it only
+    after the surrounding span's ``block_on``) or pre-built ``layers``.
+    ``churn`` merges per-layer ``churn_frac`` values in. The snapshot is
+    written to the active timeline (if any), fed to the anomaly monitor
+    (if any), and any newly fired alerts are appended to the timeline.
+    Returns the snapshot dict, or ``None`` under ``obs.disabled()``.
+
+    Must never be called inside a traced region — the ``obs-in-jit`` lint
+    rule keeps ``record_*`` a hard failure there.
+    """
+    if not _state.is_enabled():
+        return None
+    if layers is None:
+        layers = snapshot_layers(probe) if probe is not None else []
+    else:
+        layers = [dict(st) for st in layers]
+    if churn is not None:
+        for st, c in zip(layers, churn):
+            st["churn_frac"] = float(c)
+    if _snapshot_transform is not None:
+        layers = _snapshot_transform(kind, int(step), layers)
+    snap = {
+        "step": int(step), "kind": str(kind), "layers": layers,
+        "extra": dict(extra) if extra else {},
+    }
+    _state.note_alloc()
+    writer = timeline.current()
+    if writer is not None:
+        writer.record(snap["step"], snap["kind"], layers, extra=snap["extra"])
+    monitor = detect.get_monitor()
+    if monitor is not None:
+        fired = monitor.observe(
+            snap["step"], snap["kind"], layers, extra=snap["extra"]
+        )
+        if writer is not None:
+            for alert in fired:
+                writer.alert(alert.to_dict())
+    return snap

@@ -53,6 +53,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.checkpoint.manager import CheckpointManager
 from repro import obs
+from repro.obs import detect
 
 __all__ = [
     "ElasticPlan",
@@ -244,31 +245,46 @@ class SupervisorConfig:
 def write_progress(path: Optional[str], gstep: int, epoch: int) -> None:
     """Atomic progress record — readable mid-kill.
 
-    One line: ``gstep epoch heartbeat last_span``. The first two fields keep
+    Line 1: ``gstep epoch heartbeat last_span``. The first two fields keep
     the historical contract (``faultinject.wait_and_kill`` reads
     ``split()[0]``); the heartbeat is a monotonic timestamp so an external
     watcher can tell "slow step" from "hung process" by its age, and
     ``last_span`` is the innermost open obs span (``-`` when tracing is off)
     so a post-mortem of a kill knows *where* the run was.
+
+    When an anomaly monitor is installed (``obs.detect.configure``), line 2
+    carries its health block as one JSON object —
+    ``{"latest_probe_snapshot", "active_alerts"}`` (DESIGN.md §12) — so the
+    watcher that already polls this file sees training-dynamics pathologies
+    (dead layer, gradient explosion, churn collapse) without touching the
+    timeline store. Watchers reading only line 1 are unaffected.
     """
     if path is None:
         return
     span = obs.current_span_name("-").replace(" ", "_")
+    body = f"{gstep} {epoch} {time.monotonic():.6f} {span}\n"
+    health = detect.health_block()
+    if health is not None:
+        body += json.dumps(health, default=float) + "\n"
     p = Path(path)
     tmp = p.with_suffix(p.suffix + ".tmp")
-    tmp.write_text(f"{gstep} {epoch} {time.monotonic():.6f} {span}\n")
+    tmp.write_text(body)
     os.replace(tmp, p)
 
 
 def read_progress(path: str) -> Dict:
-    """Parse :func:`write_progress` output (both the historical 2-field and
-    the current 4-field formats)."""
-    fields = Path(path).read_text().split()
+    """Parse :func:`write_progress` output (the historical 2-field line,
+    the 4-field line, and the optional line-2 health block)."""
+    lines = Path(path).read_text().splitlines()
+    fields = lines[0].split() if lines else []
     out: Dict = {"gstep": int(fields[0]), "epoch": int(fields[1])}
     if len(fields) >= 3:
         out["heartbeat"] = float(fields[2])
     if len(fields) >= 4:
         out["last_span"] = fields[3]
+    rest = "".join(lines[1:]).strip()
+    if rest:
+        out["health"] = json.loads(rest)
     return out
 
 
@@ -360,6 +376,7 @@ def _build_trainer(args):
     tc = TrainerConfig(
         epochs=args.epochs, batch_size=args.batch_size, evolve=True,
         seed=args.seed, fused_epochs=not args.per_batch,
+        probe=getattr(args, "probe", False),
     )
     return SequentialTrainer(SparseMLP(cfg, seed=args.seed), data, tc)
 
@@ -386,6 +403,24 @@ def main(argv=None) -> int:
         "--per-batch", action="store_true",
         help="per-batch stepping (fault hook fires every minibatch, so a "
         "kill lands genuinely mid-epoch)",
+    )
+    ap.add_argument(
+        "--probe", action="store_true",
+        help="enable training-dynamics probes + anomaly monitor; the "
+        "progress file gains the line-2 health block (DESIGN.md §12)",
+    )
+    ap.add_argument(
+        "--timeline", default=None,
+        help="with --probe: record probe snapshots to this JSONL timeline "
+        "(render with `python -m repro.obs report`)",
+    )
+    ap.add_argument(
+        "--probe-pathology", default=None,
+        choices=("dead_layer", "explode"),
+        help="with --probe: corrupt the probe stream on the way to the "
+        "detectors (layer-0 stats zeroed / grad norms scaled 1e6) — fault "
+        "injection for the anomaly-detection path, same spirit as "
+        "--kill-at-step for the recovery path",
     )
     ap.add_argument(
         "--kill-at-step", type=int, default=None,
@@ -417,21 +452,43 @@ def main(argv=None) -> int:
 
         trainer.fault_hook = fault_hook
 
-    result = run_supervised(
-        trainer,
-        SupervisorConfig(
-            checkpoint_dir=args.ckpt,
-            save_every_epochs=args.save_every_epochs,
-            progress_file=args.progress_file,
-        ),
-    )
+    import contextlib
+
+    monitor = None
+    with contextlib.ExitStack() as stack:
+        if args.probe:
+            from repro.obs import probes, timeline
+
+            monitor = detect.configure(detect.AnomalyMonitor())
+            stack.callback(detect.configure, None)
+            if args.probe_pathology is not None:
+                stack.callback(probes.set_snapshot_transform, None)
+                probes.set_snapshot_transform(
+                    probes.zero_layer_transform()
+                    if args.probe_pathology == "dead_layer"
+                    else probes.scale_grads_transform()
+                )
+            if args.timeline:
+                stack.enter_context(
+                    timeline.timeline_to(args.timeline, run_id="supervised")
+                )
+        result = run_supervised(
+            trainer,
+            SupervisorConfig(
+                checkpoint_dir=args.ckpt,
+                save_every_epochs=args.save_every_epochs,
+                progress_file=args.progress_file,
+            ),
+        )
     if args.out:
         payload = {
             "history": result["history"],
             "resumed_from_step": result["resumed_from_step"],
             "transients_raised": injector.raised if injector else 0,
         }
-        Path(args.out).write_text(json.dumps(payload))
+        if monitor is not None:
+            payload["health"] = monitor.health_block()
+        Path(args.out).write_text(json.dumps(payload, default=float))
     return 0
 
 

@@ -59,11 +59,17 @@ from repro.core.topology import (
 from repro.data.loader import ShardedLoader
 from repro.data.synthetic import Dataset
 from repro.launch.steps import make_mlp_step_core, make_mlp_train_step, scan_segment
-from repro.models.mlp import SparseMLP, SparseMLPConfig, mlp_forward
+from repro.models.mlp import (
+    SparseMLP,
+    SparseMLPConfig,
+    cross_entropy_loss,
+    mlp_forward,
+)
 from repro.optim.sgd import MomentumSGD, SGDState, replace_values_velocity
 from repro.runtime import donation
 from repro.runtime.supervisor import retry_step
 from repro import obs
+from repro.obs import probes
 
 __all__ = [
     "TrainerConfig",
@@ -91,6 +97,7 @@ class TrainerConfig:
     lr_schedule: Optional[Callable] = None
     fused_epochs: bool = True  # one scan-based device call per epoch
     device_evolution: bool = True  # jitted SET evolution between segments
+    probe: bool = False  # training-dynamics probes (obs.probes, §12)
 
 
 def make_step_fn(config: SparseMLPConfig, opt: MomentumSGD):
@@ -99,21 +106,56 @@ def make_step_fn(config: SparseMLPConfig, opt: MomentumSGD):
     return make_mlp_train_step(config, opt)
 
 
-def make_segment_program(config: SparseMLPConfig, opt: MomentumSGD):
+def make_segment_program(
+    config: SparseMLPConfig, opt: MomentumSGD, probe: bool = False
+):
     """The un-jitted epoch-segment program. Exposed separately so the
     contract auditor (DESIGN.md §10) can build fresh jitted variants —
     donated for the aliasing check, undonated for trace/compile probes —
-    without touching the lru-cached production jit below."""
+    without touching the lru-cached production jit below.
+
+    ``probe`` is a static python flag (DESIGN.md §12): ``False`` emits the
+    exact pre-probe program — the branch below is never traced, so the
+    compiled HLO is byte-identical to a build without this feature.
+    ``True`` appends ONE extra forward/backward on the segment's last
+    half-batch plus the O(n_layers) ``obs.probes.segment_probe``
+    reductions, and returns ``(..., losses, probe_stats)``.
+    """
 
     def segment(params, opt_state, topo_arrays, x_all, y_all, perm, lrs, key):
         step_core = make_mlp_step_core(config, opt, topo_arrays, x_all, y_all)
-        return scan_segment(step_core, params, opt_state, key, (perm, lrs))
+        out = scan_segment(step_core, params, opt_state, key, (perm, lrs))
+        if not probe:
+            return out
+        params2, opt_state2, key2, losses = out
+        # probe batch: half of the last minibatch — the stats want post-
+        # segment weights, and a half batch keeps the marginal cost of the
+        # extra fwd+bwd well under the 2% obs budget at ~any steps/epoch
+        n_probe = max(1, perm.shape[1] // 2)
+        xb = jnp.take(x_all, perm[-1, :n_probe], axis=0, mode="clip")
+        yb = jnp.take(y_all, perm[-1, :n_probe], axis=0, mode="clip")
+
+        def probe_loss(p):
+            logits, preacts = mlp_forward(
+                p, topo_arrays, xb, config, train=False, return_preacts=True
+            )
+            return cross_entropy_loss(logits, yb), preacts
+
+        (_, preacts), grads = jax.value_and_grad(probe_loss, has_aux=True)(
+            params2
+        )
+        stats = probes.segment_probe(
+            params2, grads, topo_arrays, preacts, config.layer_dims
+        )
+        return params2, opt_state2, key2, losses, stats
 
     return segment
 
 
 @functools.lru_cache(maxsize=32)
-def make_segment_fn(config: SparseMLPConfig, opt: MomentumSGD):
+def make_segment_fn(
+    config: SparseMLPConfig, opt: MomentumSGD, probe: bool = False
+):
     """Jitted multi-minibatch epoch segment.
 
     ``segment(params, opt_state, topo_arrays, x_all, y_all, perm, lrs, key)``
@@ -123,9 +165,14 @@ def make_segment_fn(config: SparseMLPConfig, opt: MomentumSGD):
     policy (``repro.runtime.donation``) so the optimizer state never leaves
     the device. Cached per (model config, optimizer) so repeated trainers
     share the jit cache.
+
+    Call with the default two arguments for the production program;
+    probe-enabled callers pass ``probe=True`` explicitly. (Never pass an
+    explicit ``False`` — it is a distinct lru_cache key and would compile
+    the default program twice.)
     """
     return jax.jit(
-        make_segment_program(config, opt),
+        make_segment_program(config, opt, probe),
         donate_argnums=donation.donate_argnums(0, 1),
     )
 
@@ -192,6 +239,13 @@ class SequentialTrainer:
         self.key = jax.random.PRNGKey(tc.seed)
         self._step = make_step_fn(model.config, self.opt)
         self._segment = make_segment_fn(model.config, self.opt)
+        # probe variant built only when asked for: with probe off this
+        # trainer holds exactly the pre-probe jit surface
+        self._probe_segment = (
+            make_segment_fn(model.config, self.opt, True) if tc.probe
+            else None
+        )
+        self._last_churn = None  # per-layer churn fracs from the last evolve
         self.history: Dict[str, List] = {
             "epoch": [], "train_loss": [], "test_acc": [], "n_params": [],
             "epoch_seconds": [],
@@ -285,25 +339,43 @@ class SequentialTrainer:
             # rebuilt on-device so the custom-VJP backward never sees a
             # stale permutation after connections move
             self.key, sub = jax.random.split(self.key)
-            new_topo, values, vel = evolve_element_layers_device(
-                topo, values, vel, sub,
-                layer_dims=cfg.layer_dims, zeta=tc.zeta, init_scheme=cfg.init,
-            )
+            if tc.probe:
+                new_topo, values, vel, pruned = evolve_element_layers_device(
+                    topo, values, vel, sub,
+                    layer_dims=cfg.layer_dims, zeta=tc.zeta,
+                    init_scheme=cfg.init, probe=True,
+                )
+                self._last_churn = (
+                    pruned, [int(t.rows.shape[0]) for t in new_topo]
+                )
+            else:
+                new_topo, values, vel = evolve_element_layers_device(
+                    topo, values, vel, sub,
+                    layer_dims=cfg.layer_dims, zeta=tc.zeta,
+                    init_scheme=cfg.init,
+                )
         else:
             new_topo = list(topo)
+            pruned_counts = []
             for l in range(cfg.n_layers):
                 self.key, sub = jax.random.split(self.key)
                 meta = BlockMeta(
                     cfg.layer_dims[l], cfg.layer_dims[l + 1],
                     cfg.block_m, cfg.block_n,
                 )
-                rows, cols, vals, mom, _ = evolve_block_device(
+                rows, cols, vals, mom, n_drop = evolve_block_device(
                     topo[l].rows, topo[l].cols, values[l], vel[l], sub,
                     meta=meta, zeta=tc.zeta,
                 )
                 new_topo[l] = block_device_arrays(rows, cols, meta=meta)
                 values[l] = vals
                 vel[l] = mom
+                pruned_counts.append(n_drop)
+            if tc.probe:
+                self._last_churn = (
+                    pruned_counts,
+                    [int(t.rows.shape[0]) for t in new_topo],
+                )
         params = {"values": tuple(values), "biases": params["biases"]}
         return tuple(new_topo), params, replace_values_velocity(opt_state, vel)
 
@@ -485,7 +557,11 @@ class SequentialTrainer:
                     # the segment itself is pure in its inputs
                     if self.fault_hook is not None:
                         self.fault_hook(gstep)
-                    return self._segment(
+                    seg = (
+                        self._probe_segment
+                        if self._probe_segment is not None else self._segment
+                    )
+                    return seg(
                         params, opt_state, topo, x_all, y_all, perm, lrs,
                         self.key
                     )
@@ -497,13 +573,18 @@ class SequentialTrainer:
                 # values below, before reading epoch_seconds)
                 with obs.span("train.segment", steps=steps) as seg_sp:
                     if self.step_retries:
-                        params, opt_state, self.key, losses = retry_step(
+                        out = retry_step(
                             run_segment,
                             retries=self.step_retries,
                             backoff_s=self.retry_backoff_s,
                         )
                     else:
-                        params, opt_state, self.key, losses = run_segment()
+                        out = run_segment()
+                    if tc.probe:
+                        params, opt_state, self.key, losses, probe_dev = out
+                    else:
+                        params, opt_state, self.key, losses = out
+                        probe_dev = None
                     seg_sp.block_on(losses)
                 gstep += steps
                 model.set_params(params)
@@ -548,6 +629,25 @@ class SequentialTrainer:
                     obs.point("train.eval", epoch=epoch, acc=float(acc))
                 else:
                     acc = float("nan")
+                if probe_dev is not None:
+                    # host-side, after the block above — the §11 obs-in-jit
+                    # rule: probe stats leave the device only here
+                    churn = None
+                    if self._last_churn is not None:
+                        counts, nnz = self._last_churn
+                        churn = [
+                            float(c) / max(1, n)
+                            for c, n in zip(np.asarray(counts), nnz)
+                        ]
+                        self._last_churn = None
+                    probes.record_snapshot(
+                        gstep, "train", probe_dev, churn=churn,
+                        extra={
+                            "epoch": epoch,
+                            "loss": float(np.asarray(losses).mean()),
+                            "n_params": model.n_params,
+                        },
+                    )
                 self.history["epoch"].append(epoch)
                 self.history["train_loss"].append(
                     float(np.asarray(losses).mean())
@@ -829,11 +929,13 @@ class XLTrainer:
                 with obs.span("train.epoch", epoch=epoch) as ep_sp:
                     t0 = time.perf_counter()
                     losses = []
+                    probe_batch = None
                     # one span over the epoch's streamed steps, not one per
                     # shard — StreamExecutor syncs internally, so there is no
                     # async device result to register here
                     with obs.span("train.segment", mode="xl"):
                         for xb, yb in loader.epoch(epoch):
+                            probe_batch = (xb, yb)
 
                             def do_step():
                                 # hook fires before the streamed step mutates
@@ -858,9 +960,25 @@ class XLTrainer:
                             else:
                                 losses.append(do_step())
                             gstep += 1
+                    evo_stats = None
                     if epoch < tc.epochs - 1 and tc.evolve:
-                        evolve_model_streamed(self.state, tc.zeta, self.rng)
+                        evo_stats = evolve_model_streamed(
+                            self.state, tc.zeta, self.rng
+                        )
                         obs.point("train.evolve", epoch=epoch, device=False)
+                    if tc.probe and probe_batch is not None:
+                        layer_stats = self.executor.probe_stats(*probe_batch)
+                        churn = None
+                        if evo_stats is not None:
+                            churn = [
+                                s["n_pruned"] / max(1, st.nnz)
+                                for s, st in zip(evo_stats, self.state.layers)
+                            ]
+                        probes.record_snapshot(
+                            gstep, "xl", layers=layer_stats, churn=churn,
+                            extra={"epoch": epoch,
+                                   "loss": float(np.mean(losses))},
+                        )
                     dt = time.perf_counter() - t0
                     if (epoch + 1) % tc.eval_every == 0 \
                             or epoch == tc.epochs - 1:

@@ -56,6 +56,7 @@ from repro.kernels.ops import (
 from repro.runtime import donation
 from repro.xl.planner import XLPlan
 from repro import obs
+from repro.obs import probes
 
 __all__ = [
     "XLLayerState",
@@ -644,6 +645,71 @@ class StreamExecutor:
                 dz = _act_bwd(dh, zs[l - 1], self._slopes[l - 1])
         self._note_bytes(n + 5)
         return float(loss)
+
+    # -- training-dynamics probe (obs.probes, DESIGN.md §12) -----------------
+
+    def probe_stats(self, xb: np.ndarray, yb: np.ndarray) -> List[dict]:
+        """Per-layer training-dynamics stats for one (full) batch.
+
+        Device side reuses the substrate's existing programs only — a
+        ``keep_preacts`` forward, ``_loss_and_dz`` and a dX/act-backward
+        walk — plus ``probes.padded_buffer_probe`` (one extra jitted
+        reduction per (d_max, B) shape, pinned via
+        ``probes.probe_compile_counts``). No whole-layer dW is ever
+        materialized, so ``grad_l2`` here is the *pre-activation* gradient
+        norm (the dz buffer), a parameter-gradient proxy. Value magnitude
+        and neuron-importance stats come from streamed host passes over the
+        pinned leaves (``probes.streamed_*`` — one shard-sized working set).
+
+        Returns a list of per-layer stat dicts ready for
+        ``probes.record_snapshot(..., layers=...)``.
+        """
+        st = self.state
+        n = st.n_layers
+        if xb.shape[0] != self.B:
+            raise ValueError(
+                f"probe_stats needs a full batch of {self.B} rows, got "
+                f"{xb.shape[0]} — padded batch columns would pollute the "
+                f"saturation/gradient reductions"
+            )
+        with obs.span("xl.probe", layers=n):
+            _, x_dev, zs = self.forward(xb, keep_preacts=True)
+            y_dev = jax.device_put(np.asarray(yb, np.int32))
+            _, dz = _loss_and_dz(zs[-1], y_dev, n_classes=st.layer_dims[-1])
+            dzs: List[jax.Array] = [None] * n
+            dzs[n - 1] = dz
+            for l in range(n - 1, 0, -1):
+                shards = self._device_shards(
+                    self._dx_host_shards(l), self._layer_resident(l)
+                )
+                dh = self._stream_matmul(l, dzs[l], shards)
+                dzs[l - 1] = _act_bwd(dh, zs[l - 1], self._slopes[l - 1])
+            dev = []
+            for l in range(n):
+                out_dim = st.layers[l].out_dim
+                sat, z_l2, _ = probes.padded_buffer_probe(zs[l], out_dim)
+                _, g_l2, g_zero = probes.padded_buffer_probe(dzs[l], out_dim)
+                dev.append((sat, z_l2, g_l2, g_zero))
+            jax.block_until_ready(dev)
+            self._note_bytes(2 * n + 3)
+        layers = []
+        for l in range(n):
+            layer = st.layers[l]
+            sat, z_l2, g_l2, g_zero = (float(np.asarray(a)) for a in dev[l])
+            row = {
+                "saturation": sat,
+                "preact_l2": z_l2,
+                "grad_l2": g_l2,
+                "grad_zero_frac": g_zero,
+            }
+            row.update(probes.streamed_value_stats(layer.values))
+            row.update(
+                probes.streamed_importance_quantiles(
+                    layer.values, layer.cols, layer.out_dim
+                )
+            )
+            layers.append(row)
+        return layers
 
 
 # ---------------------------------------------------------------------------

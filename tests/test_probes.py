@@ -1,0 +1,553 @@
+"""Training-dynamics observability (DESIGN.md §12): probe reductions vs
+numpy oracles, probe-off byte-identity of the compiled segment program,
+the timeline store round-trip (+ ``python -m repro.obs report|diff``),
+the anomaly detectors against seeded pathologies — and zero false
+positives on a healthy run — plus the lint carve-out that admits pure
+probe reductions inside jit while ``record_*``/``set_*`` stay hard
+failures.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.analysis import lint
+from repro.data import datasets
+from repro.models.mlp import SparseMLP, SparseMLPConfig
+from repro.obs import detect, probes, timeline
+from repro.optim.sgd import MomentumSGD
+from repro.train.trainer import (
+    SequentialTrainer,
+    TrainerConfig,
+    make_segment_program,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_global_probe_state():
+    """Every test starts and ends with no monitor, no timeline, no
+    snapshot transform — these are process-globals."""
+    probes.set_snapshot_transform(None)
+    detect.configure(None)
+    timeline.configure(None)
+    yield
+    probes.set_snapshot_transform(None)
+    detect.configure(None)
+    timeline.configure(None)
+
+
+# ---------------------------------------------------------------------------
+# stat reductions vs numpy oracles
+# ---------------------------------------------------------------------------
+
+
+def test_value_l2_and_zero_fraction_match_numpy():
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=257).astype(np.float32)
+    v[::5] = 0.0
+    assert float(probes.value_l2(jnp.asarray(v))) == pytest.approx(
+        float(np.sqrt(np.sum(np.square(v, dtype=np.float64)))), rel=1e-5
+    )
+    assert float(probes.zero_fraction(jnp.asarray(v))) == pytest.approx(
+        float(np.mean(v == 0))
+    )
+
+
+def test_saturation_and_grad_sq_norm_match_numpy():
+    rng = np.random.default_rng(1)
+    z = rng.normal(size=(33, 7)).astype(np.float32)
+    assert float(probes.saturation_fraction(jnp.asarray(z))) == pytest.approx(
+        float(np.mean(z <= 0))
+    )
+    tree = {"a": jnp.asarray(z), "b": (jnp.asarray(z[0]), jnp.asarray(z[1]))}
+    want = float(
+        np.sum(np.square(z, dtype=np.float64))
+        + np.sum(np.square(z[0], dtype=np.float64))
+        + np.sum(np.square(z[1], dtype=np.float64))
+    )
+    assert float(probes.grad_sq_norm_tree(tree)) == pytest.approx(
+        want, rel=1e-5
+    )
+
+
+def test_importance_quantiles_match_numpy():
+    rng = np.random.default_rng(2)
+    out_dim = 11
+    vals = rng.normal(size=64).astype(np.float32)
+    cols = rng.integers(0, out_dim, size=64)
+    got = np.asarray(probes.importance_quantiles(
+        jnp.asarray(vals), jnp.asarray(cols), out_dim
+    ))
+    imp = np.bincount(cols, weights=np.abs(vals), minlength=out_dim)
+    want = np.quantile(imp, probes.IMPORTANCE_QS)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_degree_histogram_and_dead_fraction_match_numpy():
+    dim = 20
+    # degrees: neuron 0 -> 0 links (dead), 1 -> 1, 2 -> 3, 3 -> 8
+    idx = np.array([1] + [2] * 3 + [3] * 8)
+    got = np.asarray(probes.degree_histogram(jnp.asarray(idx), dim))
+    deg = np.bincount(idx, minlength=dim)
+    want = np.zeros(probes.HIST_BINS, np.int64)
+    for d in deg:
+        b = 0 if d == 0 else min(
+            probes.HIST_BINS - 1, 1 + int(np.floor(np.log2(d)))
+        )
+        want[b] += 1
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == dim
+    assert float(probes.dead_fraction(jnp.asarray(idx), dim)) == pytest.approx(
+        float(np.mean(deg == 0))
+    )
+
+
+def test_streamed_stats_shard_invariant():
+    rng = np.random.default_rng(3)
+    vals = rng.normal(size=1000).astype(np.float32)
+    vals[::7] = 0.0
+    cols = rng.integers(0, 13, size=1000)
+    whole_v = probes.streamed_value_stats(vals, shard_rows=10**9)
+    shard_v = probes.streamed_value_stats(vals, shard_rows=17)
+    for k in whole_v:
+        assert shard_v[k] == pytest.approx(whole_v[k], rel=1e-9), k
+    whole_q = probes.streamed_importance_quantiles(vals, cols, 13,
+                                                   shard_rows=10**9)
+    shard_q = probes.streamed_importance_quantiles(vals, cols, 13,
+                                                   shard_rows=17)
+    for k in whole_q:
+        assert shard_q[k] == pytest.approx(whole_q[k], rel=1e-9), k
+
+
+def test_padded_buffer_probe_masks_padding_rows():
+    rng = np.random.default_rng(4)
+    z = rng.normal(size=(8, 4)).astype(np.float32)
+    z[1, :] = 0.0
+    z[6:, :] = 99.0  # padding garbage that must not leak into the stats
+    n_valid = 6
+    sat, l2, zero = probes.padded_buffer_probe(
+        jnp.asarray(z), jnp.asarray(n_valid)
+    )
+    live = z[:n_valid]
+    assert float(sat) == pytest.approx(float(np.mean(live <= 0)))
+    assert float(l2) == pytest.approx(
+        float(np.sqrt(np.sum(np.square(live, dtype=np.float64)))), rel=1e-5
+    )
+    assert float(zero) == pytest.approx(float(np.mean(live == 0)))
+
+
+def test_padded_buffer_probe_one_compile_across_valid_counts():
+    z = jnp.zeros((6, 3), jnp.float32)
+    probes.padded_buffer_probe(z, jnp.asarray(2))
+    size = probes.probe_compile_counts()["obs_padded_buffer_probe"]
+    probes.padded_buffer_probe(z, jnp.asarray(5))  # traced scalar: no retrace
+    assert probes.probe_compile_counts()["obs_padded_buffer_probe"] == size
+
+
+# ---------------------------------------------------------------------------
+# segment probe: values + probe-off byte-identity
+# ---------------------------------------------------------------------------
+
+
+def _tiny_segment_args(cfg, opt, seed=0, n=40, steps=4, batch=8):
+    model = SparseMLP(cfg, seed=seed)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, cfg.layer_dims[0])).astype(np.float32)
+    y = rng.integers(0, cfg.layer_dims[-1], size=n)
+    params = model.params()
+    return model, (
+        params, opt.init(params), model.topo_arrays(),
+        jnp.asarray(x), jnp.asarray(y),
+        jnp.arange(steps * batch, dtype=jnp.int32).reshape(steps, batch),
+        jnp.full((steps,), 0.01, jnp.float32),
+        jax.random.PRNGKey(seed),
+    )
+
+
+def test_segment_probe_stats_match_numpy_oracles():
+    cfg = SparseMLPConfig(layer_dims=(12, 16, 5), epsilon=4, impl="element")
+    opt = MomentumSGD()
+    model, args = _tiny_segment_args(cfg, opt)
+    out = jax.jit(make_segment_program(cfg, opt, probe=True))(*args)
+    params2, stats = out[0], out[4]
+    assert set(stats) >= {
+        "grad_l2", "value_l2", "value_zero_frac", "saturation",
+        "imp_q10", "imp_q50", "imp_q90", "dead_out_frac", "dead_in_frac",
+        "in_deg_hist", "out_deg_hist",
+    }
+    for l in range(cfg.n_layers):
+        v = np.asarray(params2["values"][l], np.float64)
+        assert float(stats["value_l2"][l]) == pytest.approx(
+            float(np.sqrt(np.sum(v * v))), rel=1e-4
+        )
+        assert float(stats["value_zero_frac"][l]) == pytest.approx(
+            float(np.mean(v == 0)), abs=1e-6
+        )
+        assert 0.0 <= float(stats["saturation"][l]) <= 1.0
+        assert np.isfinite(float(stats["grad_l2"][l]))
+        assert int(np.asarray(stats["in_deg_hist"][l]).sum()) \
+            == cfg.layer_dims[l + 1]
+        assert int(np.asarray(stats["out_deg_hist"][l]).sum()) \
+            == cfg.layer_dims[l]
+
+
+def test_probe_off_segment_is_byte_identical():
+    """``probe=False`` must lower to the exact program a build without the
+    probe feature would emit — the flag is resolved at trace time."""
+    cfg = SparseMLPConfig(layer_dims=(12, 16, 5), epsilon=4, impl="element")
+    opt = MomentumSGD()
+    _, args = _tiny_segment_args(cfg, opt)
+    default = jax.jit(make_segment_program(cfg, opt)).lower(*args).as_text()
+    off = jax.jit(
+        make_segment_program(cfg, opt, probe=False)
+    ).lower(*args).as_text()
+    on = jax.jit(
+        make_segment_program(cfg, opt, probe=True)
+    ).lower(*args).as_text()
+    assert default == off
+    assert on != off
+
+
+# ---------------------------------------------------------------------------
+# timeline store: round-trip, validation, CLI
+# ---------------------------------------------------------------------------
+
+
+def _fake_probe(n_layers=3, grad=1.0, seed=5):
+    rng = np.random.default_rng(seed)
+    return {
+        "grad_l2": jnp.full((n_layers,), grad, jnp.float32),
+        "value_l2": jnp.asarray(
+            rng.uniform(1, 5, n_layers).astype(np.float32)
+        ),
+        "value_zero_frac": jnp.zeros((n_layers,), jnp.float32),
+        "saturation": jnp.full((n_layers,), 0.4, jnp.float32),
+        "imp_q50": jnp.full((n_layers,), 2.0, jnp.float32),
+        "in_deg_hist": jnp.ones((n_layers, probes.HIST_BINS), jnp.int32),
+    }
+
+
+def test_timeline_roundtrip_and_validation(tmp_path):
+    path = tmp_path / "tl.jsonl"
+    with timeline.timeline_to(path, run_id="rt", attrs={"seed": 7}):
+        s0 = probes.record_snapshot(
+            0, "train", _fake_probe(), churn=[0.3, 0.2, 0.1],
+            extra={"epoch": 0},
+        )
+        probes.record_snapshot(10, "train", _fake_probe(grad=0.9))
+    assert s0["layers"][0]["churn_frac"] == pytest.approx(0.3)
+    events = timeline.read_timeline(path)
+    assert timeline.validate_timeline(events) == []
+    assert events[0]["ev"] == "meta"
+    assert events[0]["schema"] == timeline.TIMELINE_SCHEMA_VERSION
+    assert events[0]["attrs"] == {"seed": 7}
+    snaps = timeline.snapshots(events)
+    assert [s["step"] for s in snaps] == [0, 10]
+    assert snaps[0]["layers"][1]["churn_frac"] == pytest.approx(0.2)
+    # hists survive as int lists
+    assert snaps[0]["layers"][0]["in_deg_hist"] == [1] * probes.HIST_BINS
+    assert timeline.alerts(events) == []
+
+
+def test_timeline_validation_catches_corruption(tmp_path):
+    path = tmp_path / "tl.jsonl"
+    with timeline.timeline_to(path, run_id="rt"):
+        probes.record_snapshot(0, "train", _fake_probe())
+    lines = path.read_text().splitlines()
+    lines.append('{"ev":"snapshot","run_id":"OTHER","step":-3,"layers":1}')
+    lines.append("not json at all")
+    path.write_text("\n".join(lines) + "\n")
+    errors = timeline.validate_timeline(timeline.read_timeline(path))
+    text = "\n".join(errors)
+    assert "run_id" in text and "step" in text and "unparseable" in text
+
+
+def test_record_snapshot_disabled_writes_nothing(tmp_path):
+    path = tmp_path / "tl.jsonl"
+    with timeline.timeline_to(path, run_id="rt") as w:
+        before = w.events_written
+        with obs.disabled():
+            assert probes.record_snapshot(0, "train", _fake_probe()) is None
+        assert w.events_written == before
+
+
+def test_cli_report_and_diff(tmp_path):
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    with timeline.timeline_to(a, run_id="run-a"):
+        probes.record_snapshot(0, "train", _fake_probe(), extra={"loss": 2.0})
+        probes.record_snapshot(5, "train", _fake_probe(grad=0.8))
+    with timeline.timeline_to(b, run_id="run-b"):
+        probes.record_snapshot(5, "train", _fake_probe(grad=8.0))
+    rep = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "report", str(a)],
+        capture_output=True, text=True,
+    )
+    assert rep.returncode == 0, rep.stderr
+    assert "run-a" in rep.stdout and "grad_l2" in rep.stdout
+    assert "alerts: none" in rep.stdout
+    val = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "report", "--validate-only",
+         str(a)],
+        capture_output=True, text=True,
+    )
+    assert val.returncode == 0 and "PASS" in val.stdout
+    diff = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "diff", str(a), str(b)],
+        capture_output=True, text=True,
+    )
+    assert diff.returncode == 0, diff.stderr
+    assert "run-a" in diff.stdout and "run-b" in diff.stdout
+    assert "x10.00!" in diff.stdout  # grad 0.8 -> 8.0 flagged beyond 2x
+
+
+# ---------------------------------------------------------------------------
+# anomaly detectors: seeded pathologies, quiet period, stickiness
+# ---------------------------------------------------------------------------
+
+
+def _mon(**kw):
+    kw.setdefault("rss_fn", lambda: None)  # keep RSS out of unit tests
+    return detect.AnomalyMonitor(**kw)
+
+
+def _healthy_layers(n=3):
+    return [
+        {"grad_l2": 1.0, "value_l2": 5.0, "imp_q50": 2.0, "churn_frac": 0.3}
+        for _ in range(n)
+    ]
+
+
+def test_detector_quiet_period_suppresses_first_snapshot():
+    m = _mon()
+    layers = _healthy_layers()
+    layers[0]["value_l2"] = 0.0  # would be dead_layer after the quiet period
+    assert m.observe(0, "train", layers) == []
+    assert m.active == {}
+
+
+def test_detector_dead_layer_fires_on_the_right_layer():
+    m = _mon()
+    m.observe(0, "train", _healthy_layers())
+    layers = _healthy_layers()
+    layers[1]["value_l2"] = 0.0
+    fired = m.observe(1, "train", layers)
+    assert [(a.rule, a.layer) for a in fired] == [("dead_layer", 1)]
+
+
+def test_detector_vanishing_and_exploding_absolute():
+    m = _mon()
+    m.observe(0, "train", _healthy_layers())
+    layers = _healthy_layers()
+    layers[0]["grad_l2"] = 1e-8   # < vanish_grad_l2, > dead_grad_l2
+    layers[2]["grad_l2"] = 2e3    # > explode_grad_l2 absolute
+    rules = {(a.rule, a.layer) for a in m.observe(1, "train", layers)}
+    assert rules == {("vanishing_grads", 0), ("exploding_grads", 2)}
+
+
+def test_detector_exploding_ratio_vs_running_median():
+    m = _mon()
+    for step in range(3):
+        m.observe(step, "train", _healthy_layers())
+    layers = _healthy_layers()
+    layers[1]["grad_l2"] = 60.0  # < 1e3 absolute but > 50x median(1.0)
+    fired = m.observe(3, "train", layers)
+    assert [(a.rule, a.layer) for a in fired] == [("exploding_grads", 1)]
+    assert "running median" in fired[0].message
+
+
+def test_detector_churn_collapse_and_importance_drift():
+    m = _mon()
+    m.observe(0, "train", _healthy_layers())
+    layers = _healthy_layers()
+    layers[0]["churn_frac"] = 1e-4
+    layers[2]["imp_q50"] = 2.0 * 9  # > 8x first-seen baseline
+    rules = {(a.rule, a.layer) for a in m.observe(1, "train", layers)}
+    assert rules == {("churn_collapse", 0), ("importance_drift", 2)}
+
+
+def test_detector_rss_growth_needs_ratio_and_absolute():
+    rss = [256 << 20]
+    m = _mon(rss_fn=lambda: rss[0])
+    m.observe(0, "train", _healthy_layers())     # baseline = 256 MiB
+    rss[0] = 512 << 20  # 2x but under both thresholds together
+    assert m.observe(1, "train", _healthy_layers()) == []
+    rss[0] = 2048 << 20  # 8x and +1.75 GiB: both conditions hold
+    fired = m.observe(2, "train", _healthy_layers())
+    assert [a.rule for a in fired] == ["rss_growth"]
+    assert fired[0].layer is None
+
+
+def test_detector_alerts_sticky_until_cleared():
+    m = _mon()
+    m.observe(0, "train", _healthy_layers())
+    bad = _healthy_layers()
+    bad[0]["value_l2"] = 0.0
+    m.observe(1, "train", bad)
+    m.observe(2, "train", bad)  # same key: refires but doesn't duplicate
+    assert len(m.active_alerts) == 1
+    assert m.active_alerts[0]["step"] == 1  # first occurrence kept
+    block = m.health_block()
+    assert block["latest_probe_snapshot"]["step"] == 2
+    assert len(block["active_alerts"]) == 1
+    m.clear()
+    assert m.active_alerts == []
+
+
+def test_detector_healthy_stream_zero_false_positives():
+    rng = np.random.default_rng(6)
+    m = _mon()
+    for step in range(30):  # healthy drift: grads decay, importance grows
+        layers = []
+        for _ in range(3):
+            layers.append({
+                "grad_l2": float(1.0 * 0.95 ** step
+                                 * rng.uniform(0.7, 1.3)),
+                "value_l2": float(5.0 * rng.uniform(0.9, 1.1)),
+                "imp_q50": float(2.0 * (1 + 0.02 * step)),
+                "churn_frac": float(0.3 * 0.9 ** step + 0.02),
+            })
+        m.observe(step, "train", layers)
+    assert m.active_alerts == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: probed trainer run -> timeline + monitor
+# ---------------------------------------------------------------------------
+
+
+def test_probed_training_run_healthy_and_renders(tmp_path):
+    data = datasets.load("fashionmnist", scale=0.02, seed=0)
+    cfg = SparseMLPConfig(
+        layer_dims=(data.n_features, 24, 24, data.n_classes), epsilon=6,
+        impl="element",
+    )
+    tc = TrainerConfig(
+        epochs=3, batch_size=32, lr=0.01, zeta=0.3, seed=0, eval_every=3,
+        fused_epochs=True, device_evolution=True, probe=True,
+    )
+    path = tmp_path / "train.jsonl"
+    monitor = detect.configure(_mon())
+    try:
+        with timeline.timeline_to(path, run_id="e2e"):
+            SequentialTrainer(SparseMLP(cfg, seed=0), data, tc).run()
+    finally:
+        detect.configure(None)
+    events = timeline.read_timeline(path)
+    assert timeline.validate_timeline(events) == []
+    snaps = timeline.snapshots(events, "train")
+    assert len(snaps) == tc.epochs
+    # evolution runs on every epoch but the last -> churn recorded there
+    assert "churn_frac" in snaps[0]["layers"][0]
+    assert 0.0 < snaps[0]["layers"][0]["churn_frac"] <= 1.0
+    assert snaps[0]["extra"]["epoch"] == 0
+    # acceptance: a healthy short run fires nothing
+    assert timeline.alerts(events) == []
+    assert monitor.active_alerts == []
+    report = timeline.render_report(events)
+    assert "[train]" in report and "alerts: none" in report
+
+
+def test_seeded_pathology_caught_through_record_path(tmp_path):
+    path = tmp_path / "sick.jsonl"
+    detect.configure(_mon())
+    probes.set_snapshot_transform(probes.zero_layer_transform(layer=0))
+    try:
+        with timeline.timeline_to(path, run_id="sick"):
+            probes.record_snapshot(0, "train", _fake_probe())
+            probes.record_snapshot(1, "train", _fake_probe())
+    finally:
+        probes.set_snapshot_transform(None)
+        detect.configure(None)
+    events = timeline.read_timeline(path)
+    assert timeline.validate_timeline(events) == []
+    al = timeline.alerts(events)
+    assert [(a["rule"], a["layer"]) for a in al] == [("dead_layer", 0)]
+    # the transform corrupts what is *recorded* too, by design
+    assert timeline.snapshots(events)[1]["layers"][0]["value_l2"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# lint: probe reductions allowlisted in jit, host-side recording is not
+# ---------------------------------------------------------------------------
+
+
+def _rules(src, relpath="src/repro/models/thing.py"):
+    findings = lint.lint_source(textwrap.dedent(src), relpath)
+    return [f.rule for f in findings], findings
+
+
+def test_lint_probe_reduction_in_jit_allowlisted():
+    rules, _ = _rules(
+        """
+        import jax
+        from repro.obs import probes
+
+        @jax.jit
+        def f(params, grads, topo, preacts, dims):
+            return probes.segment_probe(params, grads, topo, preacts, dims)
+        """
+    )
+    assert rules == []
+
+
+def test_lint_probe_from_import_reduction_allowlisted():
+    rules, _ = _rules(
+        """
+        import jax
+        from repro.obs.probes import value_l2 as vl2
+
+        @jax.jit
+        def f(x):
+            return vl2(x)
+        """
+    )
+    assert rules == []
+
+
+def test_lint_probe_record_in_jit_still_flagged():
+    rules, findings = _rules(
+        """
+        import jax
+        from repro.obs import probes
+
+        @jax.jit
+        def f(x):
+            probes.record_snapshot(0, "train", {"grad_l2": x})
+            return x
+        """
+    )
+    assert rules == ["obs-in-jit"]
+    assert "record_snapshot" in findings[0].message
+
+
+def test_lint_probe_set_transform_in_jit_flagged_even_renamed():
+    rules, _ = _rules(
+        """
+        import jax
+        from repro.obs.probes import set_snapshot_transform as sst
+
+        @jax.jit
+        def f(x):
+            sst(None)
+            return x
+        """
+    )
+    assert rules == ["obs-in-jit"]
+
+
+def test_lint_probe_reduction_outside_jit_clean():
+    rules, _ = _rules(
+        """
+        from repro.obs import probes
+
+        def host(x):
+            return probes.record_snapshot(0, "t", {"grad_l2": x})
+        """
+    )
+    assert rules == []
